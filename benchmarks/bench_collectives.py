@@ -1,0 +1,68 @@
+"""Beyond-paper (paper §6 future work): multipath-striped collectives.
+
+Compares the bidirectional-ring all-gather/reduce-scatter against the
+single-direction baseline: wall-clock on the host mesh plus the structural
+metric that matters on the torus — bytes crossing the busiest directional
+link per step (halved by striping)."""
+
+from benchmarks.common import MiB, Row, timeit_us
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import (bidir_ring_all_gather,
+                                    bidir_ring_reduce_scatter)
+
+
+def _uni_ring_all_gather(x, axis_name):
+    n = jax.lax.axis_size(axis_name)
+    i = jax.lax.axis_index(axis_name)
+    cw = [(j, (j + 1) % n) for j in range(n)]
+    out = jnp.zeros((n,) + x.shape, x.dtype)
+    out = jax.lax.dynamic_update_slice_in_dim(out, x[None], i, axis=0)
+    cur = x
+    for step in range(1, n):
+        cur = jax.lax.ppermute(cur, axis_name, cw)
+        out = jax.lax.dynamic_update_slice(
+            out, cur[None], (jnp.mod(i - step, n),) + (0,) * x.ndim)
+    return out.reshape((n * x.shape[0],) + x.shape[1:])
+
+
+def run() -> list[Row]:
+    mesh = jax.sharding.Mesh(jax.devices(), ("dev",))
+    n = 8
+    rows = []
+    for mb in (1, 8):
+        nelems = mb * MiB // 4 // n
+        x = jnp.asarray(np.random.RandomState(0).randn(n * 8, nelems // 8),
+                        jnp.float32)
+
+        def run_ag(fn):
+            return jax.jit(jax.shard_map(
+                lambda v: fn(v, "dev"), mesh=mesh, in_specs=P("dev"),
+                out_specs=P(None), check_vma=False))
+
+        uni = run_ag(_uni_ring_all_gather)
+        bi = run_ag(bidir_ring_all_gather)
+        us_uni = timeit_us(uni, x)
+        us_bi = timeit_us(bi, x)
+        rows.append(Row(f"allgather/{mb}MiB/uni_ring", us_uni,
+                        "1link/step"))
+        rows.append(Row(f"allgather/{mb}MiB/bidir_ring", us_bi,
+                        "2links/step"))
+        # structural: per-step busiest-link bytes halve with striping
+        shard_bytes = x.nbytes // n
+        rows.append(Row(
+            f"allgather/{mb}MiB/busiest_link_bytes_per_step", 0.0,
+            f"uni={shard_bytes}B,bidir={shard_bytes // 2}B"))
+
+        rs = jax.jit(jax.shard_map(
+            lambda v: bidir_ring_reduce_scatter(v, "dev"), mesh=mesh,
+            in_specs=P(None), out_specs=P("dev"), check_vma=False))
+        xr = jnp.asarray(np.random.RandomState(1).randn(n * 8, nelems // 8),
+                         jnp.float32)
+        rows.append(Row(f"reducescatter/{mb}MiB/bidir_ring",
+                        timeit_us(rs, xr), "2links/step"))
+    return rows

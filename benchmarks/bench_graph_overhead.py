@@ -1,0 +1,51 @@
+"""Paper Fig. 13/14 — transfer-plan (CUDA Graph analogue) lifecycle costs.
+
+Measures the REAL trace / lower / compile(=instantiate) / launch times of
+compiled multipath plans as a function of copy-node count, first iteration
+vs steady state — the JAX counterpart of the paper's overhead analysis.
+"""
+
+from benchmarks.common import Row, timeit_us
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (MultiPathTransfer, PathPlanner, Topology,
+                        TransferPlanCache)
+
+
+def run() -> list[Row]:
+    topo = Topology.full_mesh(4, with_host=False)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("dev",))
+    rows = []
+    # node count grows with chunk count (paper: with message size)
+    for chunks in (1, 2, 4, 8, 16):
+        eng = MultiPathTransfer(
+            mesh,
+            topology=topo,
+            planner=PathPlanner(topo, multipath_threshold=64),
+            cache=TransferPlanCache(capacity=8))
+        nelems = 1 << 16
+        compiled, plan = eng.compiled_for(0, 1, nelems, max_paths=3,
+                                          num_chunks=chunks)
+        life = compiled.lifecycle
+        rows.append(Row(
+            f"plan_lifecycle/nodes{plan.num_nodes}/trace",
+            life.trace_ns / 1e3, "first_iter"))
+        rows.append(Row(
+            f"plan_lifecycle/nodes{plan.num_nodes}/lower",
+            life.lower_ns / 1e3, "first_iter"))
+        rows.append(Row(
+            f"plan_lifecycle/nodes{plan.num_nodes}/instantiate",
+            life.compile_ns / 1e3, "first_iter"))
+        x = jnp.zeros((1, 1, 4, nelems), jnp.float32)
+        launch_us = timeit_us(compiled.compiled, x, iters=10, warmup=3)
+        rows.append(Row(
+            f"plan_lifecycle/nodes{plan.num_nodes}/launch",
+            launch_us, "steady_state"))
+        total_first = life.build_ns / 1e3 + launch_us
+        rows.append(Row(
+            f"plan_lifecycle/nodes{plan.num_nodes}/amortize_breakeven",
+            0.0, f"{total_first / max(launch_us, 1e-9):.0f}launches"))
+    return rows

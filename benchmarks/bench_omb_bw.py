@@ -1,0 +1,30 @@
+"""Paper Fig. 7/8 — OMB unidirectional MPI bandwidth across window sizes
+(1/4/16) on the Beluga (2 NVLink/pair) and Narval (4 NVLink/pair) models."""
+
+from benchmarks.common import MiB, Row, SIZES_OMB
+
+from repro.core import PathPlanner, Topology, windowed_bandwidth_gbps
+
+CLUSTERS = {
+    "beluga": Topology.full_mesh(4, sublinks_per_pair=2, name="beluga4"),
+    "narval": Topology.full_mesh(4, sublinks_per_pair=4, name="narval4"),
+}
+
+
+def run() -> list[Row]:
+    rows = []
+    for cluster, topo in CLUSTERS.items():
+        planner = PathPlanner(topo)
+        for mb in SIZES_OMB:
+            plan3 = planner.plan(0, 1, mb * MiB, max_paths=3)
+            plan1 = planner.plan(0, 1, mb * MiB, max_paths=1)
+            for w in (1, 4, 16):
+                for tag, plan in (("1path", plan1), ("3path", plan3)):
+                    for graphs in (False, True):
+                        bw = windowed_bandwidth_gbps(
+                            plan, topo, window=w, compiled_plan=graphs)
+                        g = "graph" if graphs else "nograph"
+                        rows.append(Row(
+                            f"omb_bw/{cluster}/{mb}MiB/w{w}/{tag}/{g}",
+                            0.0, f"{bw:.1f}GB/s"))
+    return rows

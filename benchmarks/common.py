@@ -1,0 +1,36 @@
+"""Shared benchmark utilities. Import this FIRST in every bench module —
+it pins the CPU device count before jax initializes."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+MiB = 1 << 20
+
+SIZES_PUT = [1, 4, 16, 64, 128, 256, 512]          # MiB (paper Fig. 6)
+SIZES_OMB = [1, 4, 8, 16, 32, 64]                  # MiB (paper Fig. 7-10)
+EXEC_SIZES = [1, 4, 16]                            # MiB actually executed
+
+
+def timeit_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter_ns()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter_ns() - t0) / iters / 1e3
+
+
+class Row:
+    def __init__(self, name: str, us_per_call: float, derived: str):
+        self.name = name
+        self.us = us_per_call
+        self.derived = derived
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us:.2f},{self.derived}"

@@ -1,0 +1,29 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+
+* bench_put_bw         → paper Fig. 6   (UCX Put bandwidth)
+* bench_omb_bw         → paper Fig. 7/8 (OMB BW, windows 1/4/16)
+* bench_omb_bibw       → paper Fig. 9/10 (OMB bidirectional BW)
+* bench_jacobi         → paper Fig. 12  (Jacobi solver speedup)
+* bench_graph_overhead → paper Fig. 13/14 (plan lifecycle costs)
+* bench_collectives    → paper §6 future work (multipath collectives)
+"""
+
+from benchmarks import common  # noqa: F401 — pins device count first
+
+
+def main() -> None:
+    from benchmarks import (bench_collectives, bench_graph_overhead,
+                            bench_jacobi, bench_omb_bibw, bench_omb_bw,
+                            bench_put_bw)
+
+    print("name,us_per_call,derived")
+    for mod in (bench_put_bw, bench_omb_bw, bench_omb_bibw, bench_jacobi,
+                bench_graph_overhead, bench_collectives):
+        for row in mod.run():
+            print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

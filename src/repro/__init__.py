@@ -1,0 +1,8 @@
+"""repro — multi-path accelerator transfer framework (JAX/TPU).
+
+Reproduction + TPU adaptation of "Accelerating Intra-Node GPU-to-GPU
+Communication Through Multi-Path Transfers with CUDA Graphs" (CS.DC 2026).
+See DESIGN.md for the system map.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager, latest_checkpoint, list_checkpoints,
+    restore_checkpoint, save_checkpoint)

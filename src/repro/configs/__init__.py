@@ -1,0 +1,3 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS, ArchConfig, REGISTRY, get_config, load_all, register)
+from repro.configs.shapes import SHAPES, ShapeConfig, cells, skip_reason  # noqa: F401

@@ -1,0 +1,23 @@
+"""Core multi-path transfer engine — the paper's primary contribution.
+
+Layering (mirrors the paper's Fig. 3):
+
+* :mod:`repro.core.topology`   — Base Module: link graph / hardware probe
+* :mod:`repro.core.paths`      — Multi-Path Communication Handler + tuner
+* :mod:`repro.core.pipelining` — 2-D Pipelining Engine + analytic time model
+* :mod:`repro.core.plan_cache` — CUDA-Graph-cache analogue (LRU, lifecycle)
+* :mod:`repro.core.multipath`  — executable transfer engine (shard_map)
+* :mod:`repro.core.collectives`— beyond-paper multipath collectives
+* :mod:`repro.core.halo`       — Jacobi halo exchange application layer
+"""
+
+from repro.core.topology import HOST, Link, Route, Topology  # noqa: F401
+from repro.core.paths import PathAssignment, PathPlanner, TransferPlan  # noqa: F401
+from repro.core.pipelining import (  # noqa: F401
+    ChunkTask, build_schedule, effective_bandwidth_gbps,
+    estimate_transfer_time_s, launch_overhead_ns, validate_plan,
+    windowed_bandwidth_gbps)
+from repro.core.plan_cache import (  # noqa: F401
+    CompiledPlan, PlanLifecycle, TransferPlanCache, compile_plan)
+from repro.core.multipath import (  # noqa: F401
+    MultiPathTransfer, TransferKey, multipath_send_local, plan_signature)

@@ -1,0 +1,96 @@
+"""Multi-path halo exchange — the paper's Jacobi application (§5.4, Fig. 11).
+
+A 1-D ring decomposition (the paper uses 4 ranks, each exchanging boundary
+columns with its two neighbours). With single-path communication only the
+±1 ring links carry traffic and the "diagonal" links sit idle (Fig. 11a).
+The multipath mode splits each boundary in half and stages the second half
+through the diagonal device (Fig. 11b), engaging the otherwise-idle links.
+
+Contention note (paper §5.4): on Beluga each GPU pair has *two* NVLink
+sublinks, which is what makes the staged hop-2 contention-free with the
+opposite-direction direct sends; our aggregated-link topology models this as
+shared doubled bandwidth rather than strict link exclusivity (DESIGN.md §7.3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _shift_perm(n: int, shift: int):
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def halo_exchange_ring(left_bnd: jax.Array, right_bnd: jax.Array,
+                       axis_name: str, *, multipath: bool = False,
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Exchange boundaries with ring neighbours along ``axis_name``.
+
+    ``left_bnd``/``right_bnd`` are this shard's own boundary slices. Returns
+    ``(left_halo, right_halo)``: the right boundary of the left neighbour and
+    the left boundary of the right neighbour.
+
+    ``multipath=True`` splits each boundary into two stripes: the first goes
+    over the direct ±1 link, the second stages through the device two hops
+    around the ring (the idle diagonal on a 4-device node).
+    """
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return right_bnd, left_bnd
+
+    if not multipath or n < 3:
+        left_halo = lax.ppermute(right_bnd, axis_name, _shift_perm(n, 1))
+        right_halo = lax.ppermute(left_bnd, axis_name, _shift_perm(n, -1))
+        return left_halo, right_halo
+
+    def split(b):
+        h = b.shape[-1] // 2
+        if h == 0:
+            return b, b[..., :0]
+        return b[..., :h], b[..., h:]
+
+    # to the RIGHT neighbour: my right boundary becomes their left halo.
+    r0, r1 = split(right_bnd)
+    right_direct = lax.ppermute(r0, axis_name, _shift_perm(n, 1))
+    staged = lax.ppermute(r1, axis_name, _shift_perm(n, 2))      # hop-1: diag
+    right_staged = lax.ppermute(staged, axis_name, _shift_perm(n, -1))  # hop-2
+    left_halo = jnp.concatenate([right_direct, right_staged], axis=-1)
+
+    # to the LEFT neighbour: my left boundary becomes their right halo.
+    l0, l1 = split(left_bnd)
+    left_direct = lax.ppermute(l0, axis_name, _shift_perm(n, -1))
+    staged = lax.ppermute(l1, axis_name, _shift_perm(n, -2))     # hop-1: diag
+    left_staged = lax.ppermute(staged, axis_name, _shift_perm(n, 1))   # hop-2
+    right_halo = jnp.concatenate([left_direct, left_staged], axis=-1)
+    return left_halo, right_halo
+
+
+def jacobi_step(u: jax.Array, axis_name: str, *, multipath: bool = False,
+                use_kernel: bool = False) -> jax.Array:
+    """One Jacobi sweep on a column-partitioned 2-D domain.
+
+    ``u`` is the local block ``(rows, cols)`` of a domain decomposed along
+    columns across the ring. Boundary columns are exchanged (optionally
+    multi-path), then the 5-point stencil averages the four neighbours with
+    zero (Dirichlet) conditions at the global domain edge — matching the
+    NVIDIA multi-GPU Jacobi reference the paper benchmarks.
+    """
+    left_halo, right_halo = halo_exchange_ring(
+        u[:, :1], u[:, -1:], axis_name, multipath=multipath)
+
+    n = lax.axis_size(axis_name)
+    i = lax.axis_index(axis_name)
+    # global edge → Dirichlet zeros
+    left_halo = jnp.where(i == 0, jnp.zeros_like(left_halo), left_halo)
+    right_halo = jnp.where(i == n - 1, jnp.zeros_like(right_halo), right_halo)
+
+    ext = jnp.concatenate([left_halo, u, right_halo], axis=1)
+    if use_kernel:
+        from repro.kernels.jacobi import ops as jacobi_ops
+        return jacobi_ops.jacobi_sweep(ext)
+    up = jnp.pad(ext[:-1, :], ((1, 0), (0, 0)))
+    down = jnp.pad(ext[1:, :], ((0, 1), (0, 0)))
+    out = 0.25 * (ext[:, :-2] + ext[:, 2:] + up[:, 1:-1] + down[:, 1:-1])
+    return out

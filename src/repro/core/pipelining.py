@@ -1,0 +1,203 @@
+"""2-D pipelining engine: chunk schedules + the analytic pipeline-time model.
+
+The engine performs the paper's two splits (§4.3):
+
+* **horizontal** — the message is partitioned across the selected paths
+  (done by the :class:`~repro.core.paths.PathPlanner`, shares ∝ bandwidth),
+* **vertical** — each path's share is split into chunks that flow through the
+  path's hops in a pipelined fashion (hop-2 of chunk *i* overlaps hop-1 of
+  chunk *i+1*).
+
+Because this repo's execution substrate is XLA (no wall-clock TPU), the
+module also provides the calibrated analytic time model used by the offline
+tuner and the bandwidth benchmarks. The model captures exactly the effects
+the paper measures:
+
+* pipelined staged hops (fill + steady-state),
+* per-directional-link exclusivity (§4.5) and host-node capacity contention
+  (reproduces the paper's "host path hurts BIBW" finding),
+* per-copy-node launch overhead vs amortized compiled-plan (CUDA Graph)
+  launch overhead, including the first-iteration construction costs
+  (paper Fig. 13/14).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Iterable, Sequence
+
+from repro.core.paths import TransferPlan
+from repro.core.topology import HOST, Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkTask:
+    """One chunk flowing along one route — ``num_hops`` copy nodes."""
+
+    path_idx: int
+    chunk_idx: int
+    offset: int
+    nbytes: int
+    hops: tuple[tuple[int, int], ...]  # directional links, in order
+
+
+# -- launch-overhead calibration (model constants; the lifecycle benchmark
+# measures their JAX analogues empirically) ---------------------------------
+LAUNCH_NS_PER_NODE = 6_000          # one async-copy launch (no graphs)
+GRAPH_LAUNCH_BASE_NS = 7_000        # cudaGraphLaunch fixed cost analogue
+GRAPH_LAUNCH_PER_NODE_NS = 300      # marginal per-node launch cost in a graph
+GRAPH_INSTANTIATE_BASE_NS = 90_000  # one-time instantiation (first iter)
+GRAPH_INSTANTIATE_PER_NODE_NS = 85_000
+SYNC_NS_PER_PATH = 2_000            # event record + stream-wait per path
+
+
+def build_schedule(plan: TransferPlan) -> list[ChunkTask]:
+    """Flatten a plan into chunk tasks, round-robin across paths.
+
+    The paper distributes chunks across paths one-by-one (Alg. 1 note); the
+    round-robin order is the dispatch order — data dependencies (hop order
+    within a chunk, §4.5) are carried in each task's ``hops``.
+    """
+    per_path: list[list[ChunkTask]] = []
+    for p_idx, pa in enumerate(plan.paths):
+        tasks = [
+            ChunkTask(p_idx, c_idx, off, size, pa.route.directional_links())
+            for c_idx, (off, size) in enumerate(pa.chunk_bounds())
+        ]
+        per_path.append(tasks)
+    schedule: list[ChunkTask] = []
+    for wave in range(max((len(t) for t in per_path), default=0)):
+        for tasks in per_path:
+            if wave < len(tasks):
+                schedule.append(tasks[wave])
+    return schedule
+
+
+def validate_plan(plan: TransferPlan) -> None:
+    """Assert the §4.5 integrity invariants. Raises ``ValueError`` on breach.
+
+    1. chunk byte ranges are disjoint and exactly cover ``[0, nbytes)``,
+    2. no two paths share a directional link (contention avoidance),
+    3. every staged route's hops are connected (src → via → dst).
+    """
+    intervals: list[tuple[int, int]] = []
+    seen_links: set[tuple[int, int]] = set()
+    for pa in plan.paths:
+        links = pa.route.directional_links()
+        for link in links:
+            if link in seen_links:
+                raise ValueError(f"directional link {link} shared by paths")
+            seen_links.add(link)
+        if links[0][0] != plan.src or links[-1][1] != plan.dst:
+            raise ValueError(f"route endpoints wrong: {links}")
+        for (a, b), (c, d) in zip(links, links[1:]):
+            if b != c:
+                raise ValueError(f"disconnected hops {links}")
+        intervals.extend(pa.chunk_bounds())
+    intervals.sort()
+    pos = 0
+    for off, size in intervals:
+        if off != pos:
+            raise ValueError(f"gap/overlap at byte {pos} (chunk at {off})")
+        if size <= 0:
+            raise ValueError("empty chunk")
+        pos = off + size
+    if pos != plan.nbytes:
+        raise ValueError(f"coverage ends at {pos}, message is {plan.nbytes}")
+
+
+def launch_overhead_ns(plan: TransferPlan, *, compiled_plan: bool,
+                       first_iteration: bool = False) -> float:
+    """CPU-side overhead for dispatching the plan once (paper §5.5)."""
+    n = plan.num_nodes
+    if not compiled_plan:
+        return (n * LAUNCH_NS_PER_NODE
+                + len(plan.paths) * SYNC_NS_PER_PATH)
+    cost = GRAPH_LAUNCH_BASE_NS + n * GRAPH_LAUNCH_PER_NODE_NS
+    if first_iteration:
+        cost += GRAPH_INSTANTIATE_BASE_NS + n * GRAPH_INSTANTIATE_PER_NODE_NS
+    return float(cost)
+
+
+def _link_times_s(plan: TransferPlan, topo: Topology,
+                  contention: dict[tuple[int, int], int],
+                  host_flows: int) -> list[list[float]]:
+    """Per-path list of per-hop chunk-times (seconds, steady-state chunk)."""
+    out = []
+    for pa in plan.paths:
+        nchunks = max(1, pa.num_chunks)
+        chunk_bytes = pa.nbytes / nchunks
+        hop_times = []
+        for link in pa.route.hops:
+            bw = link.bandwidth_gbps * 1e9
+            share = max(1, contention.get((link.src, link.dst), 1))
+            # Host-node capacity: concurrent flows staging through the host
+            # split its aggregate copy bandwidth (paper §5.3 obs. 6).
+            if HOST in (link.src, link.dst) and host_flows > 1:
+                share = max(share, host_flows)
+            hop_times.append(chunk_bytes / (bw / share))
+        out.append(hop_times)
+    return out
+
+
+def estimate_transfer_time_s(
+        plan: TransferPlan, topo: Topology, *,
+        compiled_plan: bool = True,
+        first_iteration: bool = False,
+        concurrent_plans: Sequence[TransferPlan] = ()) -> float:
+    """Analytic end-to-end time for one message under the pipeline model.
+
+    ``concurrent_plans`` are other transfers in flight at the same time
+    (e.g. the reverse direction of a bidirectional test): any directional
+    link they share with ``plan`` is time-shared, and host-staged flows
+    contend on host capacity.
+    """
+    contention: dict[tuple[int, int], int] = defaultdict(lambda: 0)
+    host_flows = 0
+    for p in (plan, *concurrent_plans):
+        for pa in p.paths:
+            for link in pa.route.directional_links():
+                contention[link] += 1
+            if pa.route.via == HOST:
+                host_flows += 1
+
+    per_path = _link_times_s(plan, topo, dict(contention), host_flows)
+    path_times = []
+    for pa, hop_times in zip(plan.paths, per_path):
+        n = max(1, pa.num_chunks)
+        fill = sum(hop_times)                 # first chunk traverses all hops
+        steady = (n - 1) * max(hop_times)     # pipeline bottleneck stage
+        path_times.append(fill + steady)
+    wire = max(path_times) if path_times else 0.0
+    return wire + launch_overhead_ns(
+        plan, compiled_plan=compiled_plan,
+        first_iteration=first_iteration) / 1e9
+
+
+def effective_bandwidth_gbps(plan: TransferPlan, topo: Topology, *,
+                             compiled_plan: bool = True,
+                             concurrent_plans: Sequence[TransferPlan] = (),
+                             ) -> float:
+    t = estimate_transfer_time_s(plan, topo, compiled_plan=compiled_plan,
+                                 concurrent_plans=concurrent_plans)
+    return plan.nbytes / t / 1e9
+
+
+def windowed_bandwidth_gbps(plan: TransferPlan, topo: Topology, *,
+                            window: int, compiled_plan: bool = True) -> float:
+    """OMB-style windowed bandwidth: ``window`` back-to-back messages.
+
+    Launch overheads of messages 2..W overlap the wire time of earlier
+    messages (the paper's window-size effect, §5.3 obs. 3): with compiled
+    plans the CPU can run ahead, so per-message cost approaches pure wire
+    time; without, per-node launches serialize on the CPU.
+    """
+    wire = estimate_transfer_time_s(plan, topo, compiled_plan=True)
+    wire -= launch_overhead_ns(plan, compiled_plan=True) / 1e9  # pure wire
+    launch = launch_overhead_ns(plan, compiled_plan=compiled_plan) / 1e9
+    # CPU dispatch pipeline: total = first launch + max(wire, launch)*(W-1)
+    # + wire of the last message's tail.
+    total = launch + window * wire if launch <= wire else (
+        window * launch + wire)
+    return plan.nbytes * window / total / 1e9

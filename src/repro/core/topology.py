@@ -1,0 +1,166 @@
+"""Hardware topology model: devices, links, and multi-path route enumeration.
+
+This is the TPU/JAX adaptation of the paper's Base Module (DESIGN.md §2/§3):
+it probes the "hardware" (here: a declarative link model for a TPU ICI torus
+or a Beluga/Narval-like NVLink full-mesh) and exposes the link graph that the
+:class:`~repro.core.paths.PathPlanner` enumerates routes over.
+
+Bandwidths are unidirectional per directional link, GB/s. The paper's hardware
+constants (2 NVLink sublinks/pair on Beluga, 4 on Narval, PCIe host links) and
+the TPU v5e constants (4 ICI links/chip, ~50 GB/s/link/direction) are both
+representable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, Mapping
+
+HOST = -1  # sentinel device id for the host (PCIe-staged) node
+
+#: TPU v5e calibration constants (per chip) used by the roofline model too.
+ICI_LINK_GBPS = 50.0
+HBM_GBPS = 819.0
+PEAK_BF16_TFLOPS = 197.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """A directional link ``src -> dst`` with unidirectional bandwidth."""
+
+    src: int
+    dst: int
+    kind: str  # "ici" | "nvlink" | "pcie"
+    bandwidth_gbps: float
+
+    def __post_init__(self) -> None:
+        if self.bandwidth_gbps <= 0:
+            raise ValueError(f"non-positive bandwidth on {self}")
+        if self.src == self.dst:
+            raise ValueError(f"self-link {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """A path from ``src`` to ``dst``: one hop (direct) or two (staged).
+
+    ``via`` is the staging device (or :data:`HOST`); ``None`` means direct.
+    ``bottleneck_gbps`` is the min link bandwidth along the route — the
+    paper's per-path ``share[p]`` is proportional to it (§4.4).
+    """
+
+    src: int
+    dst: int
+    via: int | None
+    hops: tuple[Link, ...]
+    bottleneck_gbps: float
+
+    @property
+    def kind(self) -> str:
+        if self.via is None:
+            return "direct"
+        return "staged_host" if self.via == HOST else "staged_device"
+
+    @property
+    def num_hops(self) -> int:
+        return len(self.hops)
+
+    def directional_links(self) -> tuple[tuple[int, int], ...]:
+        return tuple((h.src, h.dst) for h in self.hops)
+
+
+class Topology:
+    """Directed link graph over ``num_devices`` accelerators (+ host)."""
+
+    def __init__(self, num_devices: int, links: Iterable[Link],
+                 name: str = "custom",
+                 grid_shape: tuple[int, ...] | None = None):
+        self.num_devices = int(num_devices)
+        self.name = name
+        self.grid_shape = grid_shape
+        self._links: dict[tuple[int, int], Link] = {}
+        for link in links:
+            key = (link.src, link.dst)
+            if key in self._links:
+                # Multiple sublinks between a pair (e.g. 2 NVLinks on Beluga)
+                # aggregate into one logical link with summed bandwidth.
+                old = self._links[key]
+                link = Link(link.src, link.dst, old.kind,
+                            old.bandwidth_gbps + link.bandwidth_gbps)
+            self._links[key] = link
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def links(self) -> Mapping[tuple[int, int], Link]:
+        return self._links
+
+    def link(self, src: int, dst: int) -> Link | None:
+        return self._links.get((src, dst))
+
+    def has_link(self, src: int, dst: int) -> bool:
+        return (src, dst) in self._links
+
+    def neighbors(self, dev: int) -> list[int]:
+        return sorted({d for (s, d) in self._links if s == dev})
+
+    def devices(self) -> list[int]:
+        return list(range(self.num_devices))
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def full_mesh(cls, num_devices: int = 4, sublinks_per_pair: int = 2,
+                  sublink_gbps: float = 25.0, host_gbps: float = 12.0,
+                  with_host: bool = True, name: str = "beluga4") -> "Topology":
+        """Beluga-like node: ``num_devices`` GPUs, NVLink full mesh + PCIe host.
+
+        Beluga: 4×V100, 2 NVLink sublinks/pair (~25 GB/s each).
+        Narval: 4×A100, pass ``sublinks_per_pair=4`` (name="narval4").
+        """
+        links = []
+        for a, b in itertools.permutations(range(num_devices), 2):
+            for _ in range(sublinks_per_pair):
+                links.append(Link(a, b, "nvlink", sublink_gbps))
+        if with_host:
+            for d in range(num_devices):
+                links.append(Link(d, HOST, "pcie", host_gbps))
+                links.append(Link(HOST, d, "pcie", host_gbps))
+        return cls(num_devices, links, name=name,
+                   grid_shape=(num_devices,))
+
+    @classmethod
+    def torus2d(cls, nx: int, ny: int, link_gbps: float = ICI_LINK_GBPS,
+                name: str | None = None) -> "Topology":
+        """TPU-style 2-D torus: every chip has ±x, ±y ICI links (wraparound).
+
+        For degenerate axes (size 2) the wraparound link is folded into the
+        single neighbour link (doubled bandwidth), matching real ICI cabling.
+        """
+        links: list[Link] = []
+
+        def dev(x: int, y: int) -> int:
+            return (x % nx) * ny + (y % ny)
+
+        for x in range(nx):
+            for y in range(ny):
+                s = dev(x, y)
+                nbrs = []
+                if nx > 1:
+                    nbrs += [dev(x + 1, y), dev(x - 1, y)]
+                if ny > 1:
+                    nbrs += [dev(x, y + 1), dev(x, y - 1)]
+                for n in nbrs:
+                    if n != s:
+                        links.append(Link(s, n, "ici", link_gbps))
+        return cls(nx * ny, links, name=name or f"torus{nx}x{ny}",
+                   grid_shape=(nx, ny))
+
+    def coords(self, dev: int) -> tuple[int, ...]:
+        if self.grid_shape is None or len(self.grid_shape) != 2:
+            return (dev,)
+        ny = self.grid_shape[1]
+        return (dev // ny, dev % ny)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"Topology(name={self.name!r}, devices={self.num_devices}, "
+                f"links={len(self._links)})")

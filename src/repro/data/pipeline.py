@@ -1,0 +1,102 @@
+"""Synthetic, deterministic, shardable data pipeline.
+
+Produces LM batches (tokens/labels/mask) or audio-frontend batches
+(features/labels) with content that is a pure function of ``(seed, step)`` —
+so a restarted/elastically-rescaled job replays the exact stream from its
+checkpointed step (the fault-tolerance tests rely on this bit-for-bit
+determinism). A background prefetch thread keeps ``prefetch`` batches ahead
+of the training loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # synthetic LM task: token t+1 = (a*t + b) mod vocab on easy positions,
+    # noise elsewhere — learnable but non-trivial.
+    noise_prob: float = 0.2
+
+
+class SyntheticDataset:
+    """Deterministic synthetic stream for an architecture."""
+
+    def __init__(self, cfg: ArchConfig, data: DataConfig):
+        self.cfg = cfg
+        self.data = data
+
+    def batch_at(self, step: int) -> dict:
+        """Pure function of (seed, step) → numpy batch."""
+        d, c = self.data, self.cfg
+        rng = np.random.RandomState((d.seed * 1_000_003 + step) % 2**31)
+        b, s = d.global_batch, d.seq_len
+        if c.frontend == "audio":
+            feats = rng.randn(b, s, c.frontend_dim).astype(np.float32)
+            labels = rng.randint(0, c.vocab_size, (b, s)).astype(np.int32)
+            return {"features": feats, "labels": labels,
+                    "mask": np.ones((b, s), np.float32)}
+        vocab = c.vocab_size
+        a = rng.randint(1, min(vocab, 641))
+        start = rng.randint(0, vocab, (b, 1))
+        seq = (start + a * np.arange(s + 1)[None, :]) % vocab
+        noise = rng.rand(b, s + 1) < d.noise_prob
+        seq = np.where(noise, rng.randint(0, vocab, (b, s + 1)), seq)
+        return {"tokens": seq[:, :-1].astype(np.int32),
+                "labels": seq[:, 1:].astype(np.int32),
+                "mask": np.ones((b, s), np.float32)}
+
+    def iter_batches(self, start_step: int = 0) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class PrefetchLoader:
+    """Background-thread prefetcher with device placement."""
+
+    def __init__(self, dataset: SyntheticDataset, sharding=None,
+                 start_step: int = 0, prefetch: int = 2):
+        self.dataset = dataset
+        self.sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.dataset.batch_at(step)
+            if self.sharding is not None:
+                batch = {k: jax.device_put(v, self.sharding[k])
+                         for k, v in batch.items()}
+            try:
+                self._q.put((step, batch), timeout=1.0)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()

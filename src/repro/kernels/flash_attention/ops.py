@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the flash attention kernel.
+
+On CPU the kernel runs in interpret mode; ``flash_attention`` transparently
+falls back to the reference for head dims the kernel does not tile well
+(d not a multiple of 8) so model code can call it unconditionally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = _is_cpu()
+    return flash_attention_kernel(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA + causal + window)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None) -> jax.Array:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D). fp32 softmax, q.dtype out."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    qpk = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    kk = jnp.repeat(k, qpk, axis=1)
+    vv = jnp.repeat(v, qpk, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    row = jnp.arange(s)[:, None]
+    col = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= col <= row
+    if window is not None:
+        mask &= col > row - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.any(mask, -1)[None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the Jacobi sweep kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.jacobi.kernel import jacobi_sweep_kernel
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def jacobi_sweep(ext: jax.Array, *, tile: int = 512,
+                 interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = _is_cpu()
+    return jacobi_sweep_kernel(ext, tile=tile, interpret=interpret)

@@ -1,0 +1,30 @@
+"""Jit'd wrapper for the bidirectional ring all-gather kernel."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.kernels.ring_allgather.kernel import build_ring_allgather
+
+AXIS = "dev"
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def ring_allgather(x: jax.Array, mesh: jax.sharding.Mesh, *,
+                   interpret: bool | None = None) -> jax.Array:
+    """x: (N*rows, f) sharded over 'dev' → fully gathered (N*rows, f) on
+    every device (replicated)."""
+    if interpret is None:
+        interpret = _is_cpu()
+    n = mesh.devices.size
+    rows = x.shape[0] // n
+    inner = build_ring_allgather((rows, x.shape[1]), x.dtype, n,
+                                 axis_name=AXIS, interpret=interpret)
+    fn = jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=P(AXIS),
+                               out_specs=P(None), check_vma=False))
+    x = jax.device_put(x, NamedSharding(mesh, P(AXIS)))
+    return fn(x)

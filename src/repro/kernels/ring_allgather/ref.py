@@ -1,0 +1,10 @@
+"""Oracle for the ring all-gather kernel: lax.all_gather(tiled)."""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+
+def ring_allgather_ref(x_local: jax.Array, axis_name: str) -> jax.Array:
+    return lax.all_gather(x_local, axis_name, tiled=True)

@@ -1,0 +1,33 @@
+"""Jit'd wrapper for the RWKV-6 chunked scan kernel (pads seq to chunk)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, *, chunk: int = 64,
+               interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = _is_cpu()
+    bh, s, _ = r.shape
+    chunk = min(chunk, max(8, s))
+    pad = (-s) % chunk
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)),
+                    constant_values=1.0)  # identity decay on padding
+    out = rwkv6_scan_kernel(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return out[:, :s, :]

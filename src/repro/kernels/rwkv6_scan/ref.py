@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the RWKV-6 scan kernel: literal per-step recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rwkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                   u: jax.Array) -> jax.Array:
+    """r/k/w: (BH, S, dk); v: (BH, S, dv); u: (BH, dk) -> (BH, S, dv)."""
+    rf, kf, vf, wf, uf = (x.astype(jnp.float32) for x in (r, k, v, w, u))
+
+    def head(r_h, k_h, v_h, w_h, u_h):
+        dk, dv = r_h.shape[-1], v_h.shape[-1]
+
+        def step(s, inputs):
+            r_t, k_t, v_t, w_t = inputs
+            kv = jnp.outer(k_t, v_t)
+            o_t = r_t @ (s + u_h[:, None] * kv)
+            s_new = w_t[:, None] * s + kv
+            return s_new, o_t
+
+        _, o = lax.scan(step, jnp.zeros((dk, dv), jnp.float32),
+                        (r_h, k_h, v_h, w_h))
+        return o
+
+    out = jax.vmap(head)(rf, kf, vf, wf, uf)
+    return out.astype(r.dtype)

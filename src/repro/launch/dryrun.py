@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.
+
+For every non-skipped cell this driver:
+
+1. builds ``input_specs`` (ShapeDtypeStruct + shardings, no allocation),
+2. ``jax.jit(step).lower(...).compile()`` on the 16×16 single-pod mesh AND
+   the 2×16×16 multi-pod mesh — the full-depth compile is the pass/fail
+   artifact and supplies ``memory_analysis()`` (buffer assignment is
+   while-loop-aware, so it is the fits-on-chip proof),
+3. derives roofline FLOPs/bytes/collective-bytes by **loop extrapolation**:
+   XLA's ``cost_analysis()`` counts a ``while`` body once regardless of trip
+   count, so scanned-layer models would be undercounted ×L. We compile L=0
+   and L=1 probes of the same cell and extrapolate
+   ``total = cost(L0) + Σ_bodies n_i · (cost(L1ᵢ) − cost(L0))`` — gemma3's
+   local/global stack uses two body probes (n_local=52, n_global=10),
+4. appends the row to ``experiments/dryrun_results.json``.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch a] [--shape s]
+        [--mesh single|multi|both] [--out f.json] [--skip-existing]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+
+def _cost_tuple(compiled, default_group):
+    from repro.launch import roofline
+    cost = compiled.cost_analysis()
+    stats = roofline.collective_bytes(compiled.as_text(), default_group)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            stats.total_wire_bytes,
+            stats.by_op)
+
+
+def _merge_by_op(base, body, n):
+    out = {k: dict(v) for k, v in base.items()}
+    for k, v in body.items():
+        d = out.setdefault(k, {"count": 0, "wire_bytes": 0.0})
+        d["count"] += n * v["count"]
+        d["wire_bytes"] += n * v["wire_bytes"]
+    return out
+
+
+def lower_and_compile(arch, shape, mesh):
+    import jax
+    from repro.launch.specs import input_specs
+    cell = input_specs(arch, shape, mesh)
+    # set_mesh (not the legacy `with mesh:`) — it installs the abstract mesh
+    # so the model's activation sharding constraints resolve.
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(cell.fn).lower(*cell.abstract_args)
+        compiled = lowered.compile()
+    return cell, compiled
+
+
+def body_probes(arch):
+    """[(count, probe_cfg)] covering the layer stack's body types."""
+    if arch.attention == "local_global":
+        r = arch.local_global_ratio
+        n_global = sum(1 for i in range(arch.num_layers) if i % (r + 1) == r)
+        n_local = arch.num_layers - n_global
+        local = dataclasses.replace(arch, num_layers=1)
+        glob = dataclasses.replace(arch, num_layers=1, attention="full",
+                                   local_global_ratio=0, window=None)
+        return [(n_local, local), (n_global, glob)]
+    return [(arch.num_layers, dataclasses.replace(arch, num_layers=1))]
+
+
+def extrapolated_cost(arch, shape, mesh):
+    """(flops, hbm_bytes, wire_bytes, by_op) per device, loop-corrected."""
+    base_cfg = dataclasses.replace(arch, num_layers=0)
+    _, c0 = lower_and_compile(base_cfg, shape, mesh)
+    group = mesh.shape.get("model", 1)
+    f0, b0, w0, op0 = _cost_tuple(c0, group)
+    flops, bytes_, wire, by_op = f0, b0, w0, {k: dict(v)
+                                              for k, v in op0.items()}
+    for count, probe_cfg in body_probes(arch):
+        _, c1 = lower_and_compile(probe_cfg, shape, mesh)
+        f1, b1, w1, op1 = _cost_tuple(c1, group)
+        flops += count * max(0.0, f1 - f0)
+        bytes_ += count * max(0.0, b1 - b0)
+        wire += count * max(0.0, w1 - w0)
+        body_ops = {k: {"count": v["count"] - op0.get(k, {}).get("count", 0),
+                        "wire_bytes": v["wire_bytes"] -
+                        op0.get(k, {}).get("wire_bytes", 0.0)}
+                    for k, v in op1.items()}
+        by_op = _merge_by_op(by_op, body_ops, count)
+    return flops, bytes_, wire, by_op
+
+
+def run_cell(arch, shape, mesh, mesh_name):
+    import jax
+    from repro.launch import roofline
+
+    cell, compiled = lower_and_compile(arch, shape, mesh)
+    mem = compiled.memory_analysis()
+    flops, hbm, wire, by_op = extrapolated_cost(arch, shape, mesh)
+    chips = mesh.devices.size
+    tokens = shape.global_batch * shape.seq_len
+    nap = arch.active_param_count()
+    if shape.kind == "train":
+        mflops = roofline.train_model_flops(nap, tokens)
+    elif shape.kind == "prefill":
+        mflops = roofline.prefill_model_flops(nap, tokens)
+    else:
+        mflops = roofline.decode_model_flops(nap, shape.global_batch)
+    mem_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+    from repro.core.topology import (HBM_GBPS, ICI_LINK_GBPS,
+                                     PEAK_BF16_TFLOPS)
+    compute_s = flops / (PEAK_BF16_TFLOPS * 1e12)
+    memory_s = hbm / (HBM_GBPS * 1e9)
+    collective_s = wire / (ICI_LINK_GBPS * 1e9)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    row = {
+        "arch": arch.name, "shape": shape.name, "mesh": mesh_name,
+        "status": "ok", "kind": shape.kind, "chips": chips,
+        "description": cell.description,
+        "flops": flops, "hbm_bytes": hbm, "wire_bytes": wire,
+        "collective_by_op": by_op,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "bottleneck": bottleneck,
+        "model_flops": mflops,
+        "useful_flops_ratio": (mflops / (flops * chips)
+                               if flops else 0.0),
+        "memory_per_device_gb": mem_bytes / 2**30,
+        "argument_gb": mem.argument_size_in_bytes / 2**30,
+        "output_gb": mem.output_size_in_bytes / 2**30,
+        "temp_gb": mem.temp_size_in_bytes / 2**30,
+        "alias_gb": mem.alias_size_in_bytes / 2**30,
+    }
+    return row
+
+
+def main() -> None:
+    import jax
+
+    from repro.configs import load_all, REGISTRY
+    from repro.configs.shapes import SHAPES, skip_reason
+    from repro.launch.mesh import make_production_mesh
+
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--arch", default=None)
+    parser.add_argument("--shape", default=None)
+    parser.add_argument("--mesh", default="both",
+                        choices=["single", "multi", "both"])
+    parser.add_argument("--out", default="experiments/dryrun_results.json")
+    parser.add_argument("--skip-existing", action="store_true")
+    args = parser.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run needs 512 placeholder devices; do not import jax before "
+        "this module sets XLA_FLAGS")
+
+    load_all()
+    archs = ([REGISTRY[args.arch.replace("-", "_")]] if args.arch
+             else [REGISTRY[k] for k in sorted(REGISTRY)])
+    shapes = ([SHAPES[args.shape]] if args.shape else list(SHAPES.values()))
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    for arch in archs:
+        for shape in shapes:
+            reason = skip_reason(arch, shape)
+            for mesh_name, mesh in meshes:
+                key = (arch.name, shape.name, mesh_name)
+                if args.skip_existing and key in done:
+                    print(f"SKIP(done) {key}", flush=True)
+                    continue
+                if reason:
+                    row = {"arch": arch.name, "shape": shape.name,
+                           "mesh": mesh_name, "status": "skipped",
+                           "reason": reason}
+                    print(f"SKIP {key}: {reason}", flush=True)
+                else:
+                    t0 = time.time()
+                    try:
+                        row = run_cell(arch, shape, mesh, mesh_name)
+                        row["compile_s"] = round(time.time() - t0, 1)
+                        print(f"OK   {key} compile={row['compile_s']}s "
+                              f"mem/dev={row['memory_per_device_gb']:.2f}GiB "
+                              f"bneck={row['bottleneck']} "
+                              f"[c={row['compute_s']*1e3:.1f}ms "
+                              f"m={row['memory_s']*1e3:.1f}ms "
+                              f"n={row['collective_s']*1e3:.1f}ms] "
+                              f"useful={row['useful_flops_ratio']:.2f}",
+                              flush=True)
+                    except Exception as e:  # noqa: BLE001
+                        row = {"arch": arch.name, "shape": shape.name,
+                               "mesh": mesh_name, "status": "error",
+                               "error": f"{type(e).__name__}: {e}",
+                               "traceback": traceback.format_exc()[-2000:],
+                               "compile_s": round(time.time() - t0, 1)}
+                        print(f"FAIL {key}: {row['error']}", flush=True)
+                results = [r for r in results if
+                           (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(row)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    sk = sum(1 for r in results if r.get("status") == "skipped")
+    er = sum(1 for r in results if r.get("status") == "error")
+    print(f"\ndry-run complete: ok={ok} skipped={sk} error={er}")
+    if er:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). The single-pod mesh is a 16×16 = 256-chip v5e pod
+(data × model); the multi-pod mesh adds a leading pod axis (2 pods = 512
+chips) carrying pure data parallelism across the DCN.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=None, axes=("data", "model")) -> jax.sharding.Mesh:
+    """Mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (1, n)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,55 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSON.
+
+Usage: PYTHONPATH=src python -m repro.launch.report \
+           experiments/dryrun_results.json > experiments/roofline.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_table(rows: list[dict], mesh: str) -> str:
+    out = [
+        f"### Mesh `{mesh}`\n",
+        "| arch | shape | kind | mem/dev GiB | compute s | memory s | "
+        "collective s | bottleneck | MODEL_FLOPS | useful ratio | "
+        "top collective |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                       f"| SKIP | — | — | {r['reason']} |")
+            continue
+        ops = r.get("collective_by_op", {})
+        top = max(ops.items(), key=lambda kv: kv[1]["wire_bytes"],
+                  default=(None, None))
+        top_s = (f"{top[0]} {top[1]['wire_bytes']/1e9:.0f}GB"
+                 if top[0] else "—")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['memory_per_device_gb']:.1f} "
+            f"| {r['compute_s']:.2f} | {r['memory_s']:.2f} "
+            f"| {r['collective_s']:.2f} | **{r['bottleneck']}** "
+            f"| {r['model_flops']:.2e} | {r['useful_flops_ratio']:.2f} "
+            f"| {top_s} |")
+    return "\n".join(out) + "\n"
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        "experiments/dryrun_results.json"
+    rows = json.load(open(path))
+    ok = [r for r in rows if r["status"] == "ok"]
+    sk = [r for r in rows if r["status"] == "skipped"]
+    print(f"Cells: {len(ok)} compiled, {len(sk)} skipped, "
+          f"{len(rows) - len(ok) - len(sk)} errors.\n")
+    for mesh in ("single_pod_16x16", "multi_pod_2x16x16"):
+        sub = [r for r in rows if r["mesh"] == mesh]
+        print(fmt_table(sub, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds (v5e constants):
+
+* compute    = HLO_FLOPs / peak_bf16            (197 TFLOP/s per chip)
+* memory     = HLO_bytes / HBM bandwidth        (819 GB/s per chip)
+* collective = wire_bytes / (links × 50 GB/s)   per chip
+
+``cost_analysis()`` supplies FLOPs/bytes of the per-device SPMD module.
+Collective bytes are NOT in cost_analysis: we parse the compiled HLO and
+apply ring-model wire multipliers per op kind (group size parsed from
+``replica_groups``):
+
+=================  ==========================================
+op                 wire bytes per device (result size R)
+=================  ==========================================
+all-reduce         2·R·(n−1)/n
+all-gather         R·(n−1)/n
+reduce-scatter     R·(n−1)          (result is the scattered shard)
+all-to-all         R·(n−1)/n
+collective-permute R
+=================  ==========================================
+
+``links`` defaults to 1 (single-path baseline). The multipath collectives
+(bidirectional ring / 2-axis striping — the paper's contribution applied to
+collectives) raise the usable link count; §Perf records both the baseline
+and the multipath-effective collective terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+from repro.core.topology import HBM_GBPS, ICI_LINK_GBPS, PEAK_BF16_TFLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def _wire_multiplier(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op == "all-gather":
+        return (n - 1) / n
+    if op == "reduce-scatter":
+        return float(n - 1)
+    if op == "all-to-all":
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_wire_bytes: float = 0.0
+    by_op: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, op: str, wire: float):
+        self.total_wire_bytes += wire
+        d = self.by_op.setdefault(op, {"count": 0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["wire_bytes"] += wire
+        self.count += 1
+
+
+def collective_bytes(hlo_text: str, default_group: int) -> CollectiveStats:
+    """Per-device wire bytes from the (post-SPMD, per-device) HLO."""
+    stats = CollectiveStats()
+    seen_start: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        # async pairs appear as op-start/op-done; count once
+        if "-done(" in line:
+            continue
+        op = m.group("op")
+        rb = _shape_bytes(m.group("type"))
+        n = _group_size(line, default_group)
+        stats.add(op, rb * _wire_multiplier(op, n))
+    return stats
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float               # per-device HLO flops
+    hbm_bytes: float           # per-device bytes accessed
+    wire_bytes: float          # per-device collective bytes
+    collective_by_op: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float         # 6·N·D (or 6·N_active·D) global
+    useful_flops_ratio: float  # model_flops / (flops × chips)
+    memory_per_device_gb: float
+    peak_memory_gb: float | None = None
+    links: int = 1
+    note: str = ""
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(arch_name: str, shape_name: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, model_flops: float,
+            memory_bytes: float, *, default_group: int,
+            peak_memory_bytes: float | None = None,
+            links: int = 1, note: str = "") -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text, default_group)
+    compute_s = flops / (PEAK_BF16_TFLOPS * 1e12)
+    memory_s = hbm / (HBM_GBPS * 1e9)
+    collective_s = coll.total_wire_bytes / (links * ICI_LINK_GBPS * 1e9)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    total_hlo_flops = flops * chips
+    ratio = model_flops / total_hlo_flops if total_hlo_flops else 0.0
+    return RooflineReport(
+        arch=arch_name, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops=flops, hbm_bytes=hbm, wire_bytes=coll.total_wire_bytes,
+        collective_by_op=coll.by_op, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, bottleneck=bottleneck,
+        model_flops=model_flops, useful_flops_ratio=ratio,
+        memory_per_device_gb=memory_bytes / 2**30,
+        peak_memory_gb=(peak_memory_bytes / 2**30
+                        if peak_memory_bytes else None),
+        links=links, note=note)
+
+
+def train_model_flops(n_active_params: float, tokens: float) -> float:
+    return 6.0 * n_active_params * tokens
+
+
+def decode_model_flops(n_active_params: float, batch: int) -> float:
+    """One decode step processes ``batch`` tokens."""
+    return 2.0 * n_active_params * batch  # fwd only
+
+
+def prefill_model_flops(n_active_params: float, tokens: float) -> float:
+    return 2.0 * n_active_params * tokens

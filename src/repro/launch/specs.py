@@ -1,0 +1,122 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every dry-run cell.
+
+Weak-type-correct, sharding-attached, zero allocation — the same pattern a
+production launcher uses to AOT-compile before touching the cluster.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import transformer as tfm
+from repro.optim import OptimConfig
+from repro.serving.engine import make_serve_step, pick_kv_chunks
+from repro.training import TrainStepConfig, make_train_step, state_shapes
+from repro.training import sharding as shd
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(
+            mesh, shd.safe_spec(shape, spec, mesh)))
+
+
+def _attach(mesh, abstract, specs):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=NamedSharding(mesh, s)),
+        abstract, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def optim_for(arch: ArchConfig) -> OptimConfig:
+    return OptimConfig(moment_dtype=arch.optimizer_dtype)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+    fn: Callable
+    abstract_args: tuple
+    kind: str
+    description: str
+
+
+def batch_abstract(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                   seq_len: int | None = None, batch: int | None = None):
+    dp = shd.dp_axes(mesh)
+    b = batch if batch is not None else shape.global_batch
+    s = seq_len if seq_len is not None else shape.seq_len
+    if arch.frontend == "audio":
+        batch_t = {
+            "features": _sds((b, s, arch.frontend_dim), jnp.float32, mesh,
+                             P(dp, None, None)),
+            "labels": _sds((b, s), jnp.int32, mesh, P(dp, None)),
+            "mask": _sds((b, s), jnp.float32, mesh, P(dp, None)),
+        }
+    else:
+        batch_t = {
+            "tokens": _sds((b, s), jnp.int32, mesh, P(dp, None)),
+            "labels": _sds((b, s), jnp.int32, mesh, P(dp, None)),
+            "mask": _sds((b, s), jnp.float32, mesh, P(dp, None)),
+        }
+    return batch_t
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig,
+                mesh: Mesh) -> CellSpec:
+    """Build the (step_fn, abstract args) for one cell."""
+    dp = shd.dp_axes(mesh)
+    if shape.kind == "train":
+        opt = optim_for(arch)
+        ts = TrainStepConfig()
+        step = make_train_step(arch, ts, opt)
+        abstract = state_shapes(arch, opt)
+        p_specs = shd.param_specs(arch, mesh, abstract["params"])
+        o_specs = shd.opt_state_specs(arch, mesh, abstract["opt"], p_specs)
+        state_abs = {
+            "params": _attach(mesh, abstract["params"], p_specs),
+            "opt": _attach(mesh, abstract["opt"], o_specs),
+        }
+        batch_abs = batch_abstract(arch, shape, mesh)
+        return CellSpec(step, (state_abs, batch_abs), "train",
+                        f"train_step {arch.name} b{shape.global_batch} "
+                        f"s{shape.seq_len}")
+
+    if shape.kind == "prefill":
+        def prefill(params, batch):
+            logits, aux = tfm.forward(params, arch, batch)
+            return logits
+        abstract_p = tfm.param_shapes(arch)
+        p_specs = shd.param_specs(arch, mesh, abstract_p)
+        params_abs = _attach(mesh, abstract_p, p_specs)
+        batch_abs = batch_abstract(arch, shape, mesh)
+        batch_abs.pop("labels", None)
+        batch_abs.pop("mask", None)
+        return CellSpec(prefill, (params_abs, batch_abs), "prefill",
+                        f"prefill {arch.name} b{shape.global_batch} "
+                        f"s{shape.seq_len}")
+
+    # decode
+    b = shape.global_batch
+    kv_chunks = pick_kv_chunks(arch, mesh, b, shape.seq_len)
+    spec = tfm.cache_spec(arch, max_len=shape.seq_len, kv_chunks=kv_chunks)
+    serve = make_serve_step(arch, spec)
+    abstract_p = tfm.param_shapes(arch)
+    p_specs = shd.param_specs(arch, mesh, abstract_p)
+    params_abs = _attach(mesh, abstract_p, p_specs)
+    cache_abs = tfm.cache_shapes(arch, b, spec)
+    c_specs = shd.cache_specs(arch, mesh, cache_abs, b)
+    cache_abs = _attach(mesh, cache_abs, c_specs)
+    tokens = _sds((b, 1), jnp.int32, mesh, P(dp, None))
+    cur_len = jax.ShapeDtypeStruct((), jnp.int32)
+    return CellSpec(serve, (params_abs, cache_abs, tokens, cur_len),
+                    "decode",
+                    f"serve_step {arch.name} b{b} cache={shape.seq_len} "
+                    f"C={spec.kv_chunks if spec.kind == 'chunked' else 'ring'}")

@@ -1,0 +1,281 @@
+"""Shared model layers: norms, RoPE, attention variants, MLP variants.
+
+Attention comes in three memory-honest flavours:
+
+* ``naive_attention``     — materializes (Sq, Sk); used for short sequences
+                            (smoke tests) where it is cheapest to compile.
+* ``blockwise_attention`` — lax.scan over KV blocks with online softmax
+                            (flash-attention structure in pure XLA). This is
+                            what the dry-run lowers for 32k prefill; the
+                            Pallas kernel in ``repro.kernels.flash_attention``
+                            is the TPU fast path with identical semantics.
+* ``chunked_decode_attention`` — flash-decoding split-KV for serve steps:
+                            the cache carries an explicit chunk dim that the
+                            launcher shards over the model axis; partial
+                            (m, l, o) stats merge with a log-sum-exp
+                            reduction over chunks (small collectives instead
+                            of gathering the cache).
+
+The sliding window is a *traced scalar* (−1 = full attention) so
+local/global stacks (gemma3) scan over a per-layer window array with a
+single code path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import pspec
+
+NEG_INF = -1e30
+
+
+# -- norms -----------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with a hand-written VJP.
+
+    Two dtype rules matter at scale (§Perf iteration N2):
+
+    * never materialize an f32 copy of x — a wholesale ``x.astype(f32)``
+      of the layer carry gets loop-hoisted by XLA into an f32 duplicate of
+      the entire saved-activation stack (+32 GiB/device, llama3-8b train);
+    * keep the x-cotangent in ``x.dtype`` — autodiff through an
+      f32-accumulated variance reduction promotes the whole residual-stream
+      cotangent to f32, doubling every backward collective (nemotron: TBs
+      of f32 all-gathers). Row statistics still accumulate in f32.
+    """
+    y, _ = _rms_norm_fwd(x, weight, eps)
+    return y
+
+
+def _rms_stats(x):
+    var = (jnp.einsum("...d,...d->...", x, x,
+                      preferred_element_type=jnp.float32)[..., None]
+           / x.shape[-1])
+    return var
+
+
+def _rms_norm_fwd(x, weight, eps):
+    inv = lax.rsqrt(_rms_stats(x) + eps)               # (..., 1) f32
+    y = x * inv.astype(x.dtype) * (1.0 + weight).astype(x.dtype)
+    return y, (x, weight, inv)
+
+
+def _rms_norm_bwd(eps, res, g):
+    x, weight, inv = res
+    d = x.shape[-1]
+    w1 = (1.0 + weight).astype(x.dtype)
+    t = g * w1                                          # (..., d) x.dtype
+    # rowwise f32 accumulation; per-row scalars only
+    s = jnp.einsum("...d,...d->...", t, x,
+                   preferred_element_type=jnp.float32)[..., None]
+    coef = (inv * inv * inv * s / d)
+    dx = t * inv.astype(x.dtype) - x * coef.astype(x.dtype)
+    dw = jnp.einsum("...d,...d->d", g.astype(jnp.float32),
+                    (x * inv.astype(x.dtype)).astype(jnp.float32))
+    return dx, dw.astype(weight.dtype)
+
+
+rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+# -- rotary embeddings --------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: (..., S, hd); positions: (S,) or broadcastable int32.
+
+    Angles (small (S, hd/2) tables) are f32; the rotation multiplies in
+    ``x.dtype`` — upcasting x here doubled the activation bytes that cross
+    the SP boundary collectives (§Perf iteration N2)."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (S, hd/2)
+    cos = jnp.cos(ang).astype(x.dtype)
+    sin = jnp.sin(ang).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+# -- attention ----------------------------------------------------------------
+def _window_mask(row: jax.Array, col: jax.Array, window: jax.Array,
+                 causal: bool) -> jax.Array:
+    """row/col: broadcastable global positions; window: traced scalar,
+    window < 0 means unlimited."""
+    mask = jnp.ones(jnp.broadcast_shapes(row.shape, col.shape), bool)
+    if causal:
+        mask &= col <= row
+    mask &= (window < 0) | (col > row - window)
+    return mask
+
+
+def naive_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, window: jax.Array | int | None,
+                    scale: float) -> jax.Array:
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Sk, hd) — GQA via head folding."""
+    b, hq, sq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    qpk = hq // hkv
+    window = jnp.asarray(-1 if window is None else window, jnp.int32)
+    qg = q.reshape(b, hkv, qpk, sq, hd)
+    s = jnp.einsum("bgqtd,bgsd->bgqts", qg.astype(jnp.float32),
+                   k.astype(jnp.float32), optimize=True) * scale
+    row = jnp.arange(sq)[:, None] + (sk - sq)   # right-aligned positions
+    col = jnp.arange(sk)[None, :]
+    mask = _window_mask(row, col, window, causal)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqts,bgsd->bgqtd", p, v.astype(jnp.float32),
+                   optimize=True)
+    return o.reshape(b, hq, sq, hd).astype(q.dtype)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, window: jax.Array | int | None,
+                        scale: float, block_k: int = 1024) -> jax.Array:
+    """Flash-structured attention: scan over KV blocks, online softmax.
+
+    Never materializes more than (..., Sq, block_k) scores, making the
+    compiled memory footprint honest for 32k prefill.
+    """
+    b, hq, sq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    if sk <= block_k:
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               scale=scale)
+    qpk = hq // hkv
+    window = jnp.asarray(-1 if window is None else window, jnp.int32)
+
+    pad = (-sk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nblk = (sk + pad) // block_k
+    kb = jnp.moveaxis(k.reshape(b, hkv, nblk, block_k, hd), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, nblk, block_k, hd), 2, 0)
+
+    qg = (q.reshape(b, hkv, qpk, sq, hd) * scale).astype(jnp.float32)
+    row = jnp.arange(sq)[:, None] + (sk - sq)
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, j = blk
+        s = jnp.einsum("bgqtd,bgsd->bgqts", qg, kblk.astype(jnp.float32),
+                       optimize=True)
+        col = j * block_k + jnp.arange(block_k)[None, :]
+        mask = _window_mask(row, col, window, causal) & (col < sk)
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.max(s, -1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new) * mask
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, -1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bgqts,bgsd->bgqtd", p,
+                                       vblk.astype(jnp.float32),
+                                       optimize=True)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hkv, qpk, sq, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, qpk, sq, 1), jnp.float32),
+            jnp.zeros((b, hkv, qpk, sq, hd), jnp.float32))
+    # checkpoint the block step: without it every block's (Sq, block_k)
+    # score tensor becomes a backward residual — O(Sq·Sk) memory, defeating
+    # the point of blockwise attention. unroll=True keeps the loop out of a
+    # `while` op so XLA cost_analysis counts every block (the dry-run's
+    # roofline extrapolation relies on loop-free layer bodies).
+    (m, l, acc), _ = lax.scan(jax.checkpoint(step), init,
+                              (kb, vb, jnp.arange(nblk)), unroll=True)
+    o = acc / jnp.where(l == 0.0, 1.0, l)
+    return o.reshape(b, hq, sq, hd).astype(q.dtype)
+
+
+def chunked_decode_attention(q: jax.Array, k_cache: jax.Array,
+                             v_cache: jax.Array, cur_len: jax.Array, *,
+                             window: jax.Array | int | None,
+                             scale: float) -> jax.Array:
+    """Single-token decode against a chunked cache (flash-decoding).
+
+    q: (B, Hq, hd); k/v_cache: (B, Hkv, C, Sc, hd) — C is the split-KV chunk
+    dim (sharded over 'model' by the launcher). ``cur_len`` is the number of
+    valid cache positions. Returns (B, Hq, hd).
+    """
+    b, hq, hd = q.shape
+    hkv, c, sc = k_cache.shape[1], k_cache.shape[2], k_cache.shape[3]
+    qpk = hq // hkv
+    window = jnp.asarray(-1 if window is None else window, jnp.int32)
+    qg = (q.reshape(b, hkv, qpk, hd) * scale).astype(jnp.float32)
+
+    s = jnp.einsum("bgqd,bgcsd->bgqcs", qg, k_cache.astype(jnp.float32),
+                   optimize=True)
+    pos = (jnp.arange(c)[:, None] * sc + jnp.arange(sc)[None, :])
+    row = cur_len - 1
+    valid = (pos < cur_len) & ((window < 0) | (pos > row - window))
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+
+    m_c = jnp.max(s, -1)                                  # (b,g,q,C)
+    p = jnp.exp(s - m_c[..., None]) * valid[None, None, None]
+    l_c = jnp.sum(p, -1)                                  # (b,g,q,C)
+    o_c = jnp.einsum("bgqcs,bgcsd->bgqcd", p,
+                     v_cache.astype(jnp.float32), optimize=True)
+
+    m = jnp.max(m_c, -1, keepdims=True)                   # merge over C
+    w = jnp.exp(m_c - m)
+    l = jnp.sum(l_c * w, -1)
+    o = jnp.einsum("bgqc,bgqcd->bgqd", w * l_c /
+                   jnp.where(l[..., None] == 0, 1.0, l[..., None]),
+                   o_c / jnp.where(l_c[..., None] == 0, 1.0,
+                                   l_c[..., None]), optimize=True)
+    return o.reshape(b, hq, hd).astype(q.dtype)
+
+
+# -- MLP variants ---------------------------------------------------------------
+def mlp_apply(x: jax.Array, params: dict, kind: str,
+              gather_weights: bool = True) -> jax.Array:
+    """x: (..., d). kinds: swiglu | geglu | gelu | relu2.
+
+    ``gather_weights`` applies the ZeRO-3 gather-before-use layout (§Perf
+    N3) — right for full-sequence steps, wrong for decode (batch≈1:
+    activations are tiny, weights huge; the per-step weight all-gather
+    cost 0.1 s on gemma long_500k before this flag existed).
+    """
+    if gather_weights:
+        w1 = pspec.weight_gathered(params["w1"], 1)
+        w2 = pspec.weight_gathered(params["w2"], 0)
+    else:
+        w1, w2 = params["w1"], params["w2"]
+    if kind in ("swiglu", "geglu"):
+        w3 = (pspec.weight_gathered(params["w3"], 1) if gather_weights
+              else params["w3"])
+        g = pspec.hidden_last(x @ w1)
+        u = pspec.hidden_last(x @ w3)
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        return (act * u) @ w2
+    h = pspec.hidden_last(x @ w1)
+    if kind == "gelu":
+        h = jax.nn.gelu(h)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(f"unknown mlp kind {kind}")
+    return h @ w2
+
+
+def mlp_init(key, d: int, ff: int, kind: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = ff ** -0.5
+    p = {"w1": jax.random.normal(k1, (d, ff), dtype) * scale_in,
+         "w2": jax.random.normal(k2, (ff, d), dtype) * scale_out}
+    if kind in ("swiglu", "geglu"):
+        p["w3"] = jax.random.normal(k3, (d, ff), dtype) * scale_in
+    return p

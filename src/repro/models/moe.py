@@ -1,0 +1,149 @@
+"""Mixture-of-Experts block: top-k routing with shard-local static dispatch.
+
+Design constraints (kimi-k2: 384 experts → one-hot (T, E, C) dispatch
+tensors are infeasible) and distribution constraints (the dispatch must not
+force GSPMD to replicate or all-gather the token stream):
+
+* the token stream is reshaped to ``(shards, T_local, d)`` where ``shards``
+  is the data-parallel world size — routing, the capacity sort, and the
+  scatter/gather all carry the shard dim, so under GSPMD every dispatch op
+  is *local to its data shard* (no cross-shard collectives),
+* position-within-expert comes from a searchsorted over the sorted ids
+  (O(T·k) memory — no (T, E) one-hots),
+* the capacity buffer is ``(shards, E, C_local, d)``; expert GEMMs are
+  batched over shards.
+
+Expert sharding (see ``training/sharding.py``): E over the model axis when
+divisible (EP — kimi's 384 experts), otherwise per-expert tensor
+parallelism on the FFN hidden dim (mixtral's 8 experts on a 16-wide axis);
+the activation constraints in ``pspec.moe_buf``/``pspec.moe_hidden`` match.
+
+Includes the Switch-style load-balancing auxiliary loss and optional shared
+experts (kimi/DeepSeek recipe).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import pspec
+from repro.models.layers import mlp_apply, mlp_init
+
+
+def moe_init(key, d: int, ff: int, num_experts: int, kind: str,
+             num_shared: int, dtype) -> dict:
+    keys = jax.random.split(key, 4)
+    scale_in, scale_out = d ** -0.5, ff ** -0.5
+    p = {
+        "router": jax.random.normal(keys[0], (d, num_experts),
+                                    jnp.float32) * scale_in,
+        "w1": jax.random.normal(keys[1], (num_experts, d, ff),
+                                dtype) * scale_in,
+        "w2": jax.random.normal(keys[2], (num_experts, ff, d),
+                                dtype) * scale_out,
+    }
+    if kind in ("swiglu", "geglu"):
+        p["w3"] = jax.random.normal(keys[3], (num_experts, d, ff),
+                                    dtype) * scale_in
+    if num_shared:
+        p["shared"] = mlp_init(keys[3], d, ff * num_shared, kind, dtype)
+    return p
+
+
+def _num_shards(t: int) -> int:
+    mesh = pspec._ambient_mesh()
+    if mesh is None:
+        return 1
+    shape = dict(mesh.shape)
+    n = 1
+    for a in ("pod", "data"):
+        n *= shape.get(a, 1)
+    return n if (n > 1 and t % n == 0) else 1
+
+
+def moe_apply(x: jax.Array, params: dict, *, top_k: int, kind: str,
+              capacity_factor: float = 1.25, dropless: bool = False,
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (T, d) flattened tokens → (out (T, d), aux_loss scalar).
+
+    ``dropless=True`` sets capacity to the worst case (T_local) — used on
+    the decode path where token drops would corrupt generation; training
+    uses the capacity factor (GShard-style dropping, applied per shard).
+    """
+    t, d = x.shape
+    e = params["router"].shape[-1]
+    ns = _num_shards(t)
+    tl = t // ns                                   # tokens per data shard
+    if dropless:
+        capacity = tl
+    else:
+        capacity = max(1, int(tl * top_k / e * capacity_factor))
+
+    xs = pspec.constrain(x.reshape(ns, tl, d), pspec.DP, None, None)
+
+    logits = jnp.einsum("std,de->ste", xs.astype(jnp.float32),
+                        params["router"], optimize=True)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)     # (s, Tl, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # load-balance aux loss (per shard, then averaged): E · Σ_e f_e · p_e
+    density = jnp.mean(
+        jax.nn.one_hot(expert_ids, e, dtype=jnp.float32).sum(2), axis=1)
+    aux = e * jnp.mean(jnp.sum(density * jnp.mean(probs, 1), -1))
+
+    flat_ids = expert_ids.reshape(ns, tl * top_k)           # (s, Tl*k)
+    order = jnp.argsort(flat_ids, axis=-1)                  # per-shard sort
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=-1)
+    token_of = order // top_k                               # (s, Tl*k)
+    seg_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(e), side="left"))(
+            sorted_ids)                                     # (s, E)
+    pos = (jnp.arange(tl * top_k)[None, :]
+           - jnp.take_along_axis(seg_start, sorted_ids, axis=-1))
+    keep = pos < capacity
+    safe_pos = jnp.where(keep, pos, capacity)               # OOB ⇒ dropped
+
+    sidx = jnp.broadcast_to(jnp.arange(ns)[:, None], sorted_ids.shape)
+    gathered_tokens = jnp.take_along_axis(
+        xs, token_of[..., None], axis=1)                    # (s, Tl*k, d)
+    buf = jnp.zeros((ns, e, capacity, d), x.dtype)
+    buf = buf.at[sidx, sorted_ids, safe_pos].set(gathered_tokens,
+                                                 mode="drop")
+    # the scatter is SHARD-LOCAL: buf leaves it data-sharded on dim 0 and
+    # replicated over model. The EP reshard below (slice E per model rank)
+    # is then communication-free; GSPMD handed the cross-(data×model)
+    # scatter directly produced TB-scale update replication.
+    buf = pspec.constrain(buf, pspec.DP, None, None, None)
+    buf = pspec.moe_buf(buf, e)
+
+    h = jnp.einsum("secd,edf->secf", buf, params["w1"], optimize=True)
+    if kind in ("swiglu", "geglu"):
+        u = jnp.einsum("secd,edf->secf", buf, params["w3"], optimize=True)
+        act = jax.nn.silu(h) if kind == "swiglu" else jax.nn.gelu(h)
+        h = act * u
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    h = pspec.moe_hidden(h, e)
+    y = pspec.moe_buf(
+        jnp.einsum("secf,efd->secd", h, params["w2"], optimize=True), e)
+    # un-shard E for the shard-local gather-back (all-gather over model —
+    # the baseline EP combine; §Perf replaces it with the explicit
+    # multipath all-to-all, which only moves each token to its k owners).
+    y = pspec.constrain(y, pspec.DP, None, None, None)
+
+    back = y.at[sidx, sorted_ids, safe_pos].get(
+        mode="fill", fill_value=0)                          # (s, Tl*k, d)
+    weights = (jnp.take_along_axis(
+        gate_vals.reshape(ns, tl * top_k), order, axis=-1) * keep)
+    out = jnp.zeros_like(xs)
+    out = out.at[sidx, token_of].add(
+        (back * weights[..., None]).astype(x.dtype))
+    out = pspec.constrain(out, pspec.DP, None, None).reshape(t, d)
+
+    if "shared" in params:
+        out = out + mlp_apply(x, params["shared"], kind)
+    return out, aux

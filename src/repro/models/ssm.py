@@ -1,0 +1,226 @@
+"""State-space mixers: Mamba (hymba's parallel SSM heads) and RWKV-6.
+
+Both expose a full-sequence path (training / prefill — chunked or
+associative scans, sub-quadratic) and a single-step path (decode — O(1)
+state). States are returned explicitly so the serving cache can carry them.
+
+The RWKV-6 chunk math mirrors ``repro.kernels.rwkv6_scan`` (the Pallas TPU
+fast path); this XLA version is what the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+CONV_K = 4
+
+
+# =========================== Mamba (diagonal SSM) ===========================
+def mamba_init(key, d: int, state: int, dtype) -> dict:
+    d_i = d
+    r = max(8, d // 64)
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "w_in": jax.random.normal(ks[0], (d, 2 * d_i), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (CONV_K, d_i), dtype) * 0.3,
+        "conv_b": jnp.zeros((d_i,), dtype),
+        "w_dt1": jax.random.normal(ks[2], (d_i, r), dtype) * s,
+        "w_dt2": jax.random.normal(ks[3], (r, d_i), dtype) * r ** -0.5,
+        "dt_bias": jnp.full((d_i,), -1.0, jnp.float32),
+        "w_B": jax.random.normal(ks[4], (d_i, state), dtype) * s,
+        "w_C": jax.random.normal(ks[5], (d_i, state), dtype) * s,
+        "A_log": jnp.zeros((d_i, state), jnp.float32),
+        "D": jnp.ones((d_i,), jnp.float32),
+        "w_out": jax.random.normal(ks[6], (d_i, d), dtype) * s,
+    }
+
+
+def _mamba_gates(x1, p):
+    """Shared projections: (dt, B, C) from the conv'd activation."""
+    dt = jax.nn.softplus(
+        (x1 @ p["w_dt1"]) @ p["w_dt2"] + p["dt_bias"])       # (..., d_i)
+    bmat = x1 @ p["w_B"]                                     # (..., N)
+    cmat = x1 @ p["w_C"]
+    return dt, bmat, cmat
+
+
+def mamba_apply(x: jax.Array, p: dict, return_state: bool = False):
+    """Full-sequence Mamba mixer. x: (B, L, d) -> (B, L, d).
+
+    Monolithic associative scan. §Perf iteration H1 tried a chunked
+    unrolled variant (256-token windows, carry injection via cumprod):
+    REFUTED — memory term 22.3 -> 32.8 s, collective 2.6 -> 10.7 s,
+    compile 163 -> 1089 s: the unrolled chunk ops defeat XLA fusion and
+    multiply GSPMD boundary collectives. The real fast path for this mixer
+    is a fused chunked kernel (see repro/kernels/rwkv6_scan for the
+    implemented pattern); kept as backlog.
+
+    With ``return_state`` also returns ``(ssm_state, conv_state)`` for
+    prefill-into-cache.
+    """
+    b, l, d = x.shape
+    xz = x @ p["w_in"]
+    x1_raw, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv, kernel CONV_K
+    xp = jnp.pad(x1_raw, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    x1 = sum(xp[:, i:i + l] * p["conv_w"][i] for i in range(CONV_K))
+    x1 = jax.nn.silu(x1 + p["conv_b"])
+
+    dt, bmat, cmat = _mamba_gates(x1.astype(jnp.float32), p)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt[..., None])        # (B,L,d_i,N)
+    drive = (dt * x1.astype(jnp.float32))[..., None] * bmat[..., None, :]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = lax.associative_scan(combine, (a, drive), axis=1)
+    y = jnp.einsum("blds,bls->bld", h, cmat, optimize=True)
+    y = y + p["D"] * x1.astype(jnp.float32)
+    out = ((y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"])
+    if not return_state:
+        return out
+    conv_state = xp[:, l:l + CONV_K - 1]         # last K-1 raw inputs
+    return out, (h[:, -1], conv_state)
+
+
+def mamba_decode(x: jax.Array, p: dict, state: jax.Array,
+                 conv_state: jax.Array,
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One step. x: (B, d); state: (B, d_i, N); conv_state: (B, K-1, d_i)."""
+    xz = x @ p["w_in"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    hist = jnp.concatenate([conv_state, x1[:, None]], axis=1)  # (B, K, d_i)
+    conv_state = hist[:, 1:]
+    x1 = sum(hist[:, i] * p["conv_w"][i] for i in range(CONV_K))
+    x1 = jax.nn.silu(x1 + p["conv_b"])
+
+    dt, bmat, cmat = _mamba_gates(x1.astype(jnp.float32), p)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt[..., None])          # (B,d_i,N)
+    state = state * a + (dt * x1.astype(jnp.float32))[..., None] * \
+        bmat[:, None, :]
+    y = jnp.einsum("bds,bs->bd", state, cmat, optimize=True)
+    y = y + p["D"] * x1.astype(jnp.float32)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out, state, conv_state
+
+
+# ================================ RWKV-6 ====================================
+def rwkv6_init(key, d: int, head_dim: int, dtype) -> dict:
+    h = d // head_dim
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),
+        "w_r": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "w_k": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "w_v": jax.random.normal(ks[3], (d, d), dtype) * s,
+        "w_w": jax.random.normal(ks[4], (d, d), dtype) * s * 0.1,
+        "w_g": jax.random.normal(ks[5], (d, d), dtype) * s,
+        "u": jax.random.normal(ks[6], (h, head_dim), jnp.float32) * 0.3,
+        "ln_x": jnp.zeros((d,), jnp.float32),
+        "w_out": jax.random.normal(ks[7], (d, d), dtype) * s,
+    }
+
+
+def _rwkv6_project(x, shifted, p, head_dim):
+    """Token-shift mix + projections → per-head r/k/v/w/g."""
+    b = x.shape[:-1]
+    d = x.shape[-1]
+    h = d // head_dim
+    delta = shifted - x
+    mixed = [x + p["mu"][i].astype(x.dtype) * delta for i in range(5)]
+    r = (mixed[0] @ p["w_r"]).reshape(*b, h, head_dim)
+    k = (mixed[1] @ p["w_k"]).reshape(*b, h, head_dim)
+    v = (mixed[2] @ p["w_v"]).reshape(*b, h, head_dim)
+    w = jnp.exp(-jnp.exp(
+        (mixed[3] @ p["w_w"]).astype(jnp.float32) - 2.0)
+    ).reshape(*b, h, head_dim)                               # decay ∈ (0,1)
+    g = mixed[4] @ p["w_g"]
+    return r, k, v, w, g
+
+
+def _rwkv6_finish(o, g, p, x_dtype):
+    """Per-head group-norm → gate → output projection."""
+    b = o.shape[:-2]
+    d = o.shape[-2] * o.shape[-1]
+    of = o.astype(jnp.float32)
+    var = jnp.mean(of * of, axis=-1, keepdims=True)
+    of = of * lax.rsqrt(var + 1e-6)
+    of = of.reshape(*b, d) * (1.0 + p["ln_x"])
+    return ((of.astype(x_dtype) * jax.nn.silu(g)) @ p["w_out"])
+
+
+def rwkv6_apply(x: jax.Array, p: dict, *, head_dim: int,
+                chunk: int = 128, return_state: bool = False):
+    """Full-sequence RWKV-6 time-mix. x: (B, L, d) → (B, L, d).
+
+    With ``return_state`` also returns ``(wkv_state, shift_state)``.
+    Padding chunks carry identity decay (w=1) and zero k, so the final
+    state is exact regardless of padding.
+    """
+    b, l, d = x.shape
+    h = d // head_dim
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, g = _rwkv6_project(x, shifted, p, head_dim)
+
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    nc = (l + pad) // chunk
+
+    def reshape_chunks(t):
+        return jnp.moveaxis(
+            t.reshape(b, nc, chunk, h, -1), 1, 0)            # (nc,B,L,h,e)
+
+    rc, kc, vc, wc = map(reshape_chunks, (r, k, v, w))
+    u = p["u"]
+
+    def step(state, inp):                                    # state (B,h,dk,dv)
+        r_, k_, v_, w_ = (t.astype(jnp.float32) for t in inp)
+        logw = jnp.log(w_)
+        cum = jnp.cumsum(logw, axis=1)
+        qt = r_ * jnp.exp(cum - logw)
+        kt = k_ * jnp.exp(-cum)
+        scores = jnp.einsum("blhd,bmhd->bhlm", qt, kt, optimize=True)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(mask, scores, 0.0)
+        bonus = jnp.einsum("blhd,hd,blhd->blh", r_, u, k_, optimize=True)
+        o = (jnp.einsum("bhlm,bmhe->blhe", scores, v_, optimize=True)
+             + bonus[..., None] * v_
+             + jnp.einsum("blhd,bhde->blhe", qt, state, optimize=True))
+        dl = jnp.exp(cum[:, -1])                              # (B,h,dk)
+        state = (state * dl[..., None]
+                 + jnp.einsum("blhd,blhe->bhde", kt * dl[:, None], v_,
+                              optimize=True))
+        return state, o
+
+    init = jnp.zeros((b, h, head_dim, v.shape[-1]), jnp.float32)
+    final_state, o = lax.scan(step, init, (rc, kc, vc, wc))
+    o = jnp.moveaxis(o, 0, 1).reshape(b, nc * chunk, h, -1)[:, :l]
+    out = _rwkv6_finish(o, g, p, x.dtype)
+    if not return_state:
+        return out
+    return out, (final_state, x[:, -1])          # (state, shift_state)
+
+
+def rwkv6_decode(x: jax.Array, p: dict, state: jax.Array,
+                 shift_state: jax.Array, *, head_dim: int,
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One step. x: (B, d); state: (B, h, dk, dv); shift_state: (B, d)."""
+    r, k, v, w, g = _rwkv6_project(x, shift_state, p, head_dim)
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    kv = jnp.einsum("bhd,bhe->bhde", kf, vf, optimize=True)
+    o = jnp.einsum("bhd,bhde->bhe", rf,
+                   state + p["u"][None, :, :, None] * kv, optimize=True)
+    state = state * wf[..., None] + kv
+    out = _rwkv6_finish(o, g, p, x.dtype)
+    return out, state, x

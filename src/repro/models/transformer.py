@@ -1,0 +1,451 @@
+"""Model assembly: blocks, scan-over-layers stacks, train + decode paths.
+
+One builder covers all ten assigned architectures; ``ArchConfig`` selects the
+mixer (attention / attention+SSM / RWKV), FFN (dense MLP / MoE), and the
+attention pattern. Layer stacks always go through ``lax.scan`` over stacked
+parameters — 66 dry-run compiles of up-to-96-layer models stay tractable
+because the HLO contains ONE layer body.
+
+Decode caches (serve path):
+
+* full / local_global attention → chunked cache ``(L, B, Hkv, C, Sc, hd)``
+  for flash-decoding; ``C`` is sharded over the model axis by the launcher,
+* sliding-window attention → ring cache ``(L, B, Hkv, W, hd)`` (O(window)
+  memory — this is what makes mixtral/hymba long_500k-eligible),
+* SSM / RWKV → O(1) state tensors,
+* gemma3's 5:1 local:global stack scans over a per-layer window vector with
+  a single code path (window = −1 ⇒ global).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import moe as moe_lib
+from repro.models import pspec
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (apply_rope, blockwise_attention,
+                                 chunked_decode_attention, mlp_apply,
+                                 mlp_init, naive_attention, rms_norm)
+
+Params = dict
+Cache = dict
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def layer_windows(cfg: ArchConfig) -> jnp.ndarray:
+    """Per-layer window vector: -1 = full/global attention."""
+    if cfg.attention == "swa":
+        return jnp.full((cfg.num_layers,), cfg.window, jnp.int32)
+    if cfg.attention == "local_global":
+        r = cfg.local_global_ratio
+        pat = [(cfg.window if (i % (r + 1)) != r else -1)
+               for i in range(cfg.num_layers)]
+        return jnp.asarray(pat, jnp.int32)
+    return jnp.full((cfg.num_layers,), -1, jnp.int32)
+
+
+# ============================ per-layer init =================================
+def _attn_init(key, cfg: ArchConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    dt = _dtype(cfg)
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * hd), dt) * s,
+        "wk": jax.random.normal(ks[1], (d, kv * hd), dt) * s,
+        "wv": jax.random.normal(ks[2], (d, kv * hd), dt) * s,
+        "wo": jax.random.normal(ks[3], (h * hd, d), dt) * (h * hd) ** -0.5,
+    }
+
+
+def block_init(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d, dt = cfg.d_model, _dtype(cfg)
+    p: Params = {"ln1": jnp.zeros((d,), jnp.float32),
+                 "ln2": jnp.zeros((d,), jnp.float32)}
+    if cfg.family == "ssm":
+        p["rwkv"] = ssm_lib.rwkv6_init(ks[0], d, cfg.rwkv_head_dim, dt)
+    else:
+        p["attn"] = _attn_init(ks[0], cfg)
+        if cfg.family == "hybrid":
+            p["ssm"] = ssm_lib.mamba_init(ks[1], d, cfg.ssm_state, dt)
+            p["ln_a"] = jnp.zeros((d,), jnp.float32)
+            p["ln_s"] = jnp.zeros((d,), jnp.float32)
+    if cfg.num_experts:
+        p["moe"] = moe_lib.moe_init(ks[2], d, cfg.d_ff, cfg.num_experts,
+                                    cfg.mlp, cfg.num_shared_experts, dt)
+    else:
+        p["mlp"] = mlp_init(ks[2], d, cfg.d_ff, cfg.mlp, dt)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d, v, dt = cfg.d_model, cfg.vocab_size, _dtype(cfg)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    layers = jax.vmap(lambda k: block_init(k, cfg))(layer_keys)
+    p = {
+        "embed": jax.random.normal(ks[1], (v, d), dt) * d ** -0.5,
+        "layers": layers,
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if cfg.decoder:
+        p["lm_head"] = jax.random.normal(ks[2], (d, v), dt) * d ** -0.5
+    else:
+        p["head"] = jax.random.normal(ks[2], (d, v), dt) * d ** -0.5
+    if cfg.frontend == "audio":
+        p["frontend_proj"] = jax.random.normal(
+            ks[3], (cfg.frontend_dim, d), dt) * cfg.frontend_dim ** -0.5
+    return p
+
+
+def param_shapes(cfg: ArchConfig):
+    """abstract params (no allocation) — used by the dry-run."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+# ============================ full-sequence path =============================
+def _attention_full(x, ap, cfg: ArchConfig, window, positions,
+                    return_kv: bool = False):
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    wq = pspec.weight_gathered(ap["wq"], 1)
+    kv_tp = 1 if kv % 16 == 0 else None
+    wk = pspec.weight_gathered(ap["wk"], kv_tp)
+    wv = pspec.weight_gathered(ap["wv"], kv_tp)
+    q = (x @ wq).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    q = pspec.attn_qkv(q, "q")
+    kv_role = "kv" if pspec.heads_shardable(cfg.num_heads) else "q"
+    k = pspec.attn_qkv(k, kv_role)
+    v = pspec.attn_qkv(v, kv_role)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = blockwise_attention(q, k, v, causal=cfg.causal, window=window,
+                            scale=hd ** -0.5)
+    out = pspec.batch_first(
+        o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+        @ pspec.weight_gathered(ap["wo"], 0))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _ffn(x, lp, cfg: ArchConfig, dropless: bool = False,
+         decode: bool = False):
+    """Returns (out, aux)."""
+    if cfg.num_experts:
+        from repro.models import moe_dist
+        b, s, d = x.shape
+        flat = x.reshape(b * s, d)
+        res = moe_dist.moe_apply_dist(
+            flat, lp["moe"], top_k=cfg.top_k, kind=cfg.mlp,
+            capacity_factor=cfg.capacity_factor, dropless=dropless,
+            fsdp=cfg.fsdp)
+        if res is not None:
+            out, aux = res
+            if "shared" in lp["moe"]:
+                out = out + mlp_apply(flat, lp["moe"]["shared"], cfg.mlp,
+                                      gather_weights=not decode)
+        else:
+            out, aux = moe_lib.moe_apply(
+                flat, lp["moe"], top_k=cfg.top_k, kind=cfg.mlp,
+                capacity_factor=cfg.capacity_factor, dropless=dropless)
+        return out.reshape(b, s, d), aux
+    return (mlp_apply(x, lp["mlp"], cfg.mlp, gather_weights=not decode),
+            jnp.float32(0.0))
+
+
+def block_apply(x, lp, cfg: ArchConfig, window, positions):
+    """Full-sequence block. x: (B, S, d) → (x', aux)."""
+    xin = rms_norm(x, lp["ln1"])
+    if cfg.family == "ssm":
+        mix = ssm_lib.rwkv6_apply(xin, lp["rwkv"],
+                                  head_dim=cfg.rwkv_head_dim)
+    elif cfg.family == "hybrid":
+        a = _attention_full(xin, lp["attn"], cfg, window, positions)
+        s = ssm_lib.mamba_apply(xin, lp["ssm"])
+        mix = 0.5 * (rms_norm(a, lp["ln_a"]) + rms_norm(s, lp["ln_s"]))
+    else:
+        mix = _attention_full(xin, lp["attn"], cfg, window, positions)
+    x = x + mix
+    ff, aux = _ffn(rms_norm(x, lp["ln2"]), lp, cfg)
+    return x + ff, aux
+
+
+def embed_inputs(params: Params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    if cfg.frontend == "audio":
+        return batch["features"].astype(_dtype(cfg)) @ params["frontend_proj"]
+    return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+
+def forward(params: Params, cfg: ArchConfig, batch: dict,
+            ) -> tuple[jax.Array, jax.Array]:
+    """Training / prefill forward. batch: tokens (B, S) or features.
+
+    Returns (logits (B, S, V), aux_loss).
+    """
+    x = pspec.seq_model(embed_inputs(params, cfg, batch))
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    windows = layer_windows(cfg)
+
+    def layer_fn(x, scanned):
+        lp, window = scanned
+        x, aux = block_apply(x, lp, cfg, window, positions)
+        return pspec.seq_model(x), aux
+
+    if cfg.remat == "full":
+        layer_fn = jax.checkpoint(layer_fn,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+    x, auxs = lax.scan(layer_fn, x, (params["layers"], windows))
+    x = rms_norm(x, params["final_norm"])
+    head = params["lm_head"] if cfg.decoder else params["head"]
+    logits = pspec.constrain(x @ head, pspec.DP, None, "model")
+    return logits, jnp.sum(auxs)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: dict,
+            aux_coef: float = 0.01) -> jax.Array:
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = nll.size
+    return jnp.sum(nll) / denom + aux_coef * aux
+
+
+# ============================ prefill-into-cache ============================
+def _kv_to_chunked(k, spec: "CacheSpec"):
+    """(B, Hkv, S, hd) → (B, Hkv, C, Sc, hd), zero-padded to max_len."""
+    b, kv, s, hd = k.shape
+    pad = spec.max_len - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return k.reshape(b, kv, spec.kv_chunks, spec.chunk_len, hd)
+
+
+def _kv_to_ring(k, spec: "CacheSpec", s: int):
+    """(B, Hkv, S, hd) → ring (B, Hkv, W, hd): slot j holds the largest
+    position p < S with p ≡ j (mod W); slots from before position 0 zero."""
+    w = spec.max_len
+    j = jnp.arange(w)
+    p = (s - 1) - ((s - 1 - j) % w)
+    valid = p >= 0
+    gathered = jnp.take(k, jnp.clip(p, 0, None), axis=2)
+    return jnp.where(valid[None, None, :, None], gathered, 0)
+
+
+def prefill_forward(params: Params, cfg: ArchConfig, batch: dict,
+                    spec: "CacheSpec") -> tuple[jax.Array, Cache]:
+    """Full-sequence forward that also emits the decode cache.
+
+    Returns (logits (B, S, V), cache) with the cache positioned after the
+    last prompt token (``cur_len = S`` for the subsequent decode_step).
+    """
+    x = pspec.seq_model(embed_inputs(params, cfg, batch))
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.arange(s)
+    windows = layer_windows(cfg)
+
+    def layer_fn(x, scanned):
+        lp, window = scanned
+        new_cache: dict = {}
+        xin = rms_norm(x, lp["ln1"])
+        if cfg.family == "ssm":
+            mix, (st, sh) = ssm_lib.rwkv6_apply(
+                xin, lp["rwkv"], head_dim=cfg.rwkv_head_dim,
+                return_state=True)
+            new_cache["rwkv_state"], new_cache["rwkv_shift"] = st, sh
+        else:
+            a, (k, v) = _attention_full(xin, lp["attn"], cfg, window,
+                                        positions, return_kv=True)
+            if spec.kind == "chunked":
+                new_cache["k"] = _kv_to_chunked(k, spec)
+                new_cache["v"] = _kv_to_chunked(v, spec)
+            else:
+                new_cache["k"] = _kv_to_ring(k, spec, s)
+                new_cache["v"] = _kv_to_ring(v, spec, s)
+            if cfg.family == "hybrid":
+                sm, (st, conv) = ssm_lib.mamba_apply(xin, lp["ssm"],
+                                                     return_state=True)
+                new_cache["ssm"], new_cache["conv"] = st, conv
+                mix = 0.5 * (rms_norm(a, lp["ln_a"]) +
+                             rms_norm(sm, lp["ln_s"]))
+            else:
+                mix = a
+        x = x + mix
+        ff, _ = _ffn(rms_norm(x, lp["ln2"]), lp, cfg, dropless=True)
+        return pspec.seq_model(x + ff), new_cache
+
+    x, cache = lax.scan(layer_fn, x, (params["layers"], windows))
+    x = rms_norm(x, params["final_norm"])
+    logits = pspec.constrain(x @ params["lm_head"], pspec.DP, None, "model")
+    return logits, cache
+
+
+# ================================ decode path ================================
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Static decode-cache geometry for one arch × shape."""
+    kind: str            # "chunked" | "ring" | "none"
+    max_len: int
+    kv_chunks: int = 16  # C — sharded over 'model' by the launcher
+
+    @property
+    def chunk_len(self) -> int:
+        return self.max_len // self.kv_chunks
+
+
+def cache_spec(cfg: ArchConfig, max_len: int, kv_chunks: int = 16,
+               ) -> CacheSpec:
+    if cfg.family == "ssm":
+        return CacheSpec("none", max_len)
+    if cfg.attention == "swa":
+        return CacheSpec("ring", min(cfg.window, max_len))
+    return CacheSpec("chunked", max_len, kv_chunks)
+
+
+def init_cache(cfg: ArchConfig, batch: int, spec: CacheSpec) -> Cache:
+    l, kv, hd, d = (cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_,
+                    cfg.d_model)
+    dt = _dtype(cfg)
+    c: Cache = {}
+    if spec.kind == "chunked":
+        shape = (l, batch, kv, spec.kv_chunks, spec.chunk_len, hd)
+        c["k"] = jnp.zeros(shape, dt)
+        c["v"] = jnp.zeros(shape, dt)
+    elif spec.kind == "ring":
+        shape = (l, batch, kv, spec.max_len, hd)
+        c["k"] = jnp.zeros(shape, dt)
+        c["v"] = jnp.zeros(shape, dt)
+    if cfg.family == "hybrid":
+        c["ssm"] = jnp.zeros((l, batch, d, cfg.ssm_state), jnp.float32)
+        c["conv"] = jnp.zeros((l, batch, ssm_lib.CONV_K - 1, d), dt)
+    if cfg.family == "ssm":
+        h = d // cfg.rwkv_head_dim
+        c["rwkv_state"] = jnp.zeros(
+            (l, batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32)
+        c["rwkv_shift"] = jnp.zeros((l, batch, d), dt)
+    return c
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, spec: CacheSpec):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, spec))
+
+
+def _attention_decode(x, ap, cfg: ArchConfig, window, cache_k, cache_v,
+                      cur_len, spec: CacheSpec):
+    """x: (B, d) one token. Returns (out (B, d), new_k, new_v)."""
+    b, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = pspec.constrain((x @ ap["wq"]).reshape(b, h, hd),
+                        pspec.DP, "model", None)
+    k = pspec.constrain((x @ ap["wk"]).reshape(b, kv, hd),
+                        pspec.DP, "model", None)
+    v = pspec.constrain((x @ ap["wv"]).reshape(b, kv, hd),
+                        pspec.DP, "model", None)
+    pos = jnp.full((1,), cur_len, jnp.int32)
+    q = apply_rope(q[:, :, None, :], pos, cfg.rope_theta)[:, :, 0]
+    k = apply_rope(k[:, :, None, :], pos, cfg.rope_theta)[:, :, 0]
+
+    if spec.kind == "ring":
+        slot = cur_len % spec.max_len
+        cache_k = lax.dynamic_update_slice(
+            cache_k, k[:, :, None], (0, 0, slot, 0))
+        cache_v = lax.dynamic_update_slice(
+            cache_v, v[:, :, None], (0, 0, slot, 0))
+        qpk = h // kv
+        qg = (q.reshape(b, kv, qpk, hd) * hd ** -0.5).astype(jnp.float32)
+        s = jnp.einsum("bgqd,bgsd->bgqs", qg,
+                       cache_k.astype(jnp.float32), optimize=True)
+        idx = jnp.arange(spec.max_len)
+        # ring slot ``idx`` holds global position cur_len - ((slot - idx) % W)
+        # (slot itself holds cur_len); entries from before position 0 are
+        # uninitialized and masked out. Window validity is automatic: the
+        # ring only ever holds the freshest W positions.
+        p_stored = cur_len - ((slot - idx) % spec.max_len)
+        valid = p_stored >= 0
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgqs,bgsd->bgqd", pr,
+                       cache_v.astype(jnp.float32), optimize=True)
+        o = o.reshape(b, h, hd).astype(x.dtype)
+    else:
+        ci = cur_len // spec.chunk_len
+        slot = cur_len % spec.chunk_len
+        cache_k = lax.dynamic_update_slice(
+            cache_k, k[:, :, None, None], (0, 0, ci, slot, 0))
+        cache_v = lax.dynamic_update_slice(
+            cache_v, v[:, :, None, None], (0, 0, ci, slot, 0))
+        o = chunked_decode_attention(q, cache_k, cache_v, cur_len + 1,
+                                     window=window, scale=hd ** -0.5)
+    return o.reshape(b, h * hd) @ ap["wo"], cache_k, cache_v
+
+
+def decode_block_apply(x, lp, cfg: ArchConfig, window, cache_l: dict,
+                       cur_len, spec: CacheSpec):
+    """One token through one block. x: (B, d)."""
+    new_cache = dict(cache_l)
+    xin = rms_norm(x, lp["ln1"])
+    if cfg.family == "ssm":
+        mix, st, sh = ssm_lib.rwkv6_decode(
+            xin, lp["rwkv"], cache_l["rwkv_state"], cache_l["rwkv_shift"],
+            head_dim=cfg.rwkv_head_dim)
+        new_cache["rwkv_state"], new_cache["rwkv_shift"] = st, sh
+    else:
+        a, ck, cv = _attention_decode(xin, lp["attn"], cfg, window,
+                                      cache_l["k"], cache_l["v"],
+                                      cur_len, spec)
+        new_cache["k"], new_cache["v"] = ck, cv
+        if cfg.family == "hybrid":
+            s, st, conv = ssm_lib.mamba_decode(
+                xin, lp["ssm"], cache_l["ssm"], cache_l["conv"])
+            new_cache["ssm"], new_cache["conv"] = st, conv
+            mix = 0.5 * (rms_norm(a, lp["ln_a"]) + rms_norm(s, lp["ln_s"]))
+        else:
+            mix = a
+    x = x + mix
+    ff, _ = _ffn(rms_norm(x, lp["ln2"])[:, None, :], lp, cfg,
+                 dropless=True, decode=True)
+    return x + ff[:, 0], new_cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Cache,
+                tokens: jax.Array, cur_len: jax.Array,
+                spec: CacheSpec) -> tuple[jax.Array, Cache]:
+    """One serve step: tokens (B, 1) int32 → (logits (B, V), new cache)."""
+    x = pspec.batch_first(jnp.take(params["embed"], tokens[:, 0], axis=0))
+    windows = layer_windows(cfg)
+
+    def layer_fn(x, scanned):
+        lp, window, cache_l = scanned
+        x, new_cache_l = decode_block_apply(x, lp, cfg, window, cache_l,
+                                            cur_len, spec)
+        return pspec.batch_first(x), new_cache_l
+
+    x, new_cache = lax.scan(layer_fn, x,
+                            (params["layers"], windows, cache))
+    x = rms_norm(x, params["final_norm"])
+    logits = pspec.constrain(x @ params["lm_head"], pspec.DP, "model")
+    return logits, new_cache

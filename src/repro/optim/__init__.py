@@ -1,0 +1,5 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptimConfig, apply_updates, global_norm, init_opt_state, lr_schedule,
+    opt_state_shapes)
+from repro.optim.compression import (  # noqa: F401
+    compressed_psum, compressed_psum_tree, compressed_psum_with_feedback)

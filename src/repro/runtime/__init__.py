@@ -1,0 +1,3 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    HeartbeatMonitor, ResilientLoopConfig, ResilientTrainLoop,
+    StragglerDetector)

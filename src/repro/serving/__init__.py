@@ -1,0 +1,2 @@
+from repro.serving.engine import (  # noqa: F401
+    Request, ServeEngine, make_serve_step, pick_kv_chunks)

@@ -1,0 +1,97 @@
+"""Batched serving engine: continuous prefill → decode with sharded caches.
+
+``make_serve_step`` builds the jit-able single-token step the dry-run lowers
+for ``decode_32k`` / ``long_500k``; ``ServeEngine`` is the runnable engine
+used by the examples — batched requests, prefill-into-cache, greedy/top-k
+sampling, per-request completion tracking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
+from repro.training import sharding as shd
+
+
+def pick_kv_chunks(cfg: ArchConfig, mesh: Mesh, batch: int,
+                   max_len: int) -> int:
+    """Chunk count for the split-KV decode cache: the model axis when the
+    batch carries the DP axes, every mesh axis when batch is unshardable
+    (long-context batch=1)."""
+    model = mesh.shape.get("model", 1)
+    dp = shd.axis_size(mesh, shd.dp_axes(mesh))
+    chunks = model if (batch % dp == 0 and batch > 1) else model * dp
+    while chunks > 1 and max_len % chunks:
+        chunks //= 2
+    return max(1, chunks)
+
+
+def make_serve_step(cfg: ArchConfig, spec: tfm.CacheSpec) -> Callable:
+    """serve_step(params, cache, tokens (B,1), cur_len) → (logits, cache)."""
+    def serve_step(params, cache, tokens, cur_len):
+        return tfm.decode_step(params, cfg, cache, tokens, cur_len, spec)
+    return serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Minimal batched engine: pads a request batch to a common prompt
+    length, prefills once, decodes greedily until every request finishes."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_len: int = 256,
+                 kv_chunks: int = 4, temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.spec = tfm.cache_spec(cfg, max_len=max_len,
+                                   kv_chunks=kv_chunks)
+        self.temperature = temperature
+        self._decode = jax.jit(make_serve_step(cfg, self.spec))
+        self._prefill = jax.jit(
+            lambda p, b: tfm.prefill_forward(p, cfg, b, self.spec))
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.temperature).astype(jnp.int32)
+
+    def generate(self, requests: Sequence[Request],
+                 seed: int = 0) -> list[Request]:
+        reqs = list(requests)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = jnp.asarray(
+            [([0] * (plen - len(r.prompt))) + r.prompt for r in reqs],
+            jnp.int32)
+        logits, cache = self._prefill(self.params, {"tokens": toks})
+        key = jax.random.key(seed)
+        cur = jnp.asarray(plen - 1, jnp.int32)
+        next_tok = self._sample(logits[:, -1], key)
+        max_new = max(r.max_new_tokens for r in reqs)
+        for step in range(max_new):
+            for i, r in enumerate(reqs):
+                if not r.done and step < r.max_new_tokens:
+                    r.out.append(int(next_tok[i]))
+                    if step + 1 >= r.max_new_tokens:
+                        r.done = True
+            if all(r.done for r in reqs):
+                break
+            cur = cur + 1
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache,
+                                         next_tok[:, None], cur)
+            next_tok = self._sample(logits, sub)
+        return reqs

@@ -1,0 +1,4 @@
+from repro.training.train_step import (  # noqa: F401
+    TrainStepConfig, init_state, make_train_step, state_shapes,
+    state_shardings)
+from repro.training import sharding  # noqa: F401

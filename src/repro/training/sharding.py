@@ -1,0 +1,225 @@
+"""Logical sharding rules with divisibility fallback (MaxText-style).
+
+Rules are keyed on parameter path + dim semantics. Every rule is filtered
+through ``safe_spec``: an axis that does not divide its dim is dropped for
+that tensor (partial replication), so all ten architectures — with head
+counts 0/15/16/25/32/48/64/96 and kv heads 5/8/16 — shard without
+special-casing.
+
+Layout summary (mesh axes ``pod``/``data``/``model``):
+
+* batch dims            → (pod, data)          [pure DP across pods]
+* vocab / embed rows    → model
+* attention q-projection cols (H·hd) and MLP hidden → model   [TP]
+* MoE expert dim        → model                 [EP]
+* param non-TP dim      → data when cfg.fsdp    [FSDP/ZeRO-3]
+* decode KV chunk dim   → model (batch-shardable case) or every axis
+                          (batch=1 long-context case)
+* optimizer moments mirror their parameter specs (int8 scales replicated)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def safe_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop axis names that do not evenly divide their dimension."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        keep = []
+        size = shape[i] if i < len(shape) else 1
+        for a in axes:
+            n = mesh.shape[a]
+            if size % n == 0 and n > 1:
+                keep.append(a)
+                size //= n
+        out.append(tuple(keep) if len(keep) > 1 else
+                   (keep[0] if keep else None))
+    return P(*out)
+
+
+def _param_rule(path: str, ndim: int, cfg: ArchConfig,
+                model_size: int = 1) -> P:
+    """Logical spec before divisibility filtering. Paths are '/'-joined."""
+    fs = "data" if cfg.fsdp else None
+    leaf = path.split("/")[-1]
+    if "moe" in path and "shared" not in path:
+        # E % model == 0 → expert parallelism over the model axis;
+        # otherwise (mixtral: 8 experts on a 16-wide axis) fall back to
+        # per-expert tensor parallelism: shard the expert FFN hidden dim.
+        ep = cfg.num_experts % max(1, model_size) == 0
+        if leaf == "router":
+            return P(None, None, "model") if ep else P(None, None, None)
+        if leaf in ("w1", "w3"):
+            return (P(None, "model", fs, None) if ep
+                    else P(None, None, fs, "model"))
+        if leaf == "w2":
+            return (P(None, "model", None, fs) if ep
+                    else P(None, None, "model", fs))
+    if leaf == "embed":
+        return P("model", fs)
+    if leaf in ("lm_head", "head"):
+        return P(fs, "model")
+    if leaf == "wq":
+        return P(None, fs, "model")
+    if leaf in ("wk", "wv"):
+        # §Perf iteration N1: column-sharding GQA k/v projections whose
+        # kv_heads don't divide the model axis splits heads mid-boundary
+        # and forces per-layer resharding; replicate the (small) weights
+        # so k/v activations stay model-replicated.
+        if cfg.num_kv_heads % max(1, model_size) == 0:
+            return P(None, fs, "model")
+        return P(None, fs, None)
+    if leaf == "wo":
+        return P(None, "model", fs)
+    if "shared" in path and leaf in ("w1", "w3"):
+        return P(None, fs, "model")
+    if "shared" in path and leaf == "w2":
+        return P(None, "model", fs)
+    if leaf in ("w1", "w3"):            # dense mlp (L, d, ff)
+        return P(None, fs, "model")
+    if leaf == "w2":                    # (L, ff, d)
+        return P(None, "model", fs)
+    if leaf in ("w_in",):               # mamba (L, d, 2d_i)
+        return P(None, fs, "model")
+    if leaf in ("w_out",):              # (L, d_i, d)
+        return P(None, "model", fs)
+    if leaf in ("w_r", "w_k", "w_v", "w_w", "w_g"):   # rwkv (L, d, d)
+        return P(None, fs, "model")
+    if leaf == "frontend_proj":
+        return P(None, None)
+    return P(*([None] * ndim))          # norms, biases, small projections
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, abstract_params) -> Any:
+    """Pytree of PartitionSpec matching ``abstract_params``."""
+    model_size = mesh.shape.get("model", 1)
+
+    def spec_of(path, leaf):
+        raw = _param_rule(_path_str(path), leaf.ndim, cfg, model_size)
+        # pad/truncate to leaf rank
+        entries = list(raw) + [None] * leaf.ndim
+        return safe_spec(leaf.shape, P(*entries[:leaf.ndim]), mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_of, abstract_params)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, abstract_params):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, abstract_params),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(cfg: ArchConfig, mesh: Mesh, abstract_opt_state,
+                    p_specs) -> Any:
+    """Moments mirror param specs; int8 scale scalars replicate."""
+    def mirror(moments):
+        def spec_of(path, leaf):
+            ps = _lookup(p_specs, path, leaf)
+            return safe_spec(leaf.shape, ps, mesh)
+        return jax.tree_util.tree_map_with_path(spec_of, moments)
+
+    def _lookup(specs, path, leaf):
+        # path may have trailing 'q'/'scale' for int8 moments
+        node = specs
+        for p in path:
+            key = p.key if hasattr(p, "key") else getattr(p, "idx", None)
+            if isinstance(node, dict) and key in node:
+                node = node[key]
+            elif isinstance(node, (list, tuple)) and isinstance(key, int):
+                node = node[key]
+            else:
+                break
+        if isinstance(node, P):
+            if leaf.ndim == len(node):
+                return node
+            return P(*([None] * leaf.ndim))
+        return P(*([None] * leaf.ndim))
+
+    return {"m": mirror(abstract_opt_state["m"]),
+            "v": mirror(abstract_opt_state["v"]),
+            "step": P()}
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch_shapes) -> Any:
+    dp = dp_axes(mesh)
+    def spec_of(path, leaf):
+        return safe_spec(leaf.shape, P(dp, *([None] * (leaf.ndim - 1))),
+                         mesh)
+    return jax.tree_util.tree_map_with_path(spec_of, batch_shapes)
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, cache_shapes, batch: int):
+    """Decode-cache layout (DESIGN.md §5): batch→DP; chunk dim C→model
+    (or every axis when batch is unshardable); ring window→model;
+    SSM/RWKV states: batch→DP, feature dims→model."""
+    dp = dp_axes(mesh)
+    batch_shardable = batch % axis_size(mesh, dp) == 0 and batch > 1
+    chunk_axes = "model" if batch_shardable else tuple(
+        list(dp) + ["model"])
+    bspec = dp if batch_shardable else None
+
+    def spec_of(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        if name in ("k", "v"):
+            if leaf.ndim == 6:    # chunked (L,B,Hkv,C,Sc,hd)
+                raw = P(None, bspec, None, chunk_axes, None, None)
+            else:                 # ring (L,B,Hkv,W,hd)
+                raw = P(None, bspec, None, "model", None)
+        elif name == "ssm":       # (L,B,d_i,N)
+            raw = P(None, bspec, "model", None)
+        elif name == "conv":      # (L,B,K-1,d_i)
+            raw = P(None, bspec, None, "model")
+        elif name == "rwkv_state":  # (L,B,h,dk,dv)
+            raw = P(None, bspec, "model", None, None)
+        elif name == "rwkv_shift":  # (L,B,d)
+            raw = P(None, bspec, "model")
+        else:
+            raw = P(*([None] * leaf.ndim))
+        return safe_spec(leaf.shape, raw, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_shapes)
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

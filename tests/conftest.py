@@ -1,0 +1,28 @@
+"""Test harness config.
+
+Multipath-transfer and collective tests need a handful of devices; we give
+the CPU platform 8 (NOT 512 — the production-mesh dry-run manages its own
+device count in its own process, per the launcher contract).
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def dev_mesh():
+    """1-D 8-device mesh used by transfer-engine tests."""
+    return jax.sharding.Mesh(jax.devices(), ("dev",))
+
+
+@pytest.fixture(scope="session")
+def dp_tp_mesh():
+    """2-D (data=2, model=4) mesh used by model-sharding tests."""
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, load_all
+from repro.configs.shapes import SHAPES, cells, skip_reason
+from repro.models import transformer as tfm
+
+load_all()
+ALL = sorted(REGISTRY)
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.RandomState(seed)
+    if cfg.frontend == "audio":
+        batch = {"features": jnp.asarray(
+            rng.randn(b, s, cfg.frontend_dim).astype(np.float32))}
+    else:
+        batch = {"tokens": jnp.asarray(
+            rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    batch["labels"] = jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_smoke_forward_and_loss(name):
+    cfg = REGISTRY[name].reduced()
+    params = tfm.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+    logits, aux = tfm.forward(params, cfg, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss = tfm.loss_fn(params, cfg, batch)
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_smoke_train_step(name):
+    from repro.optim import OptimConfig
+    from repro.training import TrainStepConfig, init_state, make_train_step
+    cfg = REGISTRY[name].reduced()
+    opt = OptimConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10)
+    step = jax.jit(make_train_step(cfg, TrainStepConfig(), opt))
+    state = init_state(cfg, opt)
+    state, metrics = step(state, _batch(cfg))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params changed and stayed finite
+    leaf = jax.tree.leaves(state["params"])[0]
+    assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", [
+    "llama3_8b", "mixtral_8x22b", "rwkv6_1_6b", "hymba_1_5b",
+    "gemma3_27b", "kimi_k2_1t_a32b",
+])
+def test_decode_matches_forward(name):
+    cfg = dataclasses.replace(REGISTRY[name].reduced(),
+                              capacity_factor=8.0)
+    params = tfm.init_params(jax.random.key(1), cfg)
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.key(2), (b, s), 0,
+                              cfg.vocab_size)
+    full, _ = tfm.forward(params, cfg, {"tokens": toks})
+    spec = tfm.cache_spec(cfg, max_len=s, kv_chunks=4)
+    cache = tfm.init_cache(cfg, b, spec)
+    errs = []
+    step = jax.jit(lambda c, t, i: tfm.decode_step(
+        params, cfg, c, t, i, spec))
+    for t in range(s):
+        lg, cache = step(cache, toks[:, t:t + 1], jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(lg - full[:, t, :]))))
+    assert max(errs) < 2e-3
+
+
+@pytest.mark.parametrize("name", ["llama3_8b", "mixtral_8x22b",
+                                  "rwkv6_1_6b", "hymba_1_5b"])
+def test_prefill_then_decode_matches_forward(name):
+    cfg = dataclasses.replace(REGISTRY[name].reduced(),
+                              capacity_factor=8.0)
+    params = tfm.init_params(jax.random.key(1), cfg)
+    b, sp, s = 2, 8, 14
+    toks = jax.random.randint(jax.random.key(3), (b, s), 0,
+                              cfg.vocab_size)
+    full, _ = tfm.forward(params, cfg, {"tokens": toks})
+    spec = tfm.cache_spec(cfg, max_len=s + 2, kv_chunks=4)
+    pl, cache = tfm.prefill_forward(params, cfg,
+                                    {"tokens": toks[:, :sp]}, spec)
+    errs = [float(jnp.max(jnp.abs(pl - full[:, :sp])))]
+    for t in range(sp, s):
+        lg, cache = tfm.decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                    jnp.int32(t), spec)
+        errs.append(float(jnp.max(jnp.abs(lg - full[:, t, :]))))
+    assert max(errs) < 2e-3
+
+
+def test_gemma_local_global_pattern():
+    cfg = REGISTRY["gemma3_27b"]
+    w = np.asarray(tfm.layer_windows(cfg))
+    assert len(w) == 62
+    assert (w == -1).sum() == 10          # every 6th layer global
+    assert (w == cfg.window).sum() == 52
+
+
+def test_param_counts_match_published():
+    expect = {"llama3_8b": 8.0e9, "gemma3_27b": 28e9,
+              "nemotron_4_340b": 341e9, "chameleon_34b": 34e9,
+              "kimi_k2_1t_a32b": 1.04e12, "mixtral_8x22b": 141e9}
+    for name, n in expect.items():
+        got = REGISTRY[name].param_count()
+        assert abs(got - n) / n < 0.08, (name, got, n)
+
+
+def test_shape_cell_skip_table():
+    """40 cells; 7 skips per DESIGN.md §4."""
+    table = cells([REGISTRY[k] for k in ALL])
+    assert len(table) == 40
+    skips = {(a.name, s.name) for a, s, r in table if r}
+    assert skips == {
+        ("hubert_xlarge", "decode_32k"), ("hubert_xlarge", "long_500k"),
+        ("nemotron_4_340b", "long_500k"), ("llama3_8b", "long_500k"),
+        ("smollm_360m", "long_500k"), ("chameleon_34b", "long_500k"),
+        ("kimi_k2_1t_a32b", "long_500k"),
+    }
+
+
+def test_ring_cache_wraparound():
+    """SWA ring cache correctness past the wrap point."""
+    cfg = REGISTRY["mixtral_8x22b"].reduced()  # window 8
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = tfm.init_params(jax.random.key(4), cfg)
+    b, s = 1, 20                                # > 2x window
+    toks = jax.random.randint(jax.random.key(5), (b, s), 0,
+                              cfg.vocab_size)
+    full, _ = tfm.forward(params, cfg, {"tokens": toks})
+    spec = tfm.cache_spec(cfg, max_len=s, kv_chunks=4)
+    assert spec.kind == "ring" and spec.max_len == cfg.window
+    cache = tfm.init_cache(cfg, b, spec)
+    errs = []
+    for t in range(s):
+        lg, cache = tfm.decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                    jnp.int32(t), spec)
+        errs.append(float(jnp.max(jnp.abs(lg - full[:, t, :]))))
+    assert max(errs) < 2e-3

@@ -1,0 +1,127 @@
+"""Tests for the 2-D pipelining engine and the analytic time model —
+these encode the paper's measured effects as executable assertions."""
+
+import pytest
+
+from repro.core import (HOST, PathPlanner, Topology, build_schedule,
+                        effective_bandwidth_gbps, estimate_transfer_time_s,
+                        launch_overhead_ns, windowed_bandwidth_gbps)
+
+MiB = 1 << 20
+
+
+@pytest.fixture
+def topo():
+    return Topology.full_mesh(4)
+
+
+@pytest.fixture
+def planner(topo):
+    return PathPlanner(topo)
+
+
+def test_schedule_round_robin(planner):
+    plan = planner.plan(0, 1, 32 * MiB, max_paths=2, num_chunks=4)
+    sched = build_schedule(plan)
+    # first wave hits every path once before any second chunk
+    first_wave = [t.path_idx for t in sched[:plan.num_paths]]
+    assert sorted(first_wave) == list(range(plan.num_paths))
+    # per-path chunk order is increasing
+    per_path = {}
+    for t in sched:
+        assert t.chunk_idx == per_path.get(t.path_idx, 0)
+        per_path[t.path_idx] = t.chunk_idx + 1
+
+
+def test_multipath_speedup_matches_paper_band(planner, topo):
+    """Paper Fig. 6: 3 paths reach 2.5–3× over single path at ≥32 MB."""
+    big = 64 * MiB
+    t1 = estimate_transfer_time_s(planner.plan(0, 1, big, max_paths=1),
+                                  topo)
+    t3 = estimate_transfer_time_s(planner.plan(0, 1, big, max_paths=3),
+                                  topo)
+    assert 2.0 < t1 / t3 < 3.2
+
+
+def test_host_path_marginal_unidirectional(planner, topo):
+    """Paper §5.2 obs. 3: host path adds ≤15% on top of 3 GPU paths."""
+    big = 64 * MiB
+    t3 = estimate_transfer_time_s(planner.plan(0, 1, big, max_paths=3),
+                                  topo)
+    t4 = estimate_transfer_time_s(
+        planner.plan(0, 1, big, max_paths=4, include_host=True), topo)
+    assert t4 <= t3 * 1.001
+    assert t3 / t4 < 1.15
+
+
+def test_host_path_hurts_bidirectional(planner, topo):
+    """Paper §5.3 obs. 6: both directions share host capacity — the host
+    path degrades BIBW while GPU-only multipath does not."""
+    big = 64 * MiB
+    fwd_gpu = planner.plan(0, 1, big, max_paths=3)
+    rev_gpu = planner.plan(1, 0, big, max_paths=3)
+    t_gpu = estimate_transfer_time_s(fwd_gpu, topo,
+                                     concurrent_plans=[rev_gpu])
+    fwd_h = planner.plan(0, 1, big, max_paths=4, include_host=True)
+    rev_h = planner.plan(1, 0, big, max_paths=4, include_host=True)
+    t_host = estimate_transfer_time_s(fwd_h, topo,
+                                      concurrent_plans=[rev_h])
+    # per-message time with host staging under bidirectional load is worse
+    assert t_host > t_gpu * 0.999
+
+
+def test_compiled_plan_launch_cheaper(planner):
+    plan = planner.plan(0, 1, 128 * MiB, max_paths=3)
+    no_graph = launch_overhead_ns(plan, compiled_plan=False)
+    graph = launch_overhead_ns(plan, compiled_plan=True)
+    assert graph < no_graph
+
+
+def test_first_iteration_instantiation_dominates(planner):
+    """Paper Fig. 13: first-iteration cost is dominated by instantiation
+    and grows with node count."""
+    small = planner.plan(0, 1, 4 * MiB, max_paths=2, num_chunks=2)
+    big = planner.plan(0, 1, 256 * MiB, max_paths=3, num_chunks=8)
+    first_small = launch_overhead_ns(small, compiled_plan=True,
+                                     first_iteration=True)
+    first_big = launch_overhead_ns(big, compiled_plan=True,
+                                   first_iteration=True)
+    steady_big = launch_overhead_ns(big, compiled_plan=True)
+    assert first_big > first_small
+    assert first_big > 10 * steady_big
+
+
+def test_window_size_effect(planner, topo):
+    """Paper §5.3 obs. 2/3: BW grows with window size, and compiled plans
+    benefit more at larger windows."""
+    plan = planner.plan(0, 1, 8 * MiB, max_paths=3)
+    bw = {}
+    for w in (1, 4, 16):
+        bw[w] = windowed_bandwidth_gbps(plan, topo, window=w,
+                                        compiled_plan=True)
+    assert bw[1] < bw[4] <= bw[16]
+    nog = windowed_bandwidth_gbps(plan, topo, window=16,
+                                  compiled_plan=False)
+    assert bw[16] >= nog
+
+
+def test_small_message_graph_overhead_negates(planner, topo):
+    """Paper §5.3 obs. 4: below ~8 MB the launch overhead negates the
+    multipath gain — single-path no-graph beats small multipath graphs."""
+    small = 256 * 1024
+    single = PathPlanner(topo, multipath_threshold=2 * MiB).plan(
+        0, 1, small)
+    t_single = estimate_transfer_time_s(single, topo, compiled_plan=False)
+    forced = PathPlanner(topo, multipath_threshold=0).plan(
+        0, 1, small, max_paths=3, num_chunks=8)
+    t_forced_first = estimate_transfer_time_s(
+        forced, topo, compiled_plan=True, first_iteration=True)
+    assert t_forced_first > t_single
+
+
+def test_bandwidth_below_aggregate_limit(planner, topo):
+    plan = planner.plan(0, 1, 256 * MiB, max_paths=3)
+    bw = effective_bandwidth_gbps(plan, topo)
+    agg = sum(p.route.bottleneck_gbps for p in plan.paths)
+    assert bw < agg
+    assert bw > 0.5 * agg

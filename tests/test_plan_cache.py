@@ -1,0 +1,78 @@
+"""TransferPlanCache: LRU behaviour + lifecycle instrumentation."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import TransferPlanCache, compile_plan
+
+
+def _dummy_plan(key, n=4):
+    return compile_plan(key, lambda x: x * 2.0,
+                        (jnp.zeros((n,), jnp.float32),), num_nodes=n)
+
+
+def test_get_or_build_builds_once():
+    cache = TransferPlanCache(capacity=4)
+    calls = []
+
+    def builder():
+        calls.append(1)
+        return _dummy_plan("k")
+
+    a = cache.get_or_build("k", builder)
+    b = cache.get_or_build("k", builder)
+    assert a is b and len(calls) == 1
+    assert cache.stats()["hits"] == 1
+    assert cache.stats()["misses"] == 1
+
+
+def test_lru_eviction_order():
+    cache = TransferPlanCache(capacity=2)
+    cache.put("a", _dummy_plan("a"))
+    cache.put("b", _dummy_plan("b"))
+    cache.get("a")                  # refresh a
+    cache.put("c", _dummy_plan("c"))  # evicts b (least recently used)
+    assert "a" in cache and "c" in cache and "b" not in cache
+    assert cache.evictions == 1
+
+
+def test_eviction_forces_reinstantiation():
+    cache = TransferPlanCache(capacity=1)
+    builds = []
+
+    def builder(k):
+        def b():
+            builds.append(k)
+            return _dummy_plan(k)
+        return b
+
+    cache.get_or_build("a", builder("a"))
+    cache.get_or_build("b", builder("b"))   # evicts a
+    cache.get_or_build("a", builder("a"))   # must rebuild
+    assert builds == ["a", "b", "a"]
+
+
+def test_capacity_env(monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE_SIZE", "3")
+    assert TransferPlanCache().capacity == 3
+
+
+def test_lifecycle_stages_recorded():
+    plan = _dummy_plan("x", n=8)
+    life = plan.lifecycle
+    assert life.trace_ns > 0 and life.lower_ns > 0 and life.compile_ns > 0
+    assert life.num_nodes == 8
+    assert life.launches == 0
+    out = plan(jnp.ones((8,), jnp.float32))
+    assert out[0] == 2.0
+    assert plan.lifecycle.launches == 1
+    assert plan.lifecycle.mean_launch_ns > 0
+
+
+def test_compile_dominates_build():
+    """Paper Fig. 13: instantiation (compile) is the dominant one-time
+    cost for any realistic graph."""
+    plan = _dummy_plan("y", n=64)
+    life = plan.lifecycle
+    assert life.compile_ns > life.trace_ns * 0.1   # robust, not flaky
+    assert life.build_ns == life.trace_ns + life.lower_ns + life.compile_ns

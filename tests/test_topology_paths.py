@@ -1,0 +1,132 @@
+"""Unit + property tests for topology, route enumeration, and planning."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (HOST, PathPlanner, Topology, build_schedule,
+                        estimate_transfer_time_s, validate_plan)
+
+MiB = 1 << 20
+
+
+@pytest.fixture
+def beluga():
+    return Topology.full_mesh(4)  # 2 NVLink sublinks/pair + PCIe host
+
+
+@pytest.fixture
+def torus():
+    return Topology.torus2d(4, 4)
+
+
+def test_full_mesh_links_aggregate(beluga):
+    # two 25 GB/s sublinks aggregate to one 50 GB/s logical link
+    assert beluga.link(0, 1).bandwidth_gbps == pytest.approx(50.0)
+    assert beluga.link(0, HOST).kind == "pcie"
+
+
+def test_route_enumeration_direct_first(beluga):
+    planner = PathPlanner(beluga)
+    routes = planner.enumerate_routes(0, 1)
+    assert routes[0].kind == "direct"
+    assert {r.via for r in routes[1:]} == {2, 3}
+
+
+def test_route_enumeration_host(beluga):
+    planner = PathPlanner(beluga)
+    routes = planner.enumerate_routes(0, 1, include_host=True)
+    assert routes[-1].kind == "staged_host"   # host sorts last (lowest bw)
+
+
+def test_torus_routes(torus):
+    planner = PathPlanner(torus)
+    # neighbours (0, 1): direct + 2-hop staged routes exist
+    routes = planner.enumerate_routes(0, 1)
+    assert routes[0].kind == "direct"
+    assert len(routes) >= 2
+
+
+def test_small_message_single_path(beluga):
+    planner = PathPlanner(beluga)   # threshold 2 MiB (paper §5.3)
+    plan = planner.plan(0, 1, 1 * MiB)
+    assert plan.num_paths == 1
+    assert plan.paths[0].route.kind == "direct"
+
+
+def test_large_message_multipath(beluga):
+    planner = PathPlanner(beluga)
+    plan = planner.plan(0, 1, 64 * MiB, max_paths=3)
+    assert plan.num_paths == 3
+    validate_plan(plan)
+
+
+def test_shares_proportional_to_bandwidth(beluga):
+    planner = PathPlanner(beluga)
+    plan = planner.plan(0, 1, 64 * MiB, max_paths=4, include_host=True)
+    # host share must be the smallest (12 vs 50 GB/s routes)
+    host = [p for p in plan.paths if p.route.via == HOST]
+    others = [p for p in plan.paths if p.route.via != HOST]
+    assert host and all(host[0].nbytes < o.nbytes for o in others)
+
+
+def test_plan_rejects_bad_granularity(beluga):
+    planner = PathPlanner(beluga)
+    with pytest.raises(ValueError):
+        planner.plan(0, 1, 10 * MiB + 1, granularity=4)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    nbytes=st.integers(1, 512 * MiB),
+    max_paths=st.integers(1, 4),
+    chunks=st.one_of(st.none(), st.integers(1, 16)),
+    gran_pow=st.integers(0, 3),
+    host=st.booleans(),
+    src=st.integers(0, 3), dst=st.integers(0, 3),
+)
+def test_plan_invariants_property(nbytes, max_paths, chunks, gran_pow,
+                                  host, src, dst):
+    """§4.5 integrity invariants hold for arbitrary plans (hypothesis)."""
+    if src == dst:
+        return
+    gran = 2 ** gran_pow
+    nbytes = max(gran, nbytes // gran * gran)
+    topo = Topology.full_mesh(4)
+    planner = PathPlanner(topo)
+    plan = planner.plan(src, dst, nbytes, max_paths=max_paths,
+                        include_host=host, num_chunks=chunks,
+                        granularity=gran)
+    validate_plan(plan)   # disjoint cover + link exclusivity + connectivity
+    sched = build_schedule(plan)
+    assert sum(t.nbytes for t in sched) == nbytes
+    # alignment: every chunk boundary is granularity-aligned except the tail
+    for t in sched:
+        assert t.offset % gran == 0
+
+
+def test_tuner_prefers_multipath_for_large(beluga):
+    planner = PathPlanner(beluga)
+    best = planner.tune(0, 1, 128 * MiB)
+    assert best.num_paths >= 2
+    t_single = estimate_transfer_time_s(
+        planner.plan(0, 1, 128 * MiB, max_paths=1), beluga)
+    t_best = estimate_transfer_time_s(best, beluga)
+    assert t_best < t_single
+
+
+def test_tuner_prefers_single_path_for_tiny(beluga):
+    planner = PathPlanner(beluga, multipath_threshold=0)
+    best = planner.tune(0, 1, 64 * 1024,
+                        chunk_counts=(1, 2, 4),
+                        path_counts=(1, 2, 3))
+    assert best.num_paths == 1   # launch overhead dominates
+
+
+def test_env_overrides(monkeypatch, beluga):
+    monkeypatch.setenv("REPRO_MP_MAX_PATHS", "2")
+    monkeypatch.setenv("REPRO_MP_CHUNK_BYTES", str(2 * MiB))
+    planner = PathPlanner(beluga)
+    assert planner.max_paths == 2
+    assert planner.chunk_bytes == 2 * MiB
+    plan = planner.plan(0, 1, 64 * MiB)
+    assert plan.num_paths == 2
