@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (MultiPathTransfer, PathPlanner, Topology,
-                        TransferPlanCache)
+from repro.comm import CommConfig, CommSession
+from repro.core import Topology
 
 
 def run() -> list[Row]:
@@ -21,14 +21,12 @@ def run() -> list[Row]:
     rows = []
     # node count grows with chunk count (paper: with message size)
     for chunks in (1, 2, 4, 8, 16):
-        eng = MultiPathTransfer(
-            mesh,
-            topology=topo,
-            planner=PathPlanner(topo, multipath_threshold=64),
-            cache=TransferPlanCache(capacity=8))
+        sess = CommSession(
+            CommConfig(multipath_threshold=64, cache_capacity=8),
+            mesh=mesh, topology=topo)
         nelems = 1 << 16
-        compiled, plan = eng.compiled_for(0, 1, nelems, max_paths=3,
-                                          num_chunks=chunks)
+        compiled, plan = sess.compiled_for(0, 1, nelems, max_paths=3,
+                                           num_chunks=chunks)
         life = compiled.lifecycle
         rows.append(Row(
             f"plan_lifecycle/nodes{plan.num_nodes}/trace",

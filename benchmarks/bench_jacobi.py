@@ -9,7 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import PathPlanner, Topology, estimate_transfer_time_s
+from repro.comm import CommSession
+from repro.compat import shard_map
+from repro.core import Topology, estimate_transfer_time_s
 from repro.core.halo import jacobi_step
 
 
@@ -23,8 +25,8 @@ def _solver(mesh, multipath, iters=10):
     def local(u):
         return body(u[0])[None]
 
-    return jax.jit(jax.shard_map(local, mesh=mesh, in_specs=P("dev"),
-                                 out_specs=P("dev"), check_vma=False))
+    return jax.jit(shard_map(local, mesh=mesh, in_specs=P("dev"),
+                             out_specs=P("dev"), check_vma=False))
 
 
 def run() -> list[Row]:
@@ -39,7 +41,7 @@ def run() -> list[Row]:
 
     # paper-scale analytic model: 4 ranks, vertical dim 8, horizontal 2^23..2^30
     topo = Topology.full_mesh(4)
-    planner = PathPlanner(topo)
+    sess = CommSession(topology=topo)
     for log2w in (23, 26, 28, 30):
         total = 8 * (1 << log2w) * 4          # fp32 domain bytes
         boundary = total // 4 // (1 << 5)     # 256MB at 8GB (paper §5.4)
@@ -49,10 +51,10 @@ def run() -> list[Row]:
         nbytes = 8 * 4 * (1 << log2w) // 4 // 8  # col-block bytes per rank
         nbytes = max(nbytes, 4096)
         t1 = 2 * estimate_transfer_time_s(
-            planner.plan(0, 1, nbytes, max_paths=1), topo,
+            sess.plan(0, 1, nbytes, max_paths=1), topo,
             compiled_plan=False)
         t2 = 2 * estimate_transfer_time_s(
-            planner.plan(0, 1, nbytes, max_paths=2, num_chunks=4), topo,
+            sess.plan(0, 1, nbytes, max_paths=2, num_chunks=4), topo,
             compiled_plan=True)
         compute = (total / 4) * 5 / (819e9)   # 5-point sweep reads
         sp = (compute + t1) / (compute + t2)

@@ -4,22 +4,23 @@ contend on host staging capacity), while GPU-path striping does not."""
 
 from benchmarks.common import MiB, Row, SIZES_OMB
 
-from repro.core import PathPlanner, Topology, estimate_transfer_time_s
+from repro.comm import CommSession
+from repro.core import Topology, estimate_transfer_time_s
 
 
 def run() -> list[Row]:
     rows = []
     for cluster, sub in (("beluga", 2), ("narval", 4)):
         topo = Topology.full_mesh(4, sublinks_per_pair=sub, name=cluster)
-        planner = PathPlanner(topo)
+        sess = CommSession(topology=topo)
         for mb in SIZES_OMB:
             nbytes = mb * MiB
             for cname, kw in (("1path", dict(max_paths=1)),
                               ("3path", dict(max_paths=3)),
                               ("3path+host", dict(max_paths=4,
                                                   include_host=True))):
-                fwd = planner.plan(0, 1, nbytes, **kw)
-                rev = planner.plan(1, 0, nbytes, **kw)
+                fwd = sess.plan(0, 1, nbytes, **kw)
+                rev = sess.plan(1, 0, nbytes, **kw)
                 t = estimate_transfer_time_s(fwd, topo,
                                              concurrent_plans=[rev])
                 bibw = 2 * nbytes / t / 1e9

@@ -3,7 +3,8 @@
 
 from benchmarks.common import MiB, Row, SIZES_OMB
 
-from repro.core import PathPlanner, Topology, windowed_bandwidth_gbps
+from repro.comm import CommSession
+from repro.core import Topology, windowed_bandwidth_gbps
 
 CLUSTERS = {
     "beluga": Topology.full_mesh(4, sublinks_per_pair=2, name="beluga4"),
@@ -14,10 +15,10 @@ CLUSTERS = {
 def run() -> list[Row]:
     rows = []
     for cluster, topo in CLUSTERS.items():
-        planner = PathPlanner(topo)
+        sess = CommSession(topology=topo)
         for mb in SIZES_OMB:
-            plan3 = planner.plan(0, 1, mb * MiB, max_paths=3)
-            plan1 = planner.plan(0, 1, mb * MiB, max_paths=1)
+            plan3 = sess.plan(0, 1, mb * MiB, max_paths=3)
+            plan1 = sess.plan(0, 1, mb * MiB, max_paths=1)
             for w in (1, 4, 16):
                 for tag, plan in (("1path", plan1), ("3path", plan3)):
                     for graphs in (False, True):

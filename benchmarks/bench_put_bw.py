@@ -10,13 +10,13 @@ from benchmarks.common import EXEC_SIZES, MiB, Row, SIZES_PUT, timeit_us
 
 import jax.numpy as jnp
 
-from repro.core import (MultiPathTransfer, PathPlanner, Topology,
-                        effective_bandwidth_gbps)
+from repro.comm import CommSession
+from repro.core import Topology, effective_bandwidth_gbps
 
 
 def run() -> list[Row]:
     topo = Topology.full_mesh(4)             # Beluga: 4xV100, 2 NVLink/pair
-    planner = PathPlanner(topo)
+    sess = CommSession(topology=topo)
     rows = []
     for mb in SIZES_PUT:
         nbytes = mb * MiB
@@ -26,7 +26,7 @@ def run() -> list[Row]:
             "3path+host": dict(max_paths=4, include_host=True),
         }
         for cname, kw in configs.items():
-            plan = planner.plan(0, 1, nbytes, **kw)
+            plan = sess.plan(0, 1, nbytes, **kw)
             for graphs in (False, True):
                 bw = effective_bandwidth_gbps(plan, topo,
                                               compiled_plan=graphs)
@@ -35,19 +35,19 @@ def run() -> list[Row]:
                                 f"{bw:.1f}GB/s"))
     # speedup summary at the paper's headline point (>=32MB, 3 paths+host)
     base = effective_bandwidth_gbps(
-        planner.plan(0, 1, 512 * MiB, max_paths=1), topo,
+        sess.plan(0, 1, 512 * MiB, max_paths=1), topo,
         compiled_plan=False)
     best = effective_bandwidth_gbps(
-        planner.plan(0, 1, 512 * MiB, max_paths=4, include_host=True),
+        sess.plan(0, 1, 512 * MiB, max_paths=4, include_host=True),
         topo, compiled_plan=True)
     rows.append(Row("put_bw/512MiB/speedup_vs_single", 0.0,
                     f"{best / base:.2f}x(paper:2.95x)"))
 
     # real execution on the host mesh (engine correctness + dispatch cost)
-    eng = MultiPathTransfer(topology=Topology.full_mesh(8, with_host=False))
+    exec_sess = CommSession(topology=Topology.full_mesh(8, with_host=False))
     for mb in EXEC_SIZES:
         nelems = mb * MiB // 4
-        compiled, plan = eng.compiled_for(0, 1, nelems)
+        compiled, plan = exec_sess.compiled_for(0, 1, nelems)
         x = jnp.zeros((1, 1, 8, nelems), jnp.float32)
         us = timeit_us(compiled.compiled, x)
         rows.append(Row(f"put_bw_exec/{mb}MiB/3path", us,

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.halo import jacobi_step
 
 
@@ -39,8 +40,8 @@ def main():
                 return jacobi_step(u, "dev", multipath=multipath), None
             u, _ = jax.lax.scan(sweep, u[0], None, length=args.iters)
             return u[None]
-        return jax.jit(jax.shard_map(local, mesh=mesh, in_specs=P("dev"),
-                                     out_specs=P("dev"), check_vma=False))
+        return jax.jit(shard_map(local, mesh=mesh, in_specs=P("dev"),
+                                 out_specs=P("dev"), check_vma=False))
 
     for multipath in (False, True):
         f = solver(multipath)

@@ -1,4 +1,8 @@
-"""Quickstart: multi-path transfers with compiled plan caching.
+"""Quickstart: the unified comm session API (multi-path + plan caching).
+
+One ``CommSession`` owns the topology, the path policy, the planner, and
+the compiled-plan cache — every subsystem (training, serving, benchmarks)
+drives communication through it.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,39 +15,52 @@ os.environ.setdefault("XLA_FLAGS",
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (MultiPathTransfer, PathPlanner, Topology,
-                        build_schedule, effective_bandwidth_gbps,
+from repro.comm import CommConfig, CommSession
+from repro.core import (Topology, build_schedule, effective_bandwidth_gbps,
                         estimate_transfer_time_s)
 
 
 def main():
     # 1) describe the node: 4 GPUs, NVLink full mesh + PCIe host (Beluga)
-    topo = Topology.full_mesh(4)
-    planner = PathPlanner(topo)
+    #    and open a session on it (greedy bandwidth-proportional policy)
+    sess = CommSession(CommConfig(max_paths=4),
+                       topology=Topology.full_mesh(4))
+    topo = sess.topology
 
     # 2) plan a 64 MiB transfer GPU0 -> GPU1
-    plan = planner.plan(0, 1, 64 << 20, max_paths=3)
-    print(f"plan: {plan.num_paths} paths, {plan.num_nodes} copy nodes")
+    plan = sess.plan(0, 1, 64 << 20, max_paths=3)
+    print(f"plan: {plan.num_paths} paths, {plan.num_nodes} copy nodes "
+          f"(policy={sess.policy.name})")
     for pa in plan.paths:
         print(f"  {pa.route.kind:14s} via={pa.route.via} "
               f"share={pa.nbytes >> 20}MiB chunks={pa.num_chunks}")
     print(f"schedule: {len(build_schedule(plan))} chunk tasks")
 
     # 3) modeled bandwidth: single vs multi-path (paper Fig. 6)
-    single = planner.plan(0, 1, 64 << 20, max_paths=1)
+    single = sess.plan(0, 1, 64 << 20, max_paths=1)
     print(f"modeled: single {effective_bandwidth_gbps(single, topo):.0f} "
           f"GB/s -> multipath "
           f"{effective_bandwidth_gbps(plan, topo):.0f} GB/s "
           f"({estimate_transfer_time_s(single, topo) / estimate_transfer_time_s(plan, topo):.2f}x)")
 
-    # 4) execute for real on the host-device mesh, twice (cache hit)
-    eng = MultiPathTransfer(topology=Topology.full_mesh(8, with_host=False))
+    # 4) the offline tuner (paper §4.4) searches paths × chunks × host
+    best = sess.tune(0, 1, 64 << 20)
+    print(f"tuned: {best.num_paths} paths, {best.num_nodes} nodes")
+
+    # 5) execute for real on the host-device mesh, twice (cache hit)
+    run = CommSession(topology=Topology.full_mesh(8, with_host=False))
     msg = jnp.arange(1 << 20, dtype=jnp.float32)
-    out = eng.transfer(msg, 0, 5)
+    out = run.send(msg, 0, 5)
     assert np.array_equal(np.asarray(out), np.asarray(msg))
-    eng.transfer(msg, 0, 5)
-    print(f"executed transfer OK; plan cache: {eng.cache.stats()}")
-    key, compiled = next(iter(eng.cache._store.items()))
+    run.send(msg, 0, 5)
+
+    # 6) collectives ride the same session + plan cache
+    x = jnp.asarray(np.random.RandomState(0).randn(8, 16), jnp.float32)
+    gathered = run.all_gather(x)
+    assert np.allclose(np.asarray(gathered), np.asarray(x))
+    print(f"executed transfer + all-gather OK; "
+          f"plan cache: {run.stats()['cache']}")
+    key, compiled = next(iter(run.cache._store.items()))
     life = compiled.lifecycle
     print(f"lifecycle: trace {life.trace_ns/1e6:.1f}ms, "
           f"lower {life.lower_ns/1e6:.1f}ms, "

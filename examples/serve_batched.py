@@ -1,5 +1,6 @@
 """Batched serving demo: prefill + KV-cache decode with mixed request
-lengths (greedy decoding, reduced llama3 config).
+lengths (greedy decoding, reduced llama3 config), plus KV-cache migration
+between devices through the comm session (prefill→decode disaggregation).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -12,7 +13,10 @@ os.environ.setdefault("XLA_FLAGS",
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
+from repro.comm import CommSession
 from repro.configs import get_config
 from repro.models import transformer as tfm
 from repro.serving import Request, ServeEngine
@@ -21,7 +25,8 @@ from repro.serving import Request, ServeEngine
 def main():
     cfg = get_config("llama3_8b").reduced()
     params = tfm.init_params(jax.random.key(0), cfg)
-    engine = ServeEngine(cfg, params, max_len=96, kv_chunks=4)
+    engine = ServeEngine(cfg, params, max_len=96, kv_chunks=4,
+                         comm=CommSession())
 
     rng = jax.random.key(1)
     requests = []
@@ -40,6 +45,20 @@ def main():
               f"tokens: {r.out[:10]}{'...' if len(r.out) > 10 else ''}")
     print(f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s, "
           f"batch of {len(requests)})")
+
+    # KV migration demo: a prefill node hands its cache to a decode node
+    # through the session's compiled multi-path plans (cache-hit on repeat).
+    plen = max(len(r.prompt) for r in done)
+    toks = jnp.asarray(
+        [([0] * (plen - len(r.prompt))) + r.prompt for r in done], jnp.int32)
+    logits, cache = engine.prefill(toks)
+    moved = engine.migrate_kv(cache, src=0, dst=5)
+    ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(jax.tree.leaves(cache),
+                             jax.tree.leaves(moved)))
+    engine.migrate_kv(cache, src=0, dst=5)   # second round: pure hits
+    print(f"KV migration OK={ok}; comm cache: "
+          f"{engine.comm.stats()['cache']}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,10 @@ hardware raise --steps/--batch/--seq (the identical builder lowers the
 full assigned configs in the dry-run).
 
 Run:  PYTHONPATH=src python examples/train_smollm.py --steps 300
+
+``--manual-collectives`` switches gradient synchronization from XLA's
+auto-sharded collectives to explicit data parallelism through a
+``repro.comm.CommSession`` (bidirectional-ring multipath all-reduce).
 """
 
 import os
@@ -21,11 +25,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
+from repro.comm import CommSession
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticDataset
 from repro.optim import OptimConfig
 from repro.runtime import StragglerDetector
-from repro.training import TrainStepConfig, init_state, make_train_step
+from repro.training import (TrainStepConfig, init_state, make_dp_train_step,
+                            make_train_step)
 
 
 def main():
@@ -37,6 +43,9 @@ def main():
                     help="full ~100M params (slow on CPU); default is a "
                          "~4M-param config with identical structure")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_smollm_ckpt")
+    ap.add_argument("--manual-collectives", action="store_true",
+                    help="data-parallel grads via the CommSession's "
+                         "multipath collectives instead of auto-sharding")
     args = ap.parse_args()
 
     base = get_config("smollm_360m")
@@ -56,8 +65,16 @@ def main():
     opt = OptimConfig(learning_rate=3e-3,
                       warmup_steps=max(1, args.steps // 20),
                       total_steps=args.steps)
-    step_fn = jax.jit(make_train_step(cfg, TrainStepConfig(), opt),
-                      donate_argnums=(0,))
+    if args.manual_collectives:
+        comm = CommSession()
+        step_fn = jax.jit(make_dp_train_step(cfg, TrainStepConfig(), opt,
+                                             comm),
+                          donate_argnums=(0,))
+        print(f"manual DP over {comm.num_devices} devices "
+              f"(policy={comm.policy.name})")
+    else:
+        step_fn = jax.jit(make_train_step(cfg, TrainStepConfig(), opt),
+                          donate_argnums=(0,))
     state = init_state(cfg, opt)
     ds = SyntheticDataset(cfg, DataConfig(seq_len=args.seq,
                                           global_batch=args.batch))

@@ -1,0 +1,44 @@
+"""repro.comm — the unified communication API (paper Algorithm 1).
+
+One typed entry point for multi-path P2P, collectives, tuning, and plan
+caching. Layering (DESIGN.md §1):
+
+* :mod:`repro.comm.config`      — :class:`CommConfig` (+ ``from_env``)
+* :mod:`repro.comm.plan`        — transfer-plan data model
+* :mod:`repro.comm.policy`      — pluggable :class:`PathPolicy` strategies
+* :mod:`repro.comm.planner`     — route enumeration + plan construction
+* :mod:`repro.comm.cache`       — compiled-plan LRU (CUDA-Graph analogue)
+* :mod:`repro.comm.collectives` — bidirectional-ring collectives
+* :mod:`repro.comm.engine`      — executable transfer engine (shard_map)
+* :mod:`repro.comm.session`     — :class:`CommSession` facade
+
+Typical use::
+
+    from repro.comm import CommConfig, CommSession
+
+    session = CommSession(CommConfig(max_paths=3))
+    out = session.send(message, src=0, dst=1)
+    print(session.stats()["cache"])
+
+The legacy ``repro.core.paths`` / ``repro.core.multipath`` /
+``repro.core.plan_cache`` / ``repro.core.collectives`` modules are
+deprecated shims over this package.
+"""
+
+from repro.compat import make_mesh, shard_map  # noqa: F401
+from repro.comm.config import POLICY_NAMES, CommConfig  # noqa: F401
+from repro.comm.plan import PathAssignment, TransferPlan  # noqa: F401
+from repro.comm.policy import (  # noqa: F401
+    GreedyBandwidthPolicy, PathPolicy, RoundRobinPolicy, TunerPolicy,
+    make_policy)
+from repro.comm.planner import PathPlanner  # noqa: F401
+from repro.comm.cache import (  # noqa: F401
+    CompiledPlan, PlanLifecycle, TransferPlanCache, compile_plan)
+from repro.comm.collectives import (  # noqa: F401
+    bidir_ring_all_gather, bidir_ring_reduce_scatter, multipath_all_reduce,
+    multipath_all_to_all, psum_via_multipath)
+from repro.comm.engine import (  # noqa: F401
+    AXIS, MultiPathTransfer, TransferKey, multipath_send_local,
+    plan_signature)
+from repro.comm.session import (  # noqa: F401
+    BoundCollectives, CollectiveKey, CommSession)

@@ -1,0 +1,152 @@
+"""TransferPlanCache — the CUDA-Graph-cache analogue (paper §4.2).
+
+The paper caches instantiated ``cudaGraphExec_t`` objects in a fixed-size
+LRU hash table keyed on (src, dst, size, path config). In JAX the analogue
+of the CUDA-Graph lifecycle is the AOT pipeline (DESIGN.md §2):
+
+=================  =========================================
+paper (CUDA)       this repo (JAX/XLA)
+=================  =========================================
+creation           building the python callable / jaxpr trace
+construction       ``jit(f).trace(...)`` → ``.lower()`` (StableHLO)
+instantiation      ``lowered.compile()`` (expensive, one-time)
+launch             dispatch of the compiled executable (cheap)
+=================  =========================================
+
+Every stage is timed so the lifecycle benchmark (paper Fig. 13/14) can report
+first-iteration vs steady-state costs as a function of plan node count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Hashable
+
+import jax
+
+from repro.comm.config import _env_int
+
+
+@dataclasses.dataclass
+class PlanLifecycle:
+    """Nanosecond timings of each lifecycle stage for one cached plan."""
+
+    trace_ns: int = 0        # python trace → jaxpr ("construction" part 1)
+    lower_ns: int = 0        # jaxpr → StableHLO ("construction" part 2)
+    compile_ns: int = 0      # XLA compile ("instantiation")
+    launches: int = 0
+    total_launch_ns: int = 0
+    num_nodes: int = 0       # copy-node count (chunks × hops)
+
+    @property
+    def build_ns(self) -> int:
+        return self.trace_ns + self.lower_ns + self.compile_ns
+
+    @property
+    def mean_launch_ns(self) -> float:
+        return self.total_launch_ns / self.launches if self.launches else 0.0
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """An instantiated transfer graph: XLA executable + lifecycle stats."""
+
+    key: Hashable
+    compiled: Any            # jax.stages.Compiled
+    lifecycle: PlanLifecycle
+
+    def __call__(self, *args):
+        t0 = time.perf_counter_ns()
+        out = self.compiled(*args)
+        # Block so the timing covers execution, not just dispatch; dispatch
+        # cost alone is measured by the lifecycle benchmark via donated runs.
+        jax.block_until_ready(out)
+        self.lifecycle.launches += 1
+        self.lifecycle.total_launch_ns += time.perf_counter_ns() - t0
+        return out
+
+    def dispatch(self, *args):
+        """Launch without blocking (pure launch-overhead measurement)."""
+        t0 = time.perf_counter_ns()
+        out = self.compiled(*args)
+        self.lifecycle.launches += 1
+        self.lifecycle.total_launch_ns += time.perf_counter_ns() - t0
+        return out
+
+
+def compile_plan(key: Hashable, fn: Callable, abstract_args: tuple,
+                 num_nodes: int = 0, **jit_kwargs) -> CompiledPlan:
+    """Run the full trace→lower→compile pipeline with per-stage timing."""
+    life = PlanLifecycle(num_nodes=num_nodes)
+    jitted = jax.jit(fn, **jit_kwargs)
+    t0 = time.perf_counter_ns()
+    traced = jitted.trace(*abstract_args)
+    t1 = time.perf_counter_ns()
+    lowered = traced.lower()
+    t2 = time.perf_counter_ns()
+    compiled = lowered.compile()
+    t3 = time.perf_counter_ns()
+    life.trace_ns, life.lower_ns, life.compile_ns = t1 - t0, t2 - t1, t3 - t2
+    return CompiledPlan(key, compiled, life)
+
+
+class TransferPlanCache:
+    """Fixed-capacity LRU cache of :class:`CompiledPlan` objects.
+
+    Capacity defaults to ``REPRO_PLAN_CACHE_SIZE`` (paper: tunable via
+    environment variables). Eviction counts are exposed for the overhead
+    analysis: an eviction forces a re-instantiation on the next use, the
+    dominant first-iteration cost.
+    """
+
+    def __init__(self, capacity: int | None = None):
+        self.capacity = capacity if capacity is not None else _env_int(
+            "REPRO_PLAN_CACHE_SIZE", 64)
+        if self.capacity <= 0:
+            raise ValueError("cache capacity must be positive")
+        self._store: OrderedDict[Hashable, CompiledPlan] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._store
+
+    def get(self, key: Hashable) -> CompiledPlan | None:
+        plan = self._store.get(key)
+        if plan is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        return plan
+
+    def put(self, key: Hashable, plan: CompiledPlan) -> None:
+        if key in self._store:
+            self._store.move_to_end(key)
+        self._store[key] = plan
+        if len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.evictions += 1
+
+    def get_or_build(self, key: Hashable,
+                     builder: Callable[[], CompiledPlan]) -> CompiledPlan:
+        """LaunchGraph's lookup-or-create (Algorithm 1 lines 25–28)."""
+        plan = self.get(key)
+        if plan is None:
+            plan = builder()
+            self.put(key, plan)
+        return plan
+
+    def stats(self) -> dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._store),
+                "capacity": self.capacity}
+
+    def clear(self) -> None:
+        self._store.clear()

@@ -1,0 +1,11 @@
+"""Alias — the version-compat shims live at :mod:`repro.compat`.
+
+They started here, but every layer (core, kernels, launch, models, optim,
+training) needs them, and ``core`` must not depend on ``comm``; the
+implementation moved to the neutral top level. This alias keeps
+``repro.comm.compat`` imports working.
+"""
+
+from repro.compat import (  # noqa: F401
+    axis_size, get_abstract_mesh, has_pallas_tpu_interpret_mode, make_mesh,
+    pallas_interpret_flag, pallas_tpu_compiler_params, set_mesh, shard_map)

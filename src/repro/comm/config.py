@@ -1,0 +1,114 @@
+"""CommConfig — the single typed configuration for the comm session API.
+
+Absorbs the ``REPRO_MP_*`` environment parsing that used to be inlined in
+``repro/core/paths.py`` (and ``REPRO_PLAN_CACHE_SIZE`` from
+``repro/core/plan_cache.py``). New code constructs a :class:`CommConfig`
+explicitly (or via :meth:`CommConfig.from_env`) and hands it to a
+:class:`~repro.comm.session.CommSession`; the environment variables remain
+supported only through :meth:`from_env` (paper §4.4 "Environment
+Configuration").
+
+Environment variables read by :meth:`from_env`:
+
+* ``REPRO_MP_MAX_PATHS``   — max concurrent paths (default 4)
+* ``REPRO_MP_CHUNK_BYTES`` — target chunk size (default 1 MiB, paper §4.3)
+* ``REPRO_MP_MAX_CHUNKS``  — max chunks per path (default 8)
+* ``REPRO_MP_HOST_PATH``   — "1"/"0" include the host-staged path
+* ``REPRO_MP_THRESHOLD``   — multipath engagement threshold (default 2 MiB,
+  paper §5.3: below it the single direct path wins)
+* ``REPRO_MP_WINDOW``      — default message window for ``session.send``
+* ``REPRO_MP_POLICY``      — path policy name (greedy | round_robin | tuner)
+* ``REPRO_PLAN_CACHE_SIZE``— compiled-plan LRU capacity (default 64)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+_MiB = 1 << 20
+
+#: Policy names accepted by :func:`repro.comm.policy.make_policy`.
+POLICY_NAMES = ("greedy", "round_robin", "tuner")
+
+
+def _env_int(name: str, default: int) -> int:
+    try:
+        return int(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
+def _env_bool(name: str, default: bool) -> bool:
+    v = os.environ.get(name)
+    if v is None:
+        return default
+    return v.strip() not in ("0", "false", "False", "")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Frozen configuration for one :class:`~repro.comm.session.CommSession`.
+
+    The defaults reproduce the paper's tuned settings (§4.3/§4.4): up to 4
+    concurrent paths, ~1 MiB pipeline chunks capped at 8 per path, host path
+    off, multipath engaging at 2 MiB.
+    """
+
+    max_paths: int = 4
+    chunk_bytes: int = _MiB
+    max_chunks: int = 8
+    include_host: bool = False
+    multipath_threshold: int = 2 * _MiB
+    window: int = 1
+    policy: str = "greedy"
+    cache_capacity: int = 64
+    axis_name: str = "dev"
+
+    def __post_init__(self) -> None:
+        if self.max_paths < 1:
+            raise ValueError(f"max_paths must be >= 1, got {self.max_paths}")
+        if self.chunk_bytes < 1:
+            raise ValueError(
+                f"chunk_bytes must be >= 1, got {self.chunk_bytes}")
+        if self.max_chunks < 1:
+            raise ValueError(
+                f"max_chunks must be >= 1, got {self.max_chunks}")
+        if self.multipath_threshold < 0:
+            raise ValueError("multipath_threshold must be >= 0, got "
+                             f"{self.multipath_threshold}")
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if self.cache_capacity < 1:
+            raise ValueError(
+                f"cache_capacity must be >= 1, got {self.cache_capacity}")
+        if self.policy not in POLICY_NAMES:
+            raise ValueError(f"unknown policy {self.policy!r}; "
+                             f"expected one of {POLICY_NAMES}")
+        if not self.axis_name:
+            raise ValueError("axis_name must be non-empty")
+
+    @classmethod
+    def from_env(cls, **overrides) -> "CommConfig":
+        """Build a config from the legacy ``REPRO_MP_*`` environment.
+
+        Keyword ``overrides`` take precedence over the environment, which
+        takes precedence over the defaults.
+        """
+        values = dict(
+            max_paths=_env_int("REPRO_MP_MAX_PATHS", cls.max_paths),
+            chunk_bytes=_env_int("REPRO_MP_CHUNK_BYTES", cls.chunk_bytes),
+            max_chunks=_env_int("REPRO_MP_MAX_CHUNKS", cls.max_chunks),
+            include_host=_env_bool("REPRO_MP_HOST_PATH", cls.include_host),
+            multipath_threshold=_env_int("REPRO_MP_THRESHOLD",
+                                         cls.multipath_threshold),
+            window=_env_int("REPRO_MP_WINDOW", cls.window),
+            policy=os.environ.get("REPRO_MP_POLICY", cls.policy),
+            cache_capacity=_env_int("REPRO_PLAN_CACHE_SIZE",
+                                    cls.cache_capacity),
+        )
+        values.update(overrides)
+        return cls(**values)
+
+    def replace(self, **changes) -> "CommConfig":
+        return dataclasses.replace(self, **changes)

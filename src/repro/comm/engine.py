@@ -1,0 +1,222 @@
+"""MultiPathTransfer — executable multi-path P2P transfers on a JAX mesh.
+
+This is the UCT-layer analogue (DESIGN.md §2): it takes a
+:class:`~repro.comm.plan.TransferPlan`, builds the SPMD program whose ops
+are the plan's copy nodes (one ``ppermute`` per chunk per hop — the CUDA
+Graph's memcpy nodes), compiles it once, and caches the executable in a
+:class:`~repro.comm.cache.TransferPlanCache` keyed exactly like the
+paper's graph cache (src, dst, size, path configuration).
+
+Correctness model (§4.5 of the paper → functional dataflow here):
+
+* each chunk writes a disjoint, precomputed destination offset,
+* staged hop-2 consumes hop-1's value (dataflow dependency),
+* paths never share a directional link (planner invariant),
+* "final synchronization" is the functional join of all chunk outputs.
+
+The engine runs on a flat 1-D device axis (default ``"dev"``); topology
+device ids are mesh positions. Model-parallel meshes are a separate concern
+(``repro/launch/mesh.py``). Most callers should go through
+:class:`~repro.comm.session.CommSession` rather than constructing the
+engine directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.comm.cache import CompiledPlan, TransferPlanCache, compile_plan
+from repro.compat import shard_map
+from repro.comm.plan import TransferPlan
+from repro.comm.planner import PathPlanner
+from repro.core.pipelining import validate_plan
+from repro.core.topology import HOST, Topology
+
+AXIS = "dev"
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferKey:
+    """Graph-cache key: the paper keys on src/dst/size/path config."""
+
+    src: int
+    dst: int
+    nelems: int
+    dtype: str
+    plan_sig: tuple  # ((via, num_chunks, nbytes), ...) per path
+    window: int = 1
+    bidirectional: bool = False
+
+
+def plan_signature(plan: TransferPlan) -> tuple:
+    return tuple((p.route.directional_links(), p.num_chunks, p.nbytes)
+                 for p in plan.paths)
+
+
+def _check_executable(plan: TransferPlan) -> None:
+    for pa in plan.paths:
+        if pa.route.via == HOST:
+            raise ValueError(
+                "host-staged path is not executable on the accelerator mesh "
+                "(DESIGN.md §2); plan with include_host=False")
+
+
+def multipath_send_local(x: jax.Array, plan: TransferPlan, *,
+                         axis_name: str = AXIS,
+                         itemsize: int | None = None) -> jax.Array:
+    """Execute a plan *inside* a ``shard_map`` program.
+
+    ``x`` is the local shard, shape ``(1, nelems)``; on the source device it
+    holds the message, elsewhere contents are ignored. Returns an array of
+    the same shape that holds the message on the destination device and
+    zeros elsewhere. One ``ppermute`` per chunk per hop = one copy node.
+    """
+    _check_executable(plan)
+    itemsize = itemsize or x.dtype.itemsize
+    out = jnp.zeros_like(x)
+    for pa in plan.paths:
+        for off_b, size_b in pa.chunk_bounds():
+            if off_b % itemsize or size_b % itemsize:
+                raise ValueError("chunk bounds not element-aligned; pass "
+                                 "granularity=itemsize to planner.plan()")
+            off_e, size_e = off_b // itemsize, size_b // itemsize
+            chunk = jax.lax.slice(x, (0, off_e), (1, off_e + size_e))
+            for (a, b) in pa.route.directional_links():
+                chunk = jax.lax.ppermute(chunk, axis_name, [(a, b)])
+            out = jax.lax.dynamic_update_slice(out, chunk, (0, off_e))
+    return out
+
+
+class MultiPathTransfer:
+    """Build, cache, and launch compiled multi-path transfer programs."""
+
+    def __init__(self, mesh: jax.sharding.Mesh | None = None, *,
+                 topology: Topology | None = None,
+                 planner: PathPlanner | None = None,
+                 cache: TransferPlanCache | None = None):
+        if mesh is None:
+            devs = jax.devices()
+            mesh = jax.sharding.Mesh(devs, (AXIS,))
+        self.mesh = mesh
+        self.axis_name = mesh.axis_names[0]
+        self.num_devices = mesh.devices.size
+        if topology is None:
+            topology = Topology.full_mesh(self.num_devices, with_host=True)
+        self.topology = topology
+        # `if ... is None` (not `or`): an *empty* TransferPlanCache is falsy
+        # via __len__, and `or` would silently replace a caller's cache.
+        self.planner = planner if planner is not None else PathPlanner(
+            topology)
+        self.cache = cache if cache is not None else TransferPlanCache()
+        self._sharding = NamedSharding(mesh, P(self.axis_name))
+
+    # -- planning -----------------------------------------------------------
+    def plan_for(self, src: int, dst: int, nelems: int, dtype=jnp.float32,
+                 **plan_kwargs) -> TransferPlan:
+        itemsize = jnp.dtype(dtype).itemsize
+        plan = self.planner.plan(src, dst, nelems * itemsize,
+                                 granularity=itemsize,
+                                 include_host=plan_kwargs.pop(
+                                     "include_host", False),
+                                 **plan_kwargs)
+        validate_plan(plan)
+        return plan
+
+    # -- program construction -------------------------------------------------
+    def _build_fn(self, plans: Sequence[TransferPlan], nelems: int,
+                  window: int):
+        """SPMD program executing ``window`` rounds of the given plan(s)."""
+        for p in plans:
+            _check_executable(p)
+        ax = self.axis_name
+
+        def local_body(x):  # x: (window, len(plans), 1, nelems) local
+            outs = []
+            for w in range(window):
+                row = []
+                for i, plan in enumerate(plans):
+                    xi = x[w, i]
+                    row.append(multipath_send_local(xi, plan, axis_name=ax))
+                outs.append(jnp.stack(row))
+            return jnp.stack(outs)
+
+        return shard_map(
+            local_body, mesh=self.mesh,
+            in_specs=P(None, None, ax),
+            out_specs=P(None, None, ax),
+            check_vma=False)
+
+    def _compile(self, key: TransferKey, plans: Sequence[TransferPlan],
+                 dtype) -> CompiledPlan:
+        nelems = key.nelems
+        shape = (key.window, len(plans), self.num_devices, nelems)
+        abstract = jax.ShapeDtypeStruct(
+            shape, dtype, sharding=NamedSharding(
+                self.mesh, P(None, None, self.axis_name)))
+        num_nodes = sum(p.num_nodes for p in plans) * key.window
+        fn = self._build_fn(plans, nelems, key.window)
+        return compile_plan(key, fn, (abstract,), num_nodes=num_nodes)
+
+    # -- public API ------------------------------------------------------------
+    def transfer(self, message: jax.Array, src: int, dst: int, *,
+                 window: int = 1, bidirectional: bool = False,
+                 max_paths: int | None = None,
+                 num_chunks: int | None = None,
+                 block: bool = True) -> jax.Array:
+        """Move ``message`` (1-D array) from device ``src`` to ``dst``.
+
+        Returns the received message (fetched from the destination shard).
+        With ``bidirectional=True`` the same message is simultaneously sent
+        dst→src (OMB BIBW pattern) and both receptions are validated.
+        ``block=False`` launches without waiting (overlapping independent
+        transfers, e.g. a pytree migration); the caller syncs.
+        """
+        message = jnp.asarray(message)
+        if message.ndim != 1:
+            raise ValueError("message must be 1-D; reshape first")
+        nelems = message.shape[0]
+        plan = self.plan_for(src, dst, nelems, message.dtype,
+                             max_paths=max_paths, num_chunks=num_chunks)
+        plans = [plan]
+        if bidirectional:
+            plans.append(self.plan_for(dst, src, nelems, message.dtype,
+                                       max_paths=max_paths,
+                                       num_chunks=num_chunks))
+        key = TransferKey(src, dst, nelems, str(message.dtype),
+                          plan_signature(plan), window, bidirectional)
+        compiled = self.cache.get_or_build(
+            key, lambda: self._compile(key, plans, message.dtype))
+
+        x = jnp.zeros((window, len(plans), self.num_devices, nelems),
+                      message.dtype)
+        x = x.at[:, 0, src].set(message)
+        if bidirectional:
+            x = x.at[:, 1, dst].set(message)
+        x = jax.device_put(x, NamedSharding(
+            self.mesh, P(None, None, self.axis_name)))
+        y = compiled(x) if block else compiled.dispatch(x)
+        return y[0, 0, dst]
+
+    def compiled_for(self, src: int, dst: int, nelems: int, dtype=jnp.float32,
+                     *, window: int = 1, bidirectional: bool = False,
+                     max_paths: int | None = None,
+                     num_chunks: int | None = None,
+                     ) -> tuple[CompiledPlan, TransferPlan]:
+        """AOT handle for benchmarks: returns (executable, plan)."""
+        plan = self.plan_for(src, dst, nelems, dtype, max_paths=max_paths,
+                             num_chunks=num_chunks)
+        plans = [plan]
+        if bidirectional:
+            plans.append(self.plan_for(dst, src, nelems, dtype,
+                                       max_paths=max_paths,
+                                       num_chunks=num_chunks))
+        key = TransferKey(src, dst, nelems, str(jnp.dtype(dtype)),
+                          plan_signature(plan), window, bidirectional)
+        compiled = self.cache.get_or_build(
+            key, lambda: self._compile(key, plans, dtype))
+        return compiled, plan

@@ -1,0 +1,66 @@
+"""Transfer-plan data model: the 2-D (horizontal × vertical) split.
+
+Moved from ``repro/core/paths.py`` as part of the ``repro.comm`` API
+consolidation; pure data, shared by policies, the planner, the pipelining
+time model, and the executable engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.topology import Route
+
+
+@dataclasses.dataclass(frozen=True)
+class PathAssignment:
+    """One path of a transfer: a route, its byte range, and its chunking.
+
+    ``granularity`` keeps every chunk boundary aligned (e.g. to the dtype
+    itemsize when the engine moves typed arrays rather than raw bytes).
+    """
+
+    route: Route
+    offset: int          # byte offset into the message (disjoint, §4.5)
+    nbytes: int          # share of the message on this path
+    num_chunks: int      # vertical split (pipelining)
+    granularity: int = 1
+
+    def chunk_bounds(self) -> list[tuple[int, int]]:
+        """Disjoint (offset, size) per chunk; last chunk absorbs remainder."""
+        if self.nbytes == 0:
+            return []
+        g = self.granularity
+        base = (self.nbytes // self.num_chunks) // g * g
+        bounds = []
+        off = self.offset
+        for i in range(self.num_chunks):
+            size = base if i < self.num_chunks - 1 else (
+                self.nbytes - base * (self.num_chunks - 1))
+            bounds.append((off, size))
+            off += size
+        return bounds
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferPlan:
+    """The full 2-D plan for one P2P message (horizontal × vertical split)."""
+
+    src: int
+    dst: int
+    nbytes: int
+    paths: tuple[PathAssignment, ...]
+    topology_name: str
+
+    @property
+    def num_paths(self) -> int:
+        return len(self.paths)
+
+    @property
+    def num_nodes(self) -> int:
+        """Copy-node count of the equivalent CUDA Graph (paper Fig. 13/14):
+        one node per chunk per hop."""
+        return sum(p.num_chunks * p.route.num_hops for p in self.paths)
+
+    def covered_bytes(self) -> int:
+        return sum(p.nbytes for p in self.paths)

@@ -1,0 +1,221 @@
+"""PathPlanner: route enumeration + per-message path configuration.
+
+Implements the paper's Multi-Path Communication Handler + ``GetPathConfig``
+(Algorithm 1, lines 4–11) and the offline topology tuner (§4.4):
+
+* enumerate the direct route and all 2-hop staged routes (via idle peer
+  devices, and optionally via the host),
+* delegate route *selection* and share assignment to a pluggable
+  :class:`~repro.comm.policy.PathPolicy` (greedy bandwidth-proportional by
+  default — the paper's behavior),
+* split each share into pipeline chunks (vertical split — chunk count is the
+  tunable the paper fixes via offline tuning; default target chunk 1 MB,
+  capped at ``max_chunks``).
+
+Configuration comes from a :class:`~repro.comm.config.CommConfig`
+(constructor keyword arguments override individual fields); the legacy
+``REPRO_MP_*`` environment variables are honored through
+``CommConfig.from_env()``, which is the default when no config is given.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.comm.config import CommConfig
+from repro.comm.plan import PathAssignment, TransferPlan
+from repro.comm.policy import GreedyBandwidthPolicy, PathPolicy, make_policy
+from repro.core.topology import HOST, Route, Topology
+
+_GREEDY = GreedyBandwidthPolicy()
+
+
+class PathPlanner:
+    """Selects routes and builds :class:`TransferPlan` objects."""
+
+    def __init__(self, topology: Topology, *,
+                 max_paths: int | None = None,
+                 chunk_bytes: int | None = None,
+                 max_chunks: int | None = None,
+                 include_host: bool | None = None,
+                 multipath_threshold: int | None = None,
+                 policy: PathPolicy | None = None,
+                 config: CommConfig | None = None):
+        if config is None:
+            config = CommConfig.from_env()
+        self.topology = topology
+        self.config = config
+        self.max_paths = (config.max_paths if max_paths is None
+                          else max_paths)
+        self.chunk_bytes = (config.chunk_bytes if chunk_bytes is None
+                            else chunk_bytes)
+        self.max_chunks = (config.max_chunks if max_chunks is None
+                           else max_chunks)
+        self.include_host = (config.include_host if include_host is None
+                             else include_host)
+        # Paper §5.3: multi-pathing engages at 2 MB; below that the single
+        # direct path wins (launch overhead dominates).
+        self.multipath_threshold = (
+            config.multipath_threshold if multipath_threshold is None
+            else multipath_threshold)
+        self.policy = policy if policy is not None else make_policy(
+            config.policy)
+
+    # -- route enumeration --------------------------------------------------
+    def enumerate_routes(self, src: int, dst: int,
+                         include_host: bool | None = None) -> list[Route]:
+        """All 1- and 2-hop routes src→dst, best (direct, then by bw) first.
+
+        Staged routes never reuse a directional link of the direct route, so
+        per-link exclusivity (§4.5 contention avoidance) holds by construction.
+        """
+        if src == dst:
+            raise ValueError("src == dst")
+        topo = self.topology
+        include_host = (self.include_host if include_host is None
+                        else include_host)
+        routes: list[Route] = []
+        direct = topo.link(src, dst)
+        if direct is not None:
+            routes.append(Route(src, dst, None, (direct,),
+                                direct.bandwidth_gbps))
+        vias = [d for d in topo.devices() if d not in (src, dst)]
+        if include_host:
+            vias.append(HOST)
+        for via in vias:
+            h1, h2 = topo.link(src, via), topo.link(via, dst)
+            if h1 is None or h2 is None:
+                continue
+            routes.append(Route(src, dst, via, (h1, h2),
+                                min(h1.bandwidth_gbps, h2.bandwidth_gbps)))
+        if len(routes) < self.max_paths:
+            # Torus case: adjacent chips share no common neighbour (girth
+            # 4), so alternative routes are 3-hop detours through a
+            # perpendicular axis (src→v1→v2→dst) — the TPU analogue of the
+            # paper's staged-GPU path (DESIGN.md §2). Only link-disjoint
+            # detours (vs routes found so far) are admitted.
+            used = {l for r in routes for l in r.directional_links()}
+            for v1 in topo.neighbors(src):
+                if v1 in (dst, src):
+                    continue
+                for v2 in topo.neighbors(dst):
+                    if v2 in (src, dst, v1):
+                        continue
+                    h1, h2, h3 = (topo.link(src, v1), topo.link(v1, v2),
+                                  topo.link(v2, dst))
+                    if h1 is None or h2 is None or h3 is None:
+                        continue
+                    links = {(src, v1), (v1, v2), (v2, dst)}
+                    if links & used:
+                        continue
+                    used |= links
+                    routes.append(Route(
+                        src, dst, v1, (h1, h2, h3),
+                        min(h.bandwidth_gbps for h in (h1, h2, h3))))
+        # direct first, then staged by hop count and bandwidth, host last
+        # (paper: the host path is the marginal contributor).
+        routes.sort(key=lambda r: (r.via is not None,
+                                   r.via == HOST,
+                                   r.num_hops,
+                                   -r.bottleneck_gbps))
+        return routes
+
+    # -- plan construction ---------------------------------------------------
+    def compose(self, src: int, dst: int, nbytes: int,
+                shares: Sequence[tuple[Route, int]], *,
+                num_chunks: int | None = None,
+                granularity: int = 1) -> TransferPlan:
+        """Turn policy-assigned (route, share) pairs into a checked plan.
+
+        Zero shares are dropped; offsets are assigned cumulatively so the
+        byte ranges are disjoint and cover ``[0, nbytes)`` (§4.5); chunking
+        follows the planner's ``chunk_bytes``/``max_chunks`` unless an
+        explicit ``num_chunks`` is forced.
+        """
+        paths: list[PathAssignment] = []
+        offset = 0
+        for route, share in shares:
+            if share <= 0:
+                continue
+            if num_chunks is not None:
+                chunks = num_chunks
+            else:
+                chunks = max(1, min(self.max_chunks,
+                                    -(-share // self.chunk_bytes)))
+            chunks = min(chunks, max(1, share // granularity))
+            paths.append(PathAssignment(route, offset, share, chunks,
+                                        granularity))
+            offset += share
+        return TransferPlan(src, dst, nbytes, tuple(paths),
+                            self.topology.name)
+
+    def plan(self, src: int, dst: int, nbytes: int, *,
+             max_paths: int | None = None,
+             include_host: bool | None = None,
+             num_chunks: int | None = None,
+             granularity: int = 1,
+             policy: PathPolicy | None = None) -> TransferPlan:
+        """Build the 2-D transfer plan (Algorithm 1 lines 4–11).
+
+        ``policy`` overrides the planner's strategy for this call only
+        (used by the tuner to score greedy candidates without recursing).
+        """
+        if nbytes <= 0:
+            raise ValueError("nbytes must be positive")
+        if nbytes % granularity:
+            raise ValueError(f"nbytes {nbytes} not a multiple of "
+                             f"granularity {granularity}")
+        if max_paths is not None and max_paths < 1:
+            raise ValueError(f"max_paths must be >= 1, got {max_paths}")
+        if max_paths is None:
+            max_paths = self.max_paths
+        include_host = (self.include_host if include_host is None
+                        else include_host)
+        routes = self.enumerate_routes(src, dst, include_host=include_host)
+        if not routes:
+            raise ValueError(
+                f"no route {src}->{dst} in topology {self.topology.name}")
+        if nbytes < self.multipath_threshold:
+            routes = routes[:1]
+        policy = policy if policy is not None else self.policy
+        return policy.build(self, src, dst, nbytes, routes=routes,
+                            max_paths=max_paths, num_chunks=num_chunks,
+                            granularity=granularity,
+                            include_host=include_host)
+
+    # -- offline tuner (paper §4.4) -------------------------------------------
+    def tune(self, src: int, dst: int, nbytes: int, *,
+             path_counts: tuple[int, ...] = (1, 2, 3, 4),
+             chunk_counts: tuple[int, ...] = (1, 2, 4, 8, 16),
+             include_host_options: tuple[bool, ...] = (False, True),
+             use_compiled_plans: bool = True,
+             granularity: int = 1) -> TransferPlan:
+        """Exhaustive offline search for the best (paths × chunks × host)
+        configuration under the analytic pipeline model.
+
+        The paper tunes separately for CUDA-Graph and non-graph modes because
+        launch overheads differ; ``use_compiled_plans`` toggles which launch
+        overhead model is applied. Candidates are greedy plans regardless of
+        the planner's own policy (the tuner searches the paper handler's
+        configuration space).
+        """
+        from repro.core.pipelining import estimate_transfer_time_s
+
+        best_plan, best_t = None, float("inf")
+        for host in include_host_options:
+            if host and not any(l.src == HOST or l.dst == HOST
+                                for l in self.topology.links.values()):
+                continue
+            for npaths in path_counts:
+                for nchunks in chunk_counts:
+                    plan = self.plan(src, dst, nbytes, max_paths=npaths,
+                                     include_host=host, num_chunks=nchunks,
+                                     granularity=granularity,
+                                     policy=_GREEDY)
+                    t = estimate_transfer_time_s(
+                        plan, self.topology,
+                        compiled_plan=use_compiled_plans)
+                    if t < best_t:
+                        best_plan, best_t = plan, t
+        assert best_plan is not None
+        return best_plan

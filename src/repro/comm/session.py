@@ -1,0 +1,296 @@
+"""CommSession — the single typed entry point for multi-path communication.
+
+The paper's handler owns path selection, graph construction, and graph
+caching behind one send/recv call (Algorithm 1). ``CommSession`` is that
+handler for this repo: it owns one :class:`~repro.core.topology.Topology`,
+one :class:`~repro.comm.planner.PathPlanner` (with its pluggable
+:class:`~repro.comm.policy.PathPolicy`), and one
+:class:`~repro.comm.cache.TransferPlanCache`, and every subsystem —
+training, serving, benchmarks, examples — drives communication through it:
+
+* ``session.send(x, src, dst)`` / ``session.bidirectional(...)`` — compiled
+  multi-path P2P (the executable engine),
+* ``session.all_gather/reduce_scatter/all_reduce/all_to_all/psum(...)`` —
+  driver-level launches of the bidirectional-ring collectives, compiled
+  once per (op, shape, dtype) and cached in the *same* plan cache,
+* ``session.collectives`` — the same collectives bound to the session's
+  axis name, for use *inside* user ``shard_map`` programs,
+* ``session.plan(...)`` / ``session.tune(...)`` — planning and the offline
+  tuner (paper §4.4),
+* ``session.send_pytree(...)`` — P2P for arbitrary pytrees (e.g. serving
+  KV-cache migration).
+
+See DESIGN.md §5 for the session model and §6 for the migration guide from
+the legacy ``MultiPathTransfer``/``PathPlanner`` wiring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.comm import collectives as coll
+from repro import compat
+from repro.comm.cache import CompiledPlan, TransferPlanCache, compile_plan
+from repro.compat import shard_map
+from repro.comm.config import CommConfig
+from repro.comm.engine import MultiPathTransfer
+from repro.comm.plan import TransferPlan
+from repro.comm.planner import PathPlanner
+from repro.comm.policy import PathPolicy, make_policy
+from repro.core.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveKey:
+    """Plan-cache key for a compiled collective launch.
+
+    ``num_devices`` keys the mesh size: a cache shared across sessions on
+    different-sized meshes must not serve one mesh's executable to the
+    other (P2P keys get this for free via the plan signature).
+    """
+
+    op: str
+    shape: tuple
+    dtype: str
+    axis: str
+    num_devices: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundCollectives:
+    """Multipath collectives bound to a session's axis name.
+
+    For use *inside* ``shard_map`` programs (e.g. the manual-collectives
+    training mode); the driver-level compiled counterparts live on
+    :class:`CommSession`.
+    """
+
+    axis_name: str
+
+    def all_gather(self, x: jax.Array) -> jax.Array:
+        return coll.bidir_ring_all_gather(x, self.axis_name)
+
+    def reduce_scatter(self, x: jax.Array) -> jax.Array:
+        return coll.bidir_ring_reduce_scatter(x, self.axis_name)
+
+    def all_reduce(self, x: jax.Array) -> jax.Array:
+        return coll.multipath_all_reduce(x, self.axis_name)
+
+    def all_to_all(self, x: jax.Array) -> jax.Array:
+        return coll.multipath_all_to_all(x, self.axis_name)
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return coll.psum_via_multipath(x, self.axis_name)
+
+    def pmean(self, x: jax.Array) -> jax.Array:
+        return self.psum(x) / compat.axis_size(self.axis_name)
+
+
+class CommSession:
+    """Facade owning topology, planner, policy, engine, and plan cache."""
+
+    def __init__(self, config: CommConfig | None = None, *,
+                 mesh: jax.sharding.Mesh | None = None,
+                 topology: Topology | None = None,
+                 policy: PathPolicy | None = None,
+                 cache: TransferPlanCache | None = None):
+        self.config = config if config is not None else CommConfig.from_env()
+        self._mesh = mesh
+        self.axis_name = (mesh.axis_names[0] if mesh is not None
+                          else self.config.axis_name)
+        if topology is None:
+            topology = Topology.full_mesh(self.mesh.devices.size,
+                                          with_host=True)
+        self.topology = topology
+        self.policy = policy if policy is not None else make_policy(
+            self.config.policy)
+        self.planner = PathPlanner(topology, config=self.config,
+                                   policy=self.policy)
+        self.cache = cache if cache is not None else TransferPlanCache(
+            self.config.cache_capacity)
+        self.collectives = BoundCollectives(self.axis_name)
+        self._engine: MultiPathTransfer | None = None
+
+    # -- lazy resources -----------------------------------------------------
+    @property
+    def mesh(self) -> jax.sharding.Mesh:
+        if self._mesh is None:
+            self._mesh = jax.sharding.Mesh(jax.devices(), (self.axis_name,))
+        return self._mesh
+
+    @property
+    def engine(self) -> MultiPathTransfer:
+        """The executable transfer engine (built on first use so planning-
+        only sessions never initialize a device mesh)."""
+        if self._engine is None:
+            self._engine = MultiPathTransfer(self.mesh,
+                                             topology=self.topology,
+                                             planner=self.planner,
+                                             cache=self.cache)
+        return self._engine
+
+    @property
+    def num_devices(self) -> int:
+        return self.topology.num_devices
+
+    # -- planning and tuning ------------------------------------------------
+    def plan(self, src: int, dst: int, nbytes: int, **kwargs) -> TransferPlan:
+        """Plan one P2P message (Algorithm 1 lines 4–11) via the policy."""
+        return self.planner.plan(src, dst, nbytes, **kwargs)
+
+    def plan_for(self, src: int, dst: int, nelems: int, dtype=jnp.float32,
+                 **kwargs) -> TransferPlan:
+        """Element-granular plan for a typed 1-D message."""
+        return self.engine.plan_for(src, dst, nelems, dtype, **kwargs)
+
+    def tune(self, src: int, dst: int, nbytes: int, **kwargs) -> TransferPlan:
+        """Offline tuner (paper §4.4): best (paths × chunks × host) config."""
+        return self.planner.tune(src, dst, nbytes, **kwargs)
+
+    # -- point-to-point -----------------------------------------------------
+    def send(self, x: jax.Array, src: int, dst: int, *,
+             window: int | None = None, max_paths: int | None = None,
+             num_chunks: int | None = None, block: bool = True) -> jax.Array:
+        """Send 1-D ``x`` from device ``src`` to ``dst``; returns the
+        received message. Compiled plans are cached (src, dst, size, config).
+        """
+        return self.engine.transfer(
+            x, src, dst, window=self.config.window if window is None
+            else window, max_paths=max_paths, num_chunks=num_chunks,
+            block=block)
+
+    def bidirectional(self, x: jax.Array, src: int, dst: int, *,
+                      window: int | None = None, max_paths: int | None = None,
+                      num_chunks: int | None = None) -> jax.Array:
+        """Simultaneous src→dst and dst→src of the same message (OMB BIBW)."""
+        return self.engine.transfer(
+            x, src, dst, bidirectional=True,
+            window=self.config.window if window is None else window,
+            max_paths=max_paths, num_chunks=num_chunks)
+
+    def compiled_for(self, src: int, dst: int, nelems: int,
+                     dtype=jnp.float32, **kwargs
+                     ) -> tuple[CompiledPlan, TransferPlan]:
+        """AOT (executable, plan) handle for benchmarks."""
+        return self.engine.compiled_for(src, dst, nelems, dtype, **kwargs)
+
+    def send_pytree(self, tree, src: int, dst: int):
+        """Move every array leaf of ``tree`` from ``src`` to ``dst``.
+
+        Each leaf is flattened, sent through the multi-path engine (one
+        cached compiled plan per distinct (size, dtype)), and restored to
+        its shape — the KV-cache-migration primitive used by serving.
+        Leaves are independent, so every transfer is dispatched without
+        blocking and the tree is synced once at the end.
+        """
+        def move(leaf):
+            leaf = jnp.asarray(leaf)
+            flat = leaf.reshape(-1)
+            out = self.send(flat, src, dst, block=False)
+            return out.reshape(leaf.shape)
+        moved = jax.tree.map(move, tree)
+        jax.block_until_ready(moved)
+        return moved
+
+    # -- driver-level collectives ------------------------------------------
+    def _run_collective(self, op: str, x: jax.Array, local_fn,
+                        in_spec: P, out_spec: P,
+                        num_nodes: int) -> jax.Array:
+        x = jnp.asarray(x)
+        key = CollectiveKey(op, tuple(x.shape), str(x.dtype), self.axis_name,
+                            self.mesh.devices.size)
+        in_sharding = NamedSharding(self.mesh, in_spec)
+
+        def build() -> CompiledPlan:
+            fn = shard_map(local_fn, mesh=self.mesh, in_specs=in_spec,
+                           out_specs=out_spec, check_vma=False)
+            abstract = jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                            sharding=in_sharding)
+            return compile_plan(key, fn, (abstract,), num_nodes=num_nodes)
+
+        compiled = self.cache.get_or_build(key, build)
+        return compiled(jax.device_put(x, in_sharding))
+
+    def _axis_size(self) -> int:
+        return self.mesh.shape[self.axis_name]
+
+    def all_gather(self, x: jax.Array) -> jax.Array:
+        """Bidirectional-ring all-gather of ``x`` sharded on dim 0.
+
+        Returns the same global array, fully replicated — both ring
+        directions carry half the features each step.
+        """
+        n = self._axis_size()
+        return self._run_collective(
+            "all_gather", x, self.collectives.all_gather,
+            P(self.axis_name), P(None), num_nodes=2 * (n - 1))
+
+    def _check_ring_divisible(self, op: str, x: jax.Array, n: int) -> None:
+        if x.shape[0] % n:
+            raise ValueError(
+                f"{op} needs dim 0 divisible by the axis size {n}, got "
+                f"{x.shape[0]}; pad upstream or use psum for arbitrary "
+                f"shapes")
+
+    def reduce_scatter(self, x: jax.Array) -> jax.Array:
+        """Bidirectional-ring reduce-scatter of a replicated operand; the
+        result is sharded on dim 0 (device i owns the reduced block i)."""
+        n = self._axis_size()
+        self._check_ring_divisible("reduce_scatter", x, n)
+        return self._run_collective(
+            "reduce_scatter", x, self.collectives.reduce_scatter,
+            P(None), P(self.axis_name), num_nodes=2 * (n - 1))
+
+    def all_reduce(self, x: jax.Array) -> jax.Array:
+        """All-reduce (sum over the axis) of a replicated operand whose
+        dim 0 is divisible by the axis size; use :meth:`psum` otherwise."""
+        n = self._axis_size()
+        self._check_ring_divisible("all_reduce", x, n)
+        return self._run_collective(
+            "all_reduce", x, self.collectives.all_reduce,
+            P(None), P(None), num_nodes=4 * (n - 1))
+
+    def all_to_all(self, x: jax.Array) -> jax.Array:
+        """All-to-all: ``x`` sharded on dim 0, one destination block per
+        device pair — global dim 0 must be exactly n² (block payload goes
+        in the trailing dims; reshape ``(n², r, ...)`` for multi-row
+        blocks). The local operand must have leading dim n, one block per
+        destination, or the ring algorithm would silently drop blocks."""
+        n = self._axis_size()
+        if x.shape[0] != n * n:
+            raise ValueError(
+                f"all_to_all needs global dim 0 == n²={n * n} (one block "
+                f"per device pair), got {x.shape[0]}; put multi-row block "
+                f"payloads in the trailing dims")
+        return self._run_collective(
+            "all_to_all", x, self.collectives.all_to_all,
+            P(self.axis_name), P(self.axis_name), num_nodes=n - 1)
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        """Sum a replicated arbitrary-shape operand over the axis (pads and
+        stripes through the bidirectional ring)."""
+        n = self._axis_size()
+        nd = jnp.asarray(x).ndim
+        return self._run_collective(
+            "psum", x, self.collectives.psum,
+            P(*([None] * nd)), P(*([None] * nd)), num_nodes=4 * (n - 1))
+
+    # -- introspection ------------------------------------------------------
+    def stats(self) -> dict:
+        """One-stop accounting: cache hits/misses, policy, topology."""
+        return {
+            "cache": self.cache.stats(),
+            "policy": self.policy.name,
+            "topology": self.topology.name,
+            "num_devices": self.topology.num_devices,
+            "axis_name": self.axis_name,
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"CommSession(topology={self.topology.name!r}, "
+                f"policy={self.policy.name!r}, "
+                f"devices={self.topology.num_devices})")

@@ -1,0 +1,117 @@
+"""JAX version compatibility for the comm package.
+
+The repo targets the current ``jax.shard_map`` API (``check_vma``), but the
+pinned container jax (0.4.x) still exposes ``shard_map`` under
+``jax.experimental.shard_map`` with the older ``check_rep`` spelling, and
+``jax.make_mesh`` without ``axis_types``. Every shard_map/make_mesh call in
+the repo goes through these wrappers so the suite runs on both.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable
+
+import jax
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: bool = True) -> Callable:
+    """``jax.shard_map`` across jax versions (``check_vma``/``check_rep``)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as sm_old
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+
+
+def axis_size(axis_name) -> int:
+    """``lax.axis_size`` across jax versions (falls back to the static
+    ``psum(1, axis)`` idiom, which older jax constant-folds to an int)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` context across jax versions.
+
+    Old jax has no ``set_mesh``; a concrete ``Mesh`` is itself a context
+    manager installing the global mesh (the legacy spelling), and an
+    ``AbstractMesh`` needs no installation there (shardings are resolved
+    from the NamedShardings already attached to the jit arguments).
+    """
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    if isinstance(mesh, jax.sharding.Mesh):
+        return mesh
+    return contextlib.nullcontext(mesh)
+
+
+def abstract_mesh(axis_shapes, axis_names) -> "jax.sharding.AbstractMesh":
+    """``AbstractMesh`` across jax versions: new jax takes
+    ``(axis_sizes, axis_names)``, old jax a tuple of (name, size) pairs."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+def get_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh`` across versions.
+
+    Old jax tracks the (legacy) ``with mesh:`` context in thread resources;
+    return that concrete mesh — it quacks like an AbstractMesh
+    (``axis_names`` / ``shape``) for sharding-constraint resolution.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if m is None or m.empty:
+        return None
+    return m
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across jax versions (``TPUCompilerParams``
+    before the rename)."""
+    import jax.experimental.pallas.tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def has_pallas_tpu_interpret_mode() -> bool:
+    """True when jax ships the typed TPU interpret mode
+    (``pltpu.InterpretParams``), which simulates cross-device remote DMA.
+    Older jax's plain ``interpret=True`` cannot execute
+    ``make_async_remote_copy`` across devices."""
+    import jax.experimental.pallas.tpu as pltpu
+    return hasattr(pltpu, "InterpretParams")
+
+
+def pallas_interpret_flag(interpret: bool = True):
+    """Value for ``pallas_call(interpret=...)``: ``InterpretParams()`` on
+    new jax (typed TPU-interpret mode), plain ``True`` on old jax."""
+    if not interpret:
+        return False
+    import jax.experimental.pallas.tpu as pltpu
+    cls = getattr(pltpu, "InterpretParams", None)
+    return cls() if cls is not None else True
+
+
+def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with ``axis_types=Auto`` where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)

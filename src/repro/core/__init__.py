@@ -1,23 +1,62 @@
 """Core multi-path transfer engine — the paper's primary contribution.
 
+As of the ``repro.comm`` API consolidation, only the hardware model
+(:mod:`repro.core.topology`), the analytic pipeline model
+(:mod:`repro.core.pipelining`), and the application layer
+(:mod:`repro.core.halo`) live here; planning, caching, the executable
+engine, and the collectives moved to :mod:`repro.comm` and are re-exported
+lazily below for backwards compatibility (lazily both to keep the legacy
+surface alive without import cycles and so that ``import repro.core`` stays
+cheap). New code should construct a :class:`repro.comm.CommSession`
+(see DESIGN.md §5/§6).
+
 Layering (mirrors the paper's Fig. 3):
 
 * :mod:`repro.core.topology`   — Base Module: link graph / hardware probe
-* :mod:`repro.core.paths`      — Multi-Path Communication Handler + tuner
+* :mod:`repro.comm.planner`    — Multi-Path Communication Handler + tuner
 * :mod:`repro.core.pipelining` — 2-D Pipelining Engine + analytic time model
-* :mod:`repro.core.plan_cache` — CUDA-Graph-cache analogue (LRU, lifecycle)
-* :mod:`repro.core.multipath`  — executable transfer engine (shard_map)
-* :mod:`repro.core.collectives`— beyond-paper multipath collectives
+* :mod:`repro.comm.cache`      — CUDA-Graph-cache analogue (LRU, lifecycle)
+* :mod:`repro.comm.engine`     — executable transfer engine (shard_map)
+* :mod:`repro.comm.collectives`— beyond-paper multipath collectives
+* :mod:`repro.comm.session`    — the CommSession facade over all of it
 * :mod:`repro.core.halo`       — Jacobi halo exchange application layer
 """
 
+import importlib
+
 from repro.core.topology import HOST, Link, Route, Topology  # noqa: F401
-from repro.core.paths import PathAssignment, PathPlanner, TransferPlan  # noqa: F401
 from repro.core.pipelining import (  # noqa: F401
     ChunkTask, build_schedule, effective_bandwidth_gbps,
     estimate_transfer_time_s, launch_overhead_ns, validate_plan,
     windowed_bandwidth_gbps)
-from repro.core.plan_cache import (  # noqa: F401
-    CompiledPlan, PlanLifecycle, TransferPlanCache, compile_plan)
-from repro.core.multipath import (  # noqa: F401
-    MultiPathTransfer, TransferKey, multipath_send_local, plan_signature)
+
+# Legacy re-exports: these classes moved to repro.comm (PEP 562 lazy
+# attributes — resolving them eagerly here would recreate the
+# core.topology → core.__init__ → comm → core.topology import cycle).
+_COMM_EXPORTS = {
+    "PathAssignment": "repro.comm.plan",
+    "TransferPlan": "repro.comm.plan",
+    "PathPlanner": "repro.comm.planner",
+    "CompiledPlan": "repro.comm.cache",
+    "PlanLifecycle": "repro.comm.cache",
+    "TransferPlanCache": "repro.comm.cache",
+    "compile_plan": "repro.comm.cache",
+    "MultiPathTransfer": "repro.comm.engine",
+    "TransferKey": "repro.comm.engine",
+    "multipath_send_local": "repro.comm.engine",
+    "plan_signature": "repro.comm.engine",
+}
+
+__all__ = [  # noqa: F822 - lazy names resolved via __getattr__
+    "HOST", "Link", "Route", "Topology",
+    "ChunkTask", "build_schedule", "effective_bandwidth_gbps",
+    "estimate_transfer_time_s", "launch_overhead_ns", "validate_plan",
+    "windowed_bandwidth_gbps", *sorted(_COMM_EXPORTS),
+]
+
+
+def __getattr__(name):
+    target = _COMM_EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(target), name)

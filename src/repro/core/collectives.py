@@ -1,175 +1,16 @@
-"""Multipath-striped collectives (BEYOND-PAPER — the paper's §6 future work).
+"""DEPRECATED shim — collectives moved to :mod:`repro.comm.collectives`.
 
-The paper stripes *point-to-point* messages across idle links. The same
-insight applies to collectives on a torus/ring: a unidirectional ring
-all-gather uses only one direction of each bidirectional ICI link, leaving
-half the injection bandwidth idle. These implementations stripe the payload
-across **both ring directions** (2 paths), which halves the bytes crossing
-any single directional link — the collective-roofline term drops ~2×.
-
-All functions are written for use inside ``jax.shard_map`` over a named mesh
-axis, and are validated against ``jax.lax`` references in
-``tests/test_collectives.py``.
+Use ``session.all_gather/reduce_scatter/all_reduce/all_to_all/psum`` for
+driver-level launches that share the session's plan cache, or
+``session.collectives.*`` inside ``shard_map`` programs (DESIGN.md §6).
 """
 
-from __future__ import annotations
+import warnings
 
-import functools
+from repro.comm.collectives import (  # noqa: F401
+    bidir_ring_all_gather, bidir_ring_reduce_scatter, multipath_all_reduce,
+    multipath_all_to_all, psum_via_multipath)
 
-import jax
-import jax.numpy as jnp
-from jax import lax
-
-
-def _ring_perms(axis_size: int):
-    cw = [(i, (i + 1) % axis_size) for i in range(axis_size)]
-    ccw = [(i, (i - 1) % axis_size) for i in range(axis_size)]
-    return cw, ccw
-
-
-def bidir_ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
-    """All-gather along ``axis_name`` using both ring directions.
-
-    ``x`` is the local shard ``(s, ...)``; returns ``(N*s, ...)`` in device
-    order — equivalent to ``lax.all_gather(x, axis_name, tiled=True)``.
-    Half the features travel clockwise, half counter-clockwise, so each of
-    the N-1 steps uses both directional links of the ring simultaneously.
-    """
-    n = lax.axis_size(axis_name)
-    if n == 1:
-        return x
-    i = lax.axis_index(axis_name)
-    cw, ccw = _ring_perms(n)
-
-    f = x.shape[-1]
-    f0 = f // 2
-    if f0 == 0:  # nothing to split — degrade to single direction
-        f0 = f
-    h0, h1 = x[..., :f0], x[..., f0:]
-
-    out = jnp.zeros((n,) + x.shape, x.dtype)
-    out = lax.dynamic_update_slice_in_dim(out, x[None], i, axis=0)
-    cur0, cur1 = h0, h1
-    for step in range(1, n):
-        cur0 = lax.ppermute(cur0, axis_name, cw)
-        src0 = jnp.mod(i - step, n)
-        out = lax.dynamic_update_slice(
-            out, cur0[None], (src0,) + (0,) * x.ndim)
-        if h1.shape[-1]:
-            cur1 = lax.ppermute(cur1, axis_name, ccw)
-            src1 = jnp.mod(i + step, n)
-            out = lax.dynamic_update_slice(
-                out, cur1[None], (src1,) + (0,) * (x.ndim - 1) + (f0,))
-    return out.reshape((n * x.shape[0],) + x.shape[1:])
-
-
-def bidir_ring_reduce_scatter(x: jax.Array, axis_name: str) -> jax.Array:
-    """Reduce-scatter (sum) along ``axis_name`` using both ring directions.
-
-    ``x`` is the full local operand ``(N*s, ...)``; returns the reduced shard
-    ``(s, ...)`` owned by this device — equivalent to
-    ``lax.psum_scatter(x, axis_name, tiled=True)``.
-    """
-    n = lax.axis_size(axis_name)
-    if n == 1:
-        return x
-    i = lax.axis_index(axis_name)
-    cw, ccw = _ring_perms(n)
-    s = x.shape[0] // n
-    blocks = x.reshape((n, s) + x.shape[1:])
-
-    f = x.shape[-1] if x.ndim > 1 else 1
-    f0 = f // 2 if x.ndim > 1 else 0
-
-    def blk(idx, lo, hi):
-        b = lax.dynamic_index_in_dim(blocks, jnp.mod(idx, n), axis=0,
-                                     keepdims=False)
-        if x.ndim > 1 and hi is not None:
-            b = b[..., lo:hi]
-        return b
-
-    if f0 == 0:
-        # Single-direction fallback (narrow features).
-        acc = blk(i - 1, 0, None)
-        for t in range(1, n):
-            acc = lax.ppermute(acc, axis_name, cw)
-            acc = acc + blk(i - t - 1, 0, None)
-        return acc
-
-    acc0 = blocks[..., :f0][0] * 0  # shape/dtype template
-    acc0 = lax.dynamic_index_in_dim(
-        blocks[..., :f0], jnp.mod(i - 1, n), axis=0, keepdims=False)
-    acc1 = lax.dynamic_index_in_dim(
-        blocks[..., f0:], jnp.mod(i + 1, n), axis=0, keepdims=False)
-    for t in range(1, n):
-        acc0 = lax.ppermute(acc0, axis_name, cw)
-        acc0 = acc0 + lax.dynamic_index_in_dim(
-            blocks[..., :f0], jnp.mod(i - t - 1, n), axis=0, keepdims=False)
-        acc1 = lax.ppermute(acc1, axis_name, ccw)
-        acc1 = acc1 + lax.dynamic_index_in_dim(
-            blocks[..., f0:], jnp.mod(i + t + 1, n), axis=0, keepdims=False)
-    return jnp.concatenate([acc0, acc1], axis=-1)
-
-
-def multipath_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
-    """All-reduce = bidirectional reduce-scatter + bidirectional all-gather.
-
-    Equivalent to ``lax.psum(x, axis_name)``. Requires ``x.shape[0]`` to be
-    divisible by the axis size (pad upstream otherwise).
-    """
-    n = lax.axis_size(axis_name)
-    if n == 1:
-        return x
-    shard = bidir_ring_reduce_scatter(x, axis_name)
-    return bidir_ring_all_gather(shard, axis_name)
-
-
-def multipath_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
-    """All-to-all along ``axis_name`` with opposite-direction step pairing.
-
-    ``x`` has leading dim ``N`` (one block per destination); returns the same
-    shape with block ``j`` received from device ``j`` — equivalent to
-    ``lax.all_to_all(x, axis_name, 0, 0, tiled=False)`` on a block-indexed
-    operand. Shift ``+s`` and ``+(N-s)`` travel opposite directions on the
-    physical ring, so pairing them stripes each step across both directions
-    (the MoE expert-parallel application of the paper's idea).
-    """
-    n = lax.axis_size(axis_name)
-    if n == 1:
-        return x
-    i = lax.axis_index(axis_name)
-    out = jnp.zeros_like(x)
-    # keep own block
-    own = lax.dynamic_index_in_dim(x, i, axis=0, keepdims=True)
-    out = lax.dynamic_update_slice_in_dim(out, own, i, axis=0)
-    for s in range(1, n):
-        # send block destined to (i+s) — a single full permutation; shifts s
-        # and n-s are emitted adjacently so the scheduler can overlap the two
-        # opposite ring directions.
-        perm = [(j, (j + s) % n) for j in range(n)]
-        block = lax.dynamic_index_in_dim(x, jnp.mod(i + s, n), axis=0,
-                                         keepdims=True)
-        recv = lax.ppermute(block, axis_name, perm)
-        out = lax.dynamic_update_slice_in_dim(
-            out, recv, jnp.mod(i - s, n), axis=0)
-    return out
-
-
-def psum_via_multipath(x: jax.Array, axis_name: str) -> jax.Array:
-    """Drop-in ``psum`` for arbitrary-shape operands.
-
-    Flattens, pads to a multiple of the axis size, multipath-all-reduces,
-    and restores the shape. Used by the manual-collectives training mode.
-    """
-    n = lax.axis_size(axis_name)
-    if n == 1:
-        return x
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % n
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    # reshape to (N*s,) rows for the ring algorithms (operate on 2-D)
-    red = multipath_all_reduce(flat.reshape(n, -1).reshape(n * (flat.shape[0] // n), 1),
-                               axis_name)
-    red = red.reshape(-1)[:x.size]
-    return red.reshape(x.shape)
+warnings.warn(
+    "repro.core.collectives is deprecated; use repro.comm.collectives or "
+    "CommSession collectives", DeprecationWarning, stacklevel=2)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
 
 def _shift_perm(n: int, shift: int):
     return [(i, (i + shift) % n) for i in range(n)]
@@ -36,7 +38,7 @@ def halo_exchange_ring(left_bnd: jax.Array, right_bnd: jax.Array,
     over the direct ±1 link, the second stages through the device two hops
     around the ring (the idle diagonal on a 4-device node).
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return right_bnd, left_bnd
 
@@ -80,7 +82,7 @@ def jacobi_step(u: jax.Array, axis_name: str, *, multipath: bool = False,
     left_halo, right_halo = halo_exchange_ring(
         u[:, :1], u[:, -1:], axis_name, multipath=multipath)
 
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     i = lax.axis_index(axis_name)
     # global edge → Dirichlet zeros
     left_halo = jnp.where(i == 0, jnp.zeros_like(left_halo), left_halo)

@@ -1,257 +1,18 @@
-"""PathPlanner: route enumeration + per-message path configuration.
+"""DEPRECATED shim — planning moved to :mod:`repro.comm`.
 
-Implements the paper's Multi-Path Communication Handler + ``GetPathConfig``
-(Algorithm 1, lines 4–11) and the offline topology tuner (§4.4):
-
-* enumerate the direct route and all 2-hop staged routes (via idle peer
-  devices, and optionally via the host),
-* pick the best ``max_paths`` routes,
-* assign each route a share of the message proportional to its bottleneck
-  bandwidth (host path gets its lower PCIe share automatically),
-* split each share into pipeline chunks (vertical split — chunk count is the
-  tunable the paper fixes via offline tuning; default target chunk 1 MB,
-  capped at ``max_chunks``).
-
-Environment overrides (paper §4.4 "Environment Configuration"):
-
-* ``REPRO_MP_MAX_PATHS``   — max concurrent paths (default 4)
-* ``REPRO_MP_CHUNK_BYTES`` — target chunk size (default 1 MiB, paper §4.3)
-* ``REPRO_MP_MAX_CHUNKS``  — max chunks per path (default 8)
-* ``REPRO_MP_HOST_PATH``   — "1"/"0" include the host-staged path
+``PathPlanner`` now lives in :mod:`repro.comm.planner`, the plan dataclasses
+in :mod:`repro.comm.plan`, and the ``REPRO_MP_*`` environment parsing in
+:meth:`repro.comm.config.CommConfig.from_env`. Construct a
+:class:`repro.comm.CommSession` instead of wiring planners by hand
+(DESIGN.md §6 migration guide).
 """
 
-from __future__ import annotations
+import warnings
 
-import dataclasses
-import os
+from repro.comm.config import CommConfig  # noqa: F401
+from repro.comm.plan import PathAssignment, TransferPlan  # noqa: F401
+from repro.comm.planner import PathPlanner  # noqa: F401
 
-from repro.core.topology import HOST, Route, Topology
-
-_MiB = 1 << 20
-
-
-def _env_int(name: str, default: int) -> int:
-    try:
-        return int(os.environ.get(name, default))
-    except ValueError:
-        return default
-
-
-def _env_bool(name: str, default: bool) -> bool:
-    v = os.environ.get(name)
-    if v is None:
-        return default
-    return v.strip() not in ("0", "false", "False", "")
-
-
-@dataclasses.dataclass(frozen=True)
-class PathAssignment:
-    """One path of a transfer: a route, its byte range, and its chunking.
-
-    ``granularity`` keeps every chunk boundary aligned (e.g. to the dtype
-    itemsize when the engine moves typed arrays rather than raw bytes).
-    """
-
-    route: Route
-    offset: int          # byte offset into the message (disjoint, §4.5)
-    nbytes: int          # share of the message on this path
-    num_chunks: int      # vertical split (pipelining)
-    granularity: int = 1
-
-    def chunk_bounds(self) -> list[tuple[int, int]]:
-        """Disjoint (offset, size) per chunk; last chunk absorbs remainder."""
-        if self.nbytes == 0:
-            return []
-        g = self.granularity
-        base = (self.nbytes // self.num_chunks) // g * g
-        bounds = []
-        off = self.offset
-        for i in range(self.num_chunks):
-            size = base if i < self.num_chunks - 1 else (
-                self.nbytes - base * (self.num_chunks - 1))
-            bounds.append((off, size))
-            off += size
-        return bounds
-
-
-@dataclasses.dataclass(frozen=True)
-class TransferPlan:
-    """The full 2-D plan for one P2P message (horizontal × vertical split)."""
-
-    src: int
-    dst: int
-    nbytes: int
-    paths: tuple[PathAssignment, ...]
-    topology_name: str
-
-    @property
-    def num_paths(self) -> int:
-        return len(self.paths)
-
-    @property
-    def num_nodes(self) -> int:
-        """Copy-node count of the equivalent CUDA Graph (paper Fig. 13/14):
-        one node per chunk per hop."""
-        return sum(p.num_chunks * p.route.num_hops for p in self.paths)
-
-    def covered_bytes(self) -> int:
-        return sum(p.nbytes for p in self.paths)
-
-
-class PathPlanner:
-    """Selects routes and builds :class:`TransferPlan` objects."""
-
-    def __init__(self, topology: Topology, *,
-                 max_paths: int | None = None,
-                 chunk_bytes: int | None = None,
-                 max_chunks: int | None = None,
-                 include_host: bool | None = None,
-                 multipath_threshold: int = 2 * _MiB):
-        self.topology = topology
-        self.max_paths = max_paths if max_paths is not None else _env_int(
-            "REPRO_MP_MAX_PATHS", 4)
-        self.chunk_bytes = chunk_bytes if chunk_bytes is not None else _env_int(
-            "REPRO_MP_CHUNK_BYTES", _MiB)
-        self.max_chunks = max_chunks if max_chunks is not None else _env_int(
-            "REPRO_MP_MAX_CHUNKS", 8)
-        self.include_host = include_host if include_host is not None else (
-            _env_bool("REPRO_MP_HOST_PATH", False))
-        # Paper §5.3: multi-pathing engages at 2 MB; below that the single
-        # direct path wins (launch overhead dominates).
-        self.multipath_threshold = multipath_threshold
-
-    # -- route enumeration --------------------------------------------------
-    def enumerate_routes(self, src: int, dst: int,
-                         include_host: bool | None = None) -> list[Route]:
-        """All 1- and 2-hop routes src→dst, best (direct, then by bw) first.
-
-        Staged routes never reuse a directional link of the direct route, so
-        per-link exclusivity (§4.5 contention avoidance) holds by construction.
-        """
-        if src == dst:
-            raise ValueError("src == dst")
-        topo = self.topology
-        include_host = (self.include_host if include_host is None
-                        else include_host)
-        routes: list[Route] = []
-        direct = topo.link(src, dst)
-        if direct is not None:
-            routes.append(Route(src, dst, None, (direct,),
-                                direct.bandwidth_gbps))
-        vias = [d for d in topo.devices() if d not in (src, dst)]
-        if include_host:
-            vias.append(HOST)
-        for via in vias:
-            h1, h2 = topo.link(src, via), topo.link(via, dst)
-            if h1 is None or h2 is None:
-                continue
-            routes.append(Route(src, dst, via, (h1, h2),
-                                min(h1.bandwidth_gbps, h2.bandwidth_gbps)))
-        if len(routes) < self.max_paths:
-            # Torus case: adjacent chips share no common neighbour (girth
-            # 4), so alternative routes are 3-hop detours through a
-            # perpendicular axis (src→v1→v2→dst) — the TPU analogue of the
-            # paper's staged-GPU path (DESIGN.md §2). Only link-disjoint
-            # detours (vs routes found so far) are admitted.
-            used = {l for r in routes for l in r.directional_links()}
-            for v1 in topo.neighbors(src):
-                if v1 in (dst, src):
-                    continue
-                for v2 in topo.neighbors(dst):
-                    if v2 in (src, dst, v1):
-                        continue
-                    h1, h2, h3 = (topo.link(src, v1), topo.link(v1, v2),
-                                  topo.link(v2, dst))
-                    if h1 is None or h2 is None or h3 is None:
-                        continue
-                    links = {(src, v1), (v1, v2), (v2, dst)}
-                    if links & used:
-                        continue
-                    used |= links
-                    routes.append(Route(
-                        src, dst, v1, (h1, h2, h3),
-                        min(h.bandwidth_gbps for h in (h1, h2, h3))))
-        # direct first, then staged by hop count and bandwidth, host last
-        # (paper: the host path is the marginal contributor).
-        routes.sort(key=lambda r: (r.via is not None,
-                                   r.via == HOST,
-                                   r.num_hops,
-                                   -r.bottleneck_gbps))
-        return routes
-
-    # -- plan construction ---------------------------------------------------
-    def plan(self, src: int, dst: int, nbytes: int, *,
-             max_paths: int | None = None,
-             include_host: bool | None = None,
-             num_chunks: int | None = None,
-             granularity: int = 1) -> TransferPlan:
-        """Build the 2-D transfer plan (Algorithm 1 lines 4–11)."""
-        if nbytes <= 0:
-            raise ValueError("nbytes must be positive")
-        if nbytes % granularity:
-            raise ValueError(f"nbytes {nbytes} not a multiple of "
-                             f"granularity {granularity}")
-        max_paths = max_paths or self.max_paths
-        routes = self.enumerate_routes(src, dst, include_host=include_host)
-        if not routes:
-            raise ValueError(
-                f"no route {src}->{dst} in topology {self.topology.name}")
-        if nbytes < self.multipath_threshold:
-            routes = routes[:1]
-        else:
-            routes = routes[:max_paths]
-
-        total_bw = sum(r.bottleneck_gbps for r in routes)
-        paths: list[PathAssignment] = []
-        offset = 0
-        for i, route in enumerate(routes):
-            if i == len(routes) - 1:
-                share = nbytes - offset  # remainder absorbs rounding (§4.5)
-            else:
-                share = (int(nbytes * route.bottleneck_gbps / total_bw)
-                         // granularity * granularity)
-            if share <= 0:
-                continue
-            if num_chunks is not None:
-                chunks = num_chunks
-            else:
-                chunks = max(1, min(self.max_chunks,
-                                    -(-share // self.chunk_bytes)))
-            chunks = min(chunks, max(1, share // granularity))
-            paths.append(PathAssignment(route, offset, share, chunks,
-                                        granularity))
-            offset += share
-        return TransferPlan(src, dst, nbytes, tuple(paths),
-                            self.topology.name)
-
-    # -- offline tuner (paper §4.4) -------------------------------------------
-    def tune(self, src: int, dst: int, nbytes: int, *,
-             path_counts: tuple[int, ...] = (1, 2, 3, 4),
-             chunk_counts: tuple[int, ...] = (1, 2, 4, 8, 16),
-             include_host_options: tuple[bool, ...] = (False, True),
-             use_compiled_plans: bool = True) -> TransferPlan:
-        """Exhaustive offline search for the best (paths × chunks × host)
-        configuration under the analytic pipeline model.
-
-        The paper tunes separately for CUDA-Graph and non-graph modes because
-        launch overheads differ; ``use_compiled_plans`` toggles which launch
-        overhead model is applied.
-        """
-        from repro.core.pipelining import estimate_transfer_time_s
-
-        best_plan, best_t = None, float("inf")
-        for host in include_host_options:
-            if host and not any(l.src == HOST or l.dst == HOST
-                                for l in self.topology.links.values()):
-                continue
-            for npaths in path_counts:
-                for nchunks in chunk_counts:
-                    plan = self.plan(src, dst, nbytes, max_paths=npaths,
-                                     include_host=host, num_chunks=nchunks)
-                    t = estimate_transfer_time_s(
-                        plan, self.topology,
-                        compiled_plan=use_compiled_plans)
-                    if t < best_t:
-                        best_plan, best_t = plan, t
-        assert best_plan is not None
-        return best_plan
+warnings.warn(
+    "repro.core.paths is deprecated; use repro.comm (CommSession, "
+    "PathPlanner, CommConfig.from_env)", DeprecationWarning, stacklevel=2)

@@ -3,7 +3,8 @@
 The engine performs the paper's two splits (§4.3):
 
 * **horizontal** — the message is partitioned across the selected paths
-  (done by the :class:`~repro.core.paths.PathPlanner`, shares ∝ bandwidth),
+  (done by the :class:`~repro.comm.planner.PathPlanner` via its
+  :class:`~repro.comm.policy.PathPolicy`, shares ∝ bandwidth),
 * **vertical** — each path's share is split into chunks that flow through the
   path's hops in a pipelined fashion (hop-2 of chunk *i* overlaps hop-1 of
   chunk *i+1*).
@@ -25,10 +26,12 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Iterable, Sequence
+from typing import TYPE_CHECKING, Iterable, Sequence
 
-from repro.core.paths import TransferPlan
 from repro.core.topology import HOST, Topology
+
+if TYPE_CHECKING:  # pragma: no cover - typing only (avoids an import cycle)
+    from repro.comm.plan import TransferPlan
 
 
 @dataclasses.dataclass(frozen=True)

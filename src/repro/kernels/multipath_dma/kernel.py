@@ -36,7 +36,9 @@ from jax import lax
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.core.paths import TransferPlan
+from repro.compat import pallas_tpu_compiler_params, pallas_interpret_flag
+
+from repro.comm.plan import TransferPlan
 from repro.core.topology import HOST
 
 
@@ -202,6 +204,6 @@ def build_multipath_dma(plan: TransferPlan, nelems: int, dtype,
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(collective_id=collective_id),
-        interpret=pltpu.InterpretParams() if interpret else False,
+        compiler_params=pallas_tpu_compiler_params(collective_id=collective_id),
+        interpret=pallas_interpret_flag(interpret),
     )

@@ -13,7 +13,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.paths import TransferPlan
+from repro.compat import shard_map
+
+from repro.comm.plan import TransferPlan
 from repro.kernels.multipath_dma.kernel import build_multipath_dma
 
 AXIS = "dev"
@@ -41,7 +43,7 @@ def multipath_dma_transfer(x: jax.Array, plan: TransferPlan,
     def local(xl):  # (1, nelems) per device
         return inner(xl[0])[None]
 
-    fn = jax.jit(jax.shard_map(local, mesh=mesh, in_specs=P(AXIS),
-                               out_specs=P(AXIS), check_vma=False))
+    fn = jax.jit(shard_map(local, mesh=mesh, in_specs=P(AXIS),
+                           out_specs=P(AXIS), check_vma=False))
     x = jax.device_put(x, NamedSharding(mesh, P(AXIS)))
     return fn(x)

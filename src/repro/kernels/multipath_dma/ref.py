@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.paths import TransferPlan
+from repro.comm.plan import TransferPlan
 from repro.core.pipelining import build_schedule
 
 

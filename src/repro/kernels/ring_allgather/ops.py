@@ -5,6 +5,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.kernels.ring_allgather.kernel import build_ring_allgather
 
 AXIS = "dev"
@@ -24,7 +26,7 @@ def ring_allgather(x: jax.Array, mesh: jax.sharding.Mesh, *,
     rows = x.shape[0] // n
     inner = build_ring_allgather((rows, x.shape[1]), x.dtype, n,
                                  axis_name=AXIS, interpret=interpret)
-    fn = jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=P(AXIS),
-                               out_specs=P(None), check_vma=False))
+    fn = jax.jit(shard_map(inner, mesh=mesh, in_specs=P(AXIS),
+                           out_specs=P(None), check_vma=False))
     x = jax.device_put(x, NamedSharding(mesh, P(AXIS)))
     return fn(x)

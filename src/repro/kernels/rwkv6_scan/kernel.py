@@ -35,6 +35,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import pallas_tpu_compiler_params
+
 
 def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *,
                   chunk: int):
@@ -102,7 +104,7 @@ def rwkv6_scan_kernel(r: jax.Array, k: jax.Array, v: jax.Array,
         out_specs=seq_spec_v,
         out_shape=jax.ShapeDtypeStruct((bh, s, dv), r.dtype),
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

@@ -33,6 +33,8 @@ import json
 import time
 import traceback
 
+from repro.compat import set_mesh
+
 
 def _cost_tuple(compiled, default_group):
     from repro.launch import roofline
@@ -59,7 +61,7 @@ def lower_and_compile(arch, shape, mesh):
     cell = input_specs(arch, shape, mesh)
     # set_mesh (not the legacy `with mesh:`) — it installs the abstract mesh
     # so the model's activation sharding constraints resolve.
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(cell.fn).lower(*cell.abstract_args)
         compiled = lowered.compile()
     return cell, compiled

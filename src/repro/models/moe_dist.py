@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.models import pspec
 
 
@@ -155,8 +157,8 @@ def moe_apply_dist(x: jax.Array, params: dict, *, top_k: int, kind: str,
     in_specs = (P(dp, None), P(None, None), w_spec,
                 (w_spec if w3 is not None else P(None, None, None)),
                 w2_spec)
-    fn = jax.shard_map(wrapped, mesh=mesh, in_specs=in_specs,
-                       out_specs=P(dp, None), check_vma=False)
+    fn = shard_map(wrapped, mesh=mesh, in_specs=in_specs,
+                   out_specs=P(dp, None), check_vma=False)
     if w3 is None:
         w3 = jnp.zeros((e, 1, 1), x.dtype)  # placeholder, unused by kinds
     out = fn(x, params["router"], params["w1"], w3, params["w2"])

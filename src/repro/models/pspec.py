@@ -18,12 +18,14 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh
+
 DP = ("pod", "data")   # logical batch axes (filtered per ambient mesh)
 
 
 def _ambient_mesh():
     try:
-        m = jax.sharding.get_abstract_mesh()
+        m = get_abstract_mesh()
     except Exception:  # noqa: BLE001
         return None
     if m is None or not getattr(m, "axis_names", ()):

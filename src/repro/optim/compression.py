@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
 
 def _quantize(g: jax.Array):
     scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
@@ -27,7 +29,7 @@ def _quantize(g: jax.Array):
 
 def compressed_psum(g: jax.Array, axis_name: str) -> jax.Array:
     """int8 all-reduce mean of one gradient leaf over ``axis_name``."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     q, scale = _quantize(g.astype(jnp.float32))
     # Sum int8 payloads in int32 to avoid overflow; scales vary per member,
     # so each member's contribution is reconstructed with its own scale:
@@ -46,7 +48,7 @@ def compressed_psum_with_feedback(g: jax.Array, residual: jax.Array,
                                   axis_name: str):
     """Error-feedback compression: quantize (g + residual), carry the
     quantization error to the next step. Returns (mean_grad, new_residual)."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     target = g.astype(jnp.float32) + residual
     q, scale = _quantize(target)
     sent = q.astype(jnp.float32) * scale

@@ -4,12 +4,17 @@
 for ``decode_32k`` / ``long_500k``; ``ServeEngine`` is the runnable engine
 used by the examples — batched requests, prefill-into-cache, greedy/top-k
 sampling, per-request completion tracking.
+
+Communication goes through an optional :class:`repro.comm.CommSession`:
+``ServeEngine.migrate_kv`` moves a populated KV cache between devices over
+the session's compiled multi-path plans (the prefill→decode disaggregation
+primitive), with one cached plan per distinct leaf (size, dtype).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import TYPE_CHECKING, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +23,9 @@ from jax.sharding import Mesh
 from repro.configs.base import ArchConfig
 from repro.models import transformer as tfm
 from repro.training import sharding as shd
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.comm.session import CommSession
 
 
 def pick_kv_chunks(cfg: ArchConfig, mesh: Mesh, batch: int,
@@ -53,15 +61,36 @@ class ServeEngine:
     length, prefills once, decodes greedily until every request finishes."""
 
     def __init__(self, cfg: ArchConfig, params, *, max_len: int = 256,
-                 kv_chunks: int = 4, temperature: float = 0.0):
+                 kv_chunks: int = 4, temperature: float = 0.0,
+                 comm: "CommSession | None" = None):
         self.cfg = cfg
         self.params = params
         self.spec = tfm.cache_spec(cfg, max_len=max_len,
                                    kv_chunks=kv_chunks)
         self.temperature = temperature
+        self.comm = comm
         self._decode = jax.jit(make_serve_step(cfg, self.spec))
         self._prefill = jax.jit(
             lambda p, b: tfm.prefill_forward(p, cfg, b, self.spec))
+
+    def prefill(self, tokens: jax.Array):
+        """Run the prefill forward pass: ``(B, S) int32`` prompt tokens →
+        ``(logits, cache)``. The cache is what :meth:`migrate_kv` moves."""
+        return self._prefill(self.params, {"tokens": jnp.asarray(tokens,
+                                                                 jnp.int32)})
+
+    def migrate_kv(self, cache, src: int, dst: int):
+        """Move a KV cache from device ``src`` to ``dst`` through the comm
+        session's multi-path engine (prefill→decode disaggregation).
+
+        Every leaf rides the session's compiled transfer plans, so repeated
+        migrations of same-shaped caches are pure cache hits — check
+        ``self.comm.stats()["cache"]``.
+        """
+        if self.comm is None:
+            raise ValueError("ServeEngine was built without a CommSession; "
+                             "pass comm= to enable KV migration")
+        return self.comm.send_pytree(cache, src, dst)
 
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.temperature <= 0.0:
@@ -76,7 +105,7 @@ class ServeEngine:
         toks = jnp.asarray(
             [([0] * (plen - len(r.prompt))) + r.prompt for r in reqs],
             jnp.int32)
-        logits, cache = self._prefill(self.params, {"tokens": toks})
+        logits, cache = self.prefill(toks)
         key = jax.random.key(seed)
         cur = jnp.asarray(plen - 1, jnp.int32)
         next_tok = self._sample(logits[:, -1], key)

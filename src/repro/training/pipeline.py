@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 AXIS = "pipe"
 
 
@@ -88,7 +90,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x: jax.Array,
         # surface the last stage's outputs everywhere
         return lax.psum(jnp.where(sid == num_stages - 1, outs, 0.0), AXIS)
 
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(P(AXIS), P()), out_specs=P(),
-                       check_vma=False)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(AXIS), P()), out_specs=P(),
+                   check_vma=False)
     return fn(stage_params, x)

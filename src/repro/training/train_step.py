@@ -3,22 +3,34 @@
 Produces jit-able step functions with explicit in/out shardings (the same
 artifacts the multi-pod dry-run lowers). Gradient accumulation runs the
 microbatch loop as a ``lax.scan`` so the HLO stays one-microbatch-sized.
+
+Two communication modes:
+
+* :func:`make_train_step` — auto-sharded: XLA inserts the collectives.
+* :func:`make_dp_train_step` — manual data parallelism driven through a
+  :class:`repro.comm.CommSession`: the step runs under ``shard_map`` over
+  the session's axis and gradients are averaged with the session's
+  multipath (bidirectional-ring) collectives instead of ``lax.psum``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable
+from typing import TYPE_CHECKING, Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.models import transformer as tfm
 from repro.optim import OptimConfig, apply_updates, init_opt_state
 from repro.training import sharding as shd
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.comm.session import CommSession
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +45,37 @@ def make_loss_fn(cfg: ArchConfig, ts: TrainStepConfig):
     return loss
 
 
+def _make_grad_fn(cfg: ArchConfig, ts: TrainStepConfig) -> Callable:
+    """``(params, batch) -> (loss, grads)`` with microbatch accumulation."""
+    loss_fn = make_loss_fn(cfg, ts)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def grads_of(params, batch):
+        if ts.microbatches == 1:
+            return grad_fn(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            mb = b // ts.microbatches
+            return x.reshape(ts.microbatches, mb, *x.shape[1:])
+        micro = jax.tree.map(split, batch)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def accum(carry, mb):
+            acc, loss_acc = carry
+            loss, grads = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss), None
+
+        (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0), micro)
+        grads = jax.tree.map(lambda g: g / ts.microbatches, gsum)
+        return lsum / ts.microbatches, grads
+
+    return grads_of
+
+
 def make_train_step(cfg: ArchConfig, ts: TrainStepConfig,
                     opt: OptimConfig) -> Callable:
     """Returns ``step(state, batch) -> (state, metrics)`` (un-jitted).
@@ -41,38 +84,49 @@ def make_train_step(cfg: ArchConfig, ts: TrainStepConfig,
     the batch's leading dim is split and gradients are accumulated in fp32
     via lax.scan (one-microbatch HLO).
     """
-    loss_fn = make_loss_fn(cfg, ts)
-    grad_fn = jax.value_and_grad(loss_fn)
+    grads_of = _make_grad_fn(cfg, ts)
 
     def step(state, batch):
         params = state["params"]
-        if ts.microbatches == 1:
-            loss, grads = grad_fn(params, batch)
-        else:
-            def split(x):
-                b = x.shape[0]
-                mb = b // ts.microbatches
-                return x.reshape(ts.microbatches, mb, *x.shape[1:])
-            micro = jax.tree.map(split, batch)
-            zeros = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
-
-            def accum(carry, mb):
-                acc, loss_acc = carry
-                loss, grads = grad_fn(params, mb)
-                acc = jax.tree.map(
-                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
-                return (acc, loss_acc + loss), None
-
-            (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0), micro)
-            grads = jax.tree.map(lambda g: g / ts.microbatches, gsum)
-            loss = lsum / ts.microbatches
+        loss, grads = grads_of(params, batch)
         new_params, new_opt, metrics = apply_updates(
             params, grads, state["opt"], opt)
         metrics["loss"] = loss
         return {"params": new_params, "opt": new_opt}, metrics
 
     return step
+
+
+def make_dp_train_step(cfg: ArchConfig, ts: TrainStepConfig,
+                       opt: OptimConfig, comm: "CommSession") -> Callable:
+    """Data-parallel step with manual multipath gradient collectives.
+
+    The returned ``step(state, batch) -> (state, metrics)`` runs under
+    ``shard_map`` over ``comm``'s mesh axis: params/opt state are
+    replicated, the batch is sharded on its leading dim, and per-shard
+    gradients (and the loss) are averaged with
+    ``comm.collectives.pmean`` — the bidirectional-ring all-reduce that
+    stripes every hop across both ring directions. Numerically equivalent
+    to ``make_train_step`` under jit (mean-of-shard-means == global mean
+    for equal shards).
+    """
+    grads_of = _make_grad_fn(cfg, ts)
+    ax = comm.axis_name
+    mesh = comm.mesh
+
+    def local_step(state, batch):
+        params = state["params"]
+        loss, grads = grads_of(params, batch)
+        grads = jax.tree.map(comm.collectives.pmean, grads)
+        loss = comm.collectives.pmean(loss)
+        new_params, new_opt, metrics = apply_updates(
+            params, grads, state["opt"], opt)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return shard_map(local_step, mesh=mesh,
+                     in_specs=(P(), P(ax)), out_specs=(P(), P()),
+                     check_vma=False)
 
 
 def state_shapes(cfg: ArchConfig, opt: OptimConfig):

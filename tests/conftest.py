@@ -14,6 +14,8 @@ import jax  # noqa: E402
 
 import pytest  # noqa: E402
 
+from repro.compat import make_mesh  # noqa: E402
+
 
 @pytest.fixture(scope="session")
 def dev_mesh():
@@ -24,5 +26,4 @@ def dev_mesh():
 @pytest.fixture(scope="session")
 def dp_tp_mesh():
     """2-D (data=2, model=4) mesh used by model-sharding tests."""
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((2, 4), ("data", "model"))

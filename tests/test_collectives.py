@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.core.collectives import (bidir_ring_all_gather,
                                     bidir_ring_reduce_scatter,
                                     multipath_all_reduce,
@@ -14,8 +16,8 @@ from repro.core.collectives import (bidir_ring_all_gather,
 
 
 def _run(fn, x, mesh, in_spec, out_spec):
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_spec,
-                                 out_specs=out_spec, check_vma=False))(x)
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_spec,
+                             out_specs=out_spec, check_vma=False))(x)
 
 
 @pytest.mark.parametrize("shape", [(8, 4), (8, 16), (16, 7), (8, 1)])
@@ -73,7 +75,7 @@ def test_collective_uses_both_directions(dev_mesh):
     """Structural check: the bidirectional AG emits ppermutes in both ring
     directions (this is the multipath property — 2 links per step)."""
     x = jax.ShapeDtypeStruct((8, 4), jnp.float32)
-    lowered = jax.jit(jax.shard_map(
+    lowered = jax.jit(shard_map(
         lambda v: bidir_ring_all_gather(v, "dev"), mesh=dev_mesh,
         in_specs=P("dev"), out_specs=P(None), check_vma=False)).lower(x)
     txt = lowered.as_text().replace(" ", "")
@@ -84,4 +86,21 @@ def test_collective_uses_both_directions(dev_mesh):
     has_cw = any("[0,1]" in l or "{0,1}" in l for l in perm_lines)
     has_ccw = any("[0,7]" in l or "[1,0]" in l or "{1,0}" in l
                   for l in perm_lines)
+    assert has_cw and has_ccw
+
+
+def test_psum_uses_both_directions(dev_mesh):
+    """Regression: a single-column operand silently degraded psum to the
+    one-directional ring; the (N*s, 2) packing must engage both."""
+    x = jax.ShapeDtypeStruct((5, 3), jnp.float32)
+    lowered = jax.jit(shard_map(
+        lambda v: psum_via_multipath(v, "dev"), mesh=dev_mesh,
+        in_specs=P(None, None), out_specs=P(None, None),
+        check_vma=False)).lower(x)
+    txt = lowered.as_text().replace(" ", "")
+    perm_lines = [l for l in txt.splitlines() if "collective_permute" in l
+                  or "collective-permute" in l]
+    assert perm_lines, "no collective-permutes found"
+    has_cw = any("[0,1]" in l or "{0,1}" in l for l in perm_lines)
+    has_ccw = any("[1,0]" in l or "{1,0}" in l for l in perm_lines)
     assert has_cw and has_ccw

@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.core.halo import halo_exchange_ring, jacobi_step
 from repro.kernels.jacobi import ref as j_ref
 
@@ -28,10 +30,10 @@ def test_halo_exchange(dev_mesh, multipath):
                                     multipath=multipath)
         return lh[None], rh[None]
 
-    f = jax.jit(jax.shard_map(body, mesh=dev_mesh,
-                              in_specs=(P("dev"), P("dev")),
-                              out_specs=(P("dev"), P("dev")),
-                              check_vma=False))
+    f = jax.jit(shard_map(body, mesh=dev_mesh,
+                          in_specs=(P("dev"), P("dev")),
+                          out_specs=(P("dev"), P("dev")),
+                          check_vma=False))
     lh, rh = f(left, right)
     # device i's left halo == right boundary of device i-1
     np.testing.assert_array_equal(np.asarray(lh),
@@ -52,8 +54,8 @@ def test_jacobi_step_matches_global(dev_mesh, multipath):
     def body(u):
         return jacobi_step(u[0], "dev", multipath=multipath)[None]
 
-    f = jax.jit(jax.shard_map(body, mesh=dev_mesh, in_specs=P("dev"),
-                              out_specs=P("dev"), check_vma=False))
+    f = jax.jit(shard_map(body, mesh=dev_mesh, in_specs=P("dev"),
+                          out_specs=P("dev"), check_vma=False))
     got_parts = np.asarray(f(u_parts))
     got = np.concatenate(list(got_parts), axis=1)
     ref = _global_jacobi_ref(u_global)
@@ -70,9 +72,9 @@ def test_jacobi_converges(dev_mesh):
     def sweep(u, multipath):
         def body(ul):
             return jacobi_step(ul[0], "dev", multipath=multipath)[None]
-        return jax.jit(jax.shard_map(body, mesh=dev_mesh,
-                                     in_specs=P("dev"), out_specs=P("dev"),
-                                     check_vma=False))(u)
+        return jax.jit(shard_map(body, mesh=dev_mesh,
+                                 in_specs=P("dev"), out_specs=P("dev"),
+                                 check_vma=False))(u)
 
     u_sp, u_mp = u, u
     for _ in range(60):

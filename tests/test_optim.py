@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.optim import (OptimConfig, apply_updates, compressed_psum,
                          compressed_psum_with_feedback, global_norm,
                          init_opt_state, lr_schedule)
@@ -71,9 +73,9 @@ def test_compressed_psum_error_bound(dev_mesh):
     def body(v):
         return compressed_psum(v[0], "dev")[None]
 
-    got = jax.jit(jax.shard_map(body, mesh=dev_mesh, in_specs=P("dev"),
-                                out_specs=P("dev"),
-                                check_vma=False))(x)
+    got = jax.jit(shard_map(body, mesh=dev_mesh, in_specs=P("dev"),
+                            out_specs=P("dev"),
+                            check_vma=False))(x)
     ref = np.mean(np.asarray(x), axis=0)
     rel = np.max(np.abs(np.asarray(got)[0] - ref)) / (
         np.max(np.abs(ref)) + 1e-9)
@@ -95,7 +97,7 @@ def test_error_feedback_reduces_bias(dev_mesh):
                     out, nr = compressed_psum_with_feedback(
                         v[0], r[0], "dev")
                     return out[None], nr[None]
-                out, res = jax.jit(jax.shard_map(
+                out, res = jax.jit(shard_map(
                     body, mesh=dev_mesh, in_specs=(P("dev"), P("dev")),
                     out_specs=(P("dev"), P("dev")),
                     check_vma=False))(g, res)
@@ -103,7 +105,7 @@ def test_error_feedback_reduces_bias(dev_mesh):
             else:
                 def body(v):
                     return compressed_psum(v[0], "dev")[None]
-                out = jax.jit(jax.shard_map(
+                out = jax.jit(shard_map(
                     body, mesh=dev_mesh, in_specs=P("dev"),
                     out_specs=P("dev"), check_vma=False))(g)
                 acc = acc + out[0]

@@ -1,0 +1,104 @@
+"""Hypothesis property tests (optional dependency, pyproject ``[test]``).
+
+Collected only when ``hypothesis`` is installed — the deterministic sweeps
+covering the same code live in ``test_topology_paths.py``,
+``test_multipath_engine.py``, and ``test_kernels.py``.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.comm import (CommConfig, CommSession, PathPlanner,  # noqa: E402
+                        TransferPlanCache)
+from repro.core import Topology, build_schedule, validate_plan  # noqa: E402
+
+MiB = 1 << 20
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    nbytes=st.integers(1, 512 * MiB),
+    max_paths=st.integers(1, 4),
+    chunks=st.one_of(st.none(), st.integers(1, 16)),
+    gran_pow=st.integers(0, 3),
+    host=st.booleans(),
+    src=st.integers(0, 3), dst=st.integers(0, 3),
+)
+def test_plan_invariants_property(nbytes, max_paths, chunks, gran_pow,
+                                  host, src, dst):
+    """§4.5 integrity invariants hold for arbitrary plans (hypothesis)."""
+    if src == dst:
+        return
+    gran = 2 ** gran_pow
+    nbytes = max(gran, nbytes // gran * gran)
+    topo = Topology.full_mesh(4)
+    planner = PathPlanner(topo)
+    plan = planner.plan(src, dst, nbytes, max_paths=max_paths,
+                        include_host=host, num_chunks=chunks,
+                        granularity=gran)
+    validate_plan(plan)   # disjoint cover + link exclusivity + connectivity
+    sched = build_schedule(plan)
+    assert sum(t.nbytes for t in sched) == nbytes
+    # alignment: every chunk boundary is granularity-aligned except the tail
+    for t in sched:
+        assert t.offset % gran == 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(src=st.integers(0, 7), dst=st.integers(0, 7),
+       nelems=st.integers(8, 5000),
+       max_paths=st.integers(1, 4),
+       chunks=st.integers(1, 4))
+def test_transfer_property(src, dst, nelems, max_paths, chunks):
+    if src == dst:
+        return
+    topo = Topology.full_mesh(8, with_host=False)
+    sess = CommSession(CommConfig(multipath_threshold=16),
+                       topology=topo,
+                       cache=TransferPlanCache(capacity=256))
+    msg = jnp.asarray(np.random.RandomState(0).randn(nelems), jnp.float32)
+    got = sess.send(msg, src, dst, max_paths=max_paths,
+                    num_chunks=chunks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(msg))
+
+
+@settings(max_examples=8, deadline=None)
+@given(nelems=st.integers(64, 4096), paths=st.integers(1, 3),
+       chunks=st.integers(1, 5))
+def test_dma_schedule_replay_property(nelems, paths, chunks):
+    from repro.kernels.multipath_dma import ref as dma_ref
+
+    topo = Topology.full_mesh(4)
+    planner = PathPlanner(topo, multipath_threshold=4)
+    plan = planner.plan(2, 3, nelems * 4, granularity=4,
+                        max_paths=paths, num_chunks=chunks)
+    x = np.random.RandomState(1).randn(4, nelems).astype(np.float32)
+    rep = dma_ref.replay_schedule(x, plan, 4)
+    ref = dma_ref.multipath_transfer_ref(x, plan)
+    np.testing.assert_array_equal(rep, ref)
+
+
+@settings(max_examples=6, deadline=None)
+@given(s=st.integers(16, 160), chunk=st.sampled_from([16, 32, 64]),
+       decay_lo=st.floats(0.7, 0.95))
+def test_rwkv6_property(s, chunk, decay_lo):
+    from repro.kernels.rwkv6_scan import ops as r_ops
+    from repro.kernels.rwkv6_scan import ref as r_ref
+
+    rng = np.random.RandomState(4)
+    bh, dk, dv = 2, 16, 16
+    r = jnp.asarray(rng.randn(bh, s, dk).astype(np.float32)) * 0.4
+    k = jnp.asarray(rng.randn(bh, s, dk).astype(np.float32)) * 0.4
+    v = jnp.asarray(rng.randn(bh, s, dv).astype(np.float32))
+    w = jnp.asarray(rng.uniform(decay_lo, 0.999,
+                                (bh, s, dk)).astype(np.float32))
+    u = jnp.asarray(rng.randn(bh, dk).astype(np.float32)) * 0.2
+    got = r_ops.rwkv6_scan(r, k, v, w, u, chunk=chunk)
+    ref = r_ref.rwkv6_scan_ref(r, k, v, w, u)
+    scale = np.max(np.abs(np.asarray(ref))) + 1e-9
+    assert np.max(np.abs(np.asarray(got) - np.asarray(ref))) / scale < 3e-4

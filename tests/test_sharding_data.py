@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import abstract_mesh, set_mesh
 
 from repro.configs import REGISTRY, load_all
 from repro.data import DataConfig, SyntheticDataset
@@ -16,8 +18,8 @@ from repro.training import sharding as shd
 load_all()
 ALL = sorted(REGISTRY)
 
-SINGLE = AbstractMesh((16, 16), ("data", "model"))
-MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+SINGLE = abstract_mesh((16, 16), ("data", "model"))
+MULTI = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _check_specs(specs, shapes, mesh):
@@ -156,7 +158,7 @@ def test_decode_step_sharded_matches_unsharded(name, dp_tp_mesh):
     cache = jax.device_put(cache, jax.tree.map(
         lambda sp: NamedSharding(dp_tp_mesh, sp), c_specs,
         is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)))
-    with jax.set_mesh(dp_tp_mesh):
+    with set_mesh(dp_tp_mesh):
         step = jax.jit(lambda c, t, i: tfm.decode_step(
             params, cfg, c, t, i, spec))
         for t in range(s):
@@ -185,7 +187,7 @@ def test_train_step_sharded_matches_unsharded(name, dp_tp_mesh):
     }
     step = make_train_step(cfg, TrainStepConfig(), opt)
     s_ref, m_ref = jax.jit(step)(init_state(cfg, opt, seed=7), ds_batch)
-    with jax.set_mesh(dp_tp_mesh):
+    with set_mesh(dp_tp_mesh):
         state = init_state(cfg, opt, mesh=dp_tp_mesh, seed=7)
         s_got, m_got = jax.jit(step)(state, ds_batch)
     assert abs(float(m_got["loss"]) - float(m_ref["loss"])) < 2e-3

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import set_mesh
+
 from repro.configs import REGISTRY, load_all
 from repro.data import DataConfig, SyntheticDataset
 from repro.models import transformer as tfm
@@ -82,7 +84,7 @@ def test_moe_dist_matches_pure(dp_tp_mesh):
     x = jax.random.normal(jax.random.key(1), (T, d), jnp.float32)
     ref, _ = moe_lib.moe_apply(x, params, top_k=k, kind="swiglu",
                                dropless=True)
-    with jax.set_mesh(dp_tp_mesh):
+    with set_mesh(dp_tp_mesh):
         out, _ = jax.jit(lambda x, p: moe_dist.moe_apply_dist(
             x, p, top_k=k, kind="swiglu", dropless=True))(x, params)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),

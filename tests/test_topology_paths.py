@@ -1,7 +1,6 @@
 """Unit + property tests for topology, route enumeration, and planning."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (HOST, PathPlanner, Topology, build_schedule,
                         estimate_transfer_time_s, validate_plan)
@@ -73,35 +72,6 @@ def test_plan_rejects_bad_granularity(beluga):
     planner = PathPlanner(beluga)
     with pytest.raises(ValueError):
         planner.plan(0, 1, 10 * MiB + 1, granularity=4)
-
-
-@settings(max_examples=60, deadline=None)
-@given(
-    nbytes=st.integers(1, 512 * MiB),
-    max_paths=st.integers(1, 4),
-    chunks=st.one_of(st.none(), st.integers(1, 16)),
-    gran_pow=st.integers(0, 3),
-    host=st.booleans(),
-    src=st.integers(0, 3), dst=st.integers(0, 3),
-)
-def test_plan_invariants_property(nbytes, max_paths, chunks, gran_pow,
-                                  host, src, dst):
-    """§4.5 integrity invariants hold for arbitrary plans (hypothesis)."""
-    if src == dst:
-        return
-    gran = 2 ** gran_pow
-    nbytes = max(gran, nbytes // gran * gran)
-    topo = Topology.full_mesh(4)
-    planner = PathPlanner(topo)
-    plan = planner.plan(src, dst, nbytes, max_paths=max_paths,
-                        include_host=host, num_chunks=chunks,
-                        granularity=gran)
-    validate_plan(plan)   # disjoint cover + link exclusivity + connectivity
-    sched = build_schedule(plan)
-    assert sum(t.nbytes for t in sched) == nbytes
-    # alignment: every chunk boundary is granularity-aligned except the tail
-    for t in sched:
-        assert t.offset % gran == 0
 
 
 def test_tuner_prefers_multipath_for_large(beluga):
