@@ -37,7 +37,7 @@ def run() -> list[Row]:
         rows.append(Row(
             f"plan_lifecycle/nodes{plan.num_nodes}/instantiate",
             life.compile_ns / 1e3, "first_iter"))
-        x = jnp.zeros((1, 1, 4, nelems), jnp.float32)
+        x = jnp.zeros((1, 4, nelems), jnp.float32)
         launch_us = timeit_us(compiled.compiled, x, iters=10, warmup=3)
         rows.append(Row(
             f"plan_lifecycle/nodes{plan.num_nodes}/launch",

@@ -1,11 +1,14 @@
-"""Paper Fig. 9/10 — OMB bidirectional bandwidth. Key reproduced effect:
+"""Paper Fig. 9/10 — OMB bidirectional bandwidth. Key reproduced effects:
 the host path consistently DEGRADES bidirectional traffic (both directions
-contend on host staging capacity), while GPU-path striping does not."""
+contend on host staging capacity), while GPU-path striping does not; and
+fusing the two directions into ONE transfer group (one compiled launch,
+jointly planned) beats two independently-planned dispatches."""
 
 from benchmarks.common import MiB, Row, SIZES_OMB
 
 from repro.comm import CommSession
-from repro.core import Topology, estimate_transfer_time_s
+from repro.core import (Topology, estimate_group_time_s,
+                        estimate_transfer_time_s)
 
 
 def run() -> list[Row]:
@@ -26,4 +29,13 @@ def run() -> list[Row]:
                 bibw = 2 * nbytes / t / 1e9
                 rows.append(Row(f"omb_bibw/{cluster}/{mb}MiB/{cname}",
                                 0.0, f"{bibw:.1f}GB/s"))
+            # transfer-group mode: both directions planned jointly and
+            # fused into one launch vs two independent dispatches.
+            group = sess.plan_group([(0, 1, nbytes), (1, 0, nbytes)])
+            t_grp = estimate_group_time_s(group, topo, fused=True)
+            indep = [sess.plan(0, 1, nbytes), sess.plan(1, 0, nbytes)]
+            t_ind = estimate_group_time_s(indep, topo, fused=False)
+            bibw = 2 * nbytes / t_grp / 1e9
+            rows.append(Row(f"omb_bibw/{cluster}/{mb}MiB/group",
+                            0.0, f"{bibw:.1f}GB/s({t_ind / t_grp:.2f}x)"))
     return rows

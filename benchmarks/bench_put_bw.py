@@ -48,7 +48,7 @@ def run() -> list[Row]:
     for mb in EXEC_SIZES:
         nelems = mb * MiB // 4
         compiled, plan = exec_sess.compiled_for(0, 1, nelems)
-        x = jnp.zeros((1, 1, 8, nelems), jnp.float32)
+        x = jnp.zeros((1, 8, nelems), jnp.float32)
         us = timeit_us(compiled.compiled, x)
         rows.append(Row(f"put_bw_exec/{mb}MiB/3path", us,
                         f"nodes={plan.num_nodes}"))

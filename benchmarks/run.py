@@ -4,25 +4,62 @@ Prints ``name,us_per_call,derived`` CSV:
 
 * bench_put_bw         → paper Fig. 6   (UCX Put bandwidth)
 * bench_omb_bw         → paper Fig. 7/8 (OMB BW, windows 1/4/16)
-* bench_omb_bibw       → paper Fig. 9/10 (OMB bidirectional BW)
-* bench_jacobi         → paper Fig. 12  (Jacobi solver speedup)
+* bench_omb_bibw       → paper Fig. 9/10 (OMB bidirectional BW + groups)
+* bench_jacobi         → paper Fig. 12  (Jacobi solver speedup + halo group)
 * bench_graph_overhead → paper Fig. 13/14 (plan lifecycle costs)
 * bench_collectives    → paper §6 future work (multipath collectives)
+
+``--smoke`` shrinks every size sweep to its smallest point (CI's tier-1
+benchmark smoke step); ``--json PATH`` additionally writes the rows as a
+JSON artifact (the ``BENCH_*.json`` perf trajectory).
 """
+
+import argparse
+import json
 
 from benchmarks import common  # noqa: F401 — pins device count first
 
 
-def main() -> None:
+def _apply_smoke() -> None:
+    # In-place so modules that did ``from benchmarks.common import
+    # SIZES_*`` see the shrunken sweeps.
+    common.SIZES_PUT[:] = [1, 4]
+    common.SIZES_OMB[:] = [1, 4]
+    common.EXEC_SIZES[:] = [1]
+
+
+def collect() -> list:
     from benchmarks import (bench_collectives, bench_graph_overhead,
                             bench_jacobi, bench_omb_bibw, bench_omb_bw,
                             bench_put_bw)
 
-    print("name,us_per_call,derived")
+    rows = []
     for mod in (bench_put_bw, bench_omb_bw, bench_omb_bibw, bench_jacobi,
                 bench_graph_overhead, bench_collectives):
-        for row in mod.run():
-            print(row.csv(), flush=True)
+        rows.extend(mod.run())
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes only (CI smoke step)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    if args.smoke:
+        _apply_smoke()
+
+    rows = collect()
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row.csv(), flush=True)
+    if args.json:
+        payload = [{"name": r.name, "us_per_call": round(r.us, 2),
+                    "derived": r.derived} for r in rows]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload)} rows to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -54,6 +54,13 @@ def main():
     assert np.array_equal(np.asarray(out), np.asarray(msg))
     run.send(msg, 0, 5)
 
+    # 5b) concurrent messages: one fused transfer group = one compiled
+    # launch, planned contention-aware (exchange patterns stay
+    # link-disjoint; see DESIGN.md §5)
+    fwd, rev = run.exchange([(msg, 0, 5), (msg * 2, 5, 0)])
+    assert np.array_equal(np.asarray(rev), np.asarray(msg * 2))
+    print(f"fused 2-message exchange OK; dispatches={run.stats()['dispatches']}")
+
     # 6) collectives ride the same session + plan cache
     x = jnp.asarray(np.random.RandomState(0).randn(8, 16), jnp.float32)
     gathered = run.all_gather(x)

@@ -27,10 +27,11 @@ deprecated shims over this package.
 
 from repro.compat import make_mesh, shard_map  # noqa: F401
 from repro.comm.config import POLICY_NAMES, CommConfig  # noqa: F401
-from repro.comm.plan import PathAssignment, TransferPlan  # noqa: F401
+from repro.comm.plan import (  # noqa: F401
+    PathAssignment, TransferGroup, TransferPlan, TransferRequest)
 from repro.comm.policy import (  # noqa: F401
     GreedyBandwidthPolicy, PathPolicy, RoundRobinPolicy, TunerPolicy,
-    make_policy)
+    contention_scaled, make_policy)
 from repro.comm.planner import PathPlanner  # noqa: F401
 from repro.comm.cache import (  # noqa: F401
     CompiledPlan, PlanLifecycle, TransferPlanCache, compile_plan)
@@ -38,7 +39,7 @@ from repro.comm.collectives import (  # noqa: F401
     bidir_ring_all_gather, bidir_ring_reduce_scatter, multipath_all_reduce,
     multipath_all_to_all, psum_via_multipath)
 from repro.comm.engine import (  # noqa: F401
-    AXIS, MultiPathTransfer, TransferKey, multipath_send_local,
-    plan_signature)
+    AXIS, GroupKey, MultiPathTransfer, TransferKey, group_signature,
+    multipath_send_local, plan_signature)
 from repro.comm.session import (  # noqa: F401
     BoundCollectives, CollectiveKey, CommSession)

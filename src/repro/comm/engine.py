@@ -1,17 +1,26 @@
 """MultiPathTransfer — executable multi-path P2P transfers on a JAX mesh.
 
-This is the UCT-layer analogue (DESIGN.md §2): it takes a
-:class:`~repro.comm.plan.TransferPlan`, builds the SPMD program whose ops
-are the plan's copy nodes (one ``ppermute`` per chunk per hop — the CUDA
-Graph's memcpy nodes), compiles it once, and caches the executable in a
-:class:`~repro.comm.cache.TransferPlanCache` keyed exactly like the
-paper's graph cache (src, dst, size, path configuration).
+This is the UCT-layer analogue (DESIGN.md §2): it takes one or more
+:class:`~repro.comm.plan.TransferPlan` objects, builds the SPMD program
+whose ops are the plans' copy nodes (one ``ppermute`` per chunk per hop —
+the CUDA Graph's memcpy nodes), compiles it once, and caches the executable
+in a :class:`~repro.comm.cache.TransferPlanCache` keyed like the paper's
+graph cache on *every* message's (src, dst, size, path configuration).
+
+A **transfer group** (:meth:`MultiPathTransfer.transfer_group`) fuses a set
+of concurrent messages — planned jointly by
+:meth:`~repro.comm.planner.PathPlanner.plan_group` — into ONE traced /
+lowered / compiled program, one cache entry, and one launch: the paper's
+graph-per-message becomes one graph per traffic pattern (message fusion à
+la Choi et al.). Single sends are the 1-message special case of the same
+machinery.
 
 Correctness model (§4.5 of the paper → functional dataflow here):
 
 * each chunk writes a disjoint, precomputed destination offset,
 * staged hop-2 consumes hop-1's value (dataflow dependency),
-* paths never share a directional link (planner invariant),
+* paths never share a directional link (planner invariant, held across a
+  whole group for distinct flows — ``validate_group``),
 * "final synchronization" is the functional join of all chunk outputs.
 
 The engine runs on a flat 1-D device axis (default ``"dev"``); topology
@@ -32,7 +41,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm.cache import CompiledPlan, TransferPlanCache, compile_plan
 from repro.compat import shard_map
-from repro.comm.plan import TransferPlan
+from repro.comm.plan import TransferGroup, TransferPlan, TransferRequest
 from repro.comm.planner import PathPlanner
 from repro.core.pipelining import validate_plan
 from repro.core.topology import HOST, Topology
@@ -42,7 +51,11 @@ AXIS = "dev"
 
 @dataclasses.dataclass(frozen=True)
 class TransferKey:
-    """Graph-cache key: the paper keys on src/dst/size/path config."""
+    """Legacy single-message cache key (kept for backwards compatibility).
+
+    New code keys compiled programs with :class:`GroupKey`, which carries
+    one entry per message — including for single sends.
+    """
 
     src: int
     dst: int
@@ -53,17 +66,43 @@ class TransferKey:
     bidirectional: bool = False
 
 
+@dataclasses.dataclass(frozen=True)
+class GroupKey:
+    """Graph-cache key for a fused transfer group.
+
+    ``entries`` holds one ``(src, dst, nelems, dtype, plan_signature)``
+    tuple per message — EVERY plan of the group contributes its signature,
+    so two groups sharing a forward plan but differing anywhere else (the
+    old bidirectional cache-key bug: the reverse plan's signature was
+    silently dropped) can never collide.
+    """
+
+    entries: tuple
+    window: int = 1
+
+
 def plan_signature(plan: TransferPlan) -> tuple:
     return tuple((p.route.directional_links(), p.num_chunks, p.nbytes)
                  for p in plan.paths)
 
 
+def group_signature(group: TransferGroup) -> tuple:
+    """Per-plan (src, dst, nbytes, plan signature) for the whole group."""
+    return tuple((p.src, p.dst, p.nbytes, plan_signature(p))
+                 for p in group.plans)
+
+
 def _check_executable(plan: TransferPlan) -> None:
     for pa in plan.paths:
-        if pa.route.via == HOST:
-            raise ValueError(
-                "host-staged path is not executable on the accelerator mesh "
-                "(DESIGN.md §2); plan with include_host=False")
+        for link in pa.route.hops:
+            if HOST in (link.src, link.dst):
+                # Checked per HOP, not per route.via: a 3-hop detour can
+                # stage through the host mid-route while its recorded via
+                # is a device — it would otherwise reach ppermute as
+                # device id -1.
+                raise ValueError(
+                    "host-staged path is not executable on the accelerator "
+                    "mesh (DESIGN.md §2); plan with include_host=False")
 
 
 def multipath_send_local(x: jax.Array, plan: TransferPlan, *,
@@ -113,7 +152,10 @@ class MultiPathTransfer:
         self.planner = planner if planner is not None else PathPlanner(
             topology)
         self.cache = cache if cache is not None else TransferPlanCache()
-        self._sharding = NamedSharding(mesh, P(self.axis_name))
+        self._sharding = NamedSharding(mesh, P(None, self.axis_name))
+        #: Number of compiled-program launches issued (one per transfer or
+        #: per fused group — the paper's "one cudaGraphLaunch" count).
+        self.dispatches = 0
 
     # -- planning -----------------------------------------------------------
     def plan_for(self, src: int, dst: int, nelems: int, dtype=jnp.float32,
@@ -127,96 +169,159 @@ class MultiPathTransfer:
         validate_plan(plan)
         return plan
 
-    # -- program construction -------------------------------------------------
-    def _build_fn(self, plans: Sequence[TransferPlan], nelems: int,
-                  window: int):
-        """SPMD program executing ``window`` rounds of the given plan(s)."""
+    def plan_group_for(self, specs: Sequence[tuple], *,
+                       max_paths: int | None = None,
+                       num_chunks: int | None = None,
+                       exclusive: bool = False) -> TransferGroup:
+        """Jointly plan executable messages; ``specs`` holds one
+        ``(src, dst, nelems, dtype)`` tuple per message. Host paths are
+        never admitted (they are not executable on the accelerator mesh).
+        """
+        requests = []
+        for (src, dst, nelems, dtype) in specs:
+            itemsize = jnp.dtype(dtype).itemsize
+            requests.append(TransferRequest(src, dst, nelems * itemsize,
+                                            granularity=itemsize))
+        group = self.planner.plan_group(requests, max_paths=max_paths,
+                                        include_host=False,
+                                        num_chunks=num_chunks,
+                                        exclusive=exclusive)
+        for plan in group.plans:
+            validate_plan(plan)
+            _check_executable(plan)
+        return group
+
+    # -- program construction -----------------------------------------------
+    def _build_group_fn(self, plans: Sequence[TransferPlan], window: int):
+        """Fused SPMD program: ``window`` rounds of every plan, one trace."""
         for p in plans:
             _check_executable(p)
         ax = self.axis_name
 
-        def local_body(x):  # x: (window, len(plans), 1, nelems) local
+        def local_body(*xs):  # x_i local: (window, 1, nelems_i)
             outs = []
-            for w in range(window):
-                row = []
-                for i, plan in enumerate(plans):
-                    xi = x[w, i]
-                    row.append(multipath_send_local(xi, plan, axis_name=ax))
-                outs.append(jnp.stack(row))
-            return jnp.stack(outs)
+            for x, plan in zip(xs, plans):
+                rows = [multipath_send_local(x[w], plan, axis_name=ax)
+                        for w in range(window)]
+                outs.append(jnp.stack(rows))
+            return tuple(outs)
 
-        return shard_map(
-            local_body, mesh=self.mesh,
-            in_specs=P(None, None, ax),
-            out_specs=P(None, None, ax),
-            check_vma=False)
+        specs = tuple(P(None, ax) for _ in plans)
+        return shard_map(local_body, mesh=self.mesh,
+                         in_specs=specs, out_specs=specs, check_vma=False)
 
-    def _compile(self, key: TransferKey, plans: Sequence[TransferPlan],
-                 dtype) -> CompiledPlan:
-        nelems = key.nelems
-        shape = (key.window, len(plans), self.num_devices, nelems)
-        abstract = jax.ShapeDtypeStruct(
-            shape, dtype, sharding=NamedSharding(
-                self.mesh, P(None, None, self.axis_name)))
+    def _compile_group(self, key: GroupKey, plans: Sequence[TransferPlan],
+                       shapes: Sequence[tuple[int, object]]) -> CompiledPlan:
+        abstracts = tuple(
+            jax.ShapeDtypeStruct((key.window, self.num_devices, nelems),
+                                 dtype, sharding=self._sharding)
+            for nelems, dtype in shapes)
         num_nodes = sum(p.num_nodes for p in plans) * key.window
-        fn = self._build_fn(plans, nelems, key.window)
-        return compile_plan(key, fn, (abstract,), num_nodes=num_nodes)
+        fn = self._build_group_fn(plans, key.window)
+        return compile_plan(key, fn, abstracts, num_nodes=num_nodes)
 
-    # -- public API ------------------------------------------------------------
+    def _launch_group(self, messages: Sequence[jax.Array],
+                      plans: Sequence[TransferPlan], *,
+                      window: int, block: bool) -> list[jax.Array]:
+        """Compile (or fetch) the fused program and launch it ONCE."""
+        entries = tuple(
+            (p.src, p.dst, m.shape[0], str(m.dtype), plan_signature(p))
+            for m, p in zip(messages, plans))
+        key = GroupKey(entries, window)
+        shapes = [(m.shape[0], m.dtype) for m in messages]
+        compiled = self.cache.get_or_build(
+            key, lambda: self._compile_group(key, plans, shapes))
+        xs = []
+        for m, p in zip(messages, plans):
+            x = jnp.zeros((window, self.num_devices, m.shape[0]), m.dtype)
+            x = x.at[:, p.src].set(m)
+            xs.append(jax.device_put(x, self._sharding))
+        ys = compiled(*xs) if block else compiled.dispatch(*xs)
+        self.dispatches += 1
+        return [y[0, p.dst] for y, p in zip(ys, plans)]
+
+    # -- public API ---------------------------------------------------------
     def transfer(self, message: jax.Array, src: int, dst: int, *,
-                 window: int = 1, bidirectional: bool = False,
-                 max_paths: int | None = None,
+                 window: int = 1, max_paths: int | None = None,
                  num_chunks: int | None = None,
                  block: bool = True) -> jax.Array:
         """Move ``message`` (1-D array) from device ``src`` to ``dst``.
 
         Returns the received message (fetched from the destination shard).
-        With ``bidirectional=True`` the same message is simultaneously sent
-        dst→src (OMB BIBW pattern) and both receptions are validated.
-        ``block=False`` launches without waiting (overlapping independent
-        transfers, e.g. a pytree migration); the caller syncs.
+        ``block=False`` launches without waiting; the caller syncs. For
+        simultaneous opposite-direction traffic (OMB BIBW) or any other
+        concurrent set, use :meth:`transfer_group` — the old
+        ``bidirectional=True`` flag is folded into the group API.
         """
         message = jnp.asarray(message)
         if message.ndim != 1:
             raise ValueError("message must be 1-D; reshape first")
-        nelems = message.shape[0]
-        plan = self.plan_for(src, dst, nelems, message.dtype,
+        plan = self.plan_for(src, dst, message.shape[0], message.dtype,
                              max_paths=max_paths, num_chunks=num_chunks)
-        plans = [plan]
-        if bidirectional:
-            plans.append(self.plan_for(dst, src, nelems, message.dtype,
-                                       max_paths=max_paths,
-                                       num_chunks=num_chunks))
-        key = TransferKey(src, dst, nelems, str(message.dtype),
-                          plan_signature(plan), window, bidirectional)
-        compiled = self.cache.get_or_build(
-            key, lambda: self._compile(key, plans, message.dtype))
+        return self._launch_group([message], (plan,), window=window,
+                                  block=block)[0]
 
-        x = jnp.zeros((window, len(plans), self.num_devices, nelems),
-                      message.dtype)
-        x = x.at[:, 0, src].set(message)
-        if bidirectional:
-            x = x.at[:, 1, dst].set(message)
-        x = jax.device_put(x, NamedSharding(
-            self.mesh, P(None, None, self.axis_name)))
-        y = compiled(x) if block else compiled.dispatch(x)
-        return y[0, 0, dst]
+    def transfer_group(self, messages: Sequence[jax.Array],
+                       pairs: Sequence[tuple[int, int]], *,
+                       window: int = 1, max_paths: int | None = None,
+                       num_chunks: int | None = None,
+                       exclusive: bool = False,
+                       block: bool = True) -> list[jax.Array]:
+        """Move ``messages[i]`` (1-D) from ``pairs[i][0]`` to ``pairs[i][1]``
+        — all of them in ONE compiled launch.
+
+        The set is planned jointly (contention-aware; see
+        :meth:`PathPlanner.plan_group`), fused into one SPMD program, and
+        cached under a :class:`GroupKey` carrying every plan's signature.
+        Returns the received messages, aligned with the inputs.
+        """
+        msgs = [jnp.asarray(m) for m in messages]
+        if len(msgs) != len(pairs):
+            raise ValueError(f"{len(msgs)} messages vs {len(pairs)} pairs")
+        if not msgs:
+            return []
+        for m in msgs:
+            if m.ndim != 1:
+                raise ValueError("messages must be 1-D; reshape first")
+        specs = [(src, dst, m.shape[0], m.dtype)
+                 for m, (src, dst) in zip(msgs, pairs)]
+        group = self.plan_group_for(specs, max_paths=max_paths,
+                                    num_chunks=num_chunks,
+                                    exclusive=exclusive)
+        return self._launch_group(msgs, group.plans, window=window,
+                                  block=block)
 
     def compiled_for(self, src: int, dst: int, nelems: int, dtype=jnp.float32,
-                     *, window: int = 1, bidirectional: bool = False,
-                     max_paths: int | None = None,
+                     *, window: int = 1, max_paths: int | None = None,
                      num_chunks: int | None = None,
                      ) -> tuple[CompiledPlan, TransferPlan]:
         """AOT handle for benchmarks: returns (executable, plan)."""
         plan = self.plan_for(src, dst, nelems, dtype, max_paths=max_paths,
                              num_chunks=num_chunks)
-        plans = [plan]
-        if bidirectional:
-            plans.append(self.plan_for(dst, src, nelems, dtype,
-                                       max_paths=max_paths,
-                                       num_chunks=num_chunks))
-        key = TransferKey(src, dst, nelems, str(jnp.dtype(dtype)),
-                          plan_signature(plan), window, bidirectional)
+        dtype = jnp.dtype(dtype)
+        key = GroupKey(((src, dst, nelems, str(dtype),
+                         plan_signature(plan)),), window)
         compiled = self.cache.get_or_build(
-            key, lambda: self._compile(key, plans, dtype))
+            key, lambda: self._compile_group(key, (plan,),
+                                             ((nelems, dtype),)))
         return compiled, plan
+
+    def compiled_for_group(self, specs: Sequence[tuple], *,
+                           window: int = 1, max_paths: int | None = None,
+                           num_chunks: int | None = None,
+                           exclusive: bool = False,
+                           ) -> tuple[CompiledPlan, TransferGroup]:
+        """AOT handle for a fused group; ``specs`` as in
+        :meth:`plan_group_for`. Returns (executable, group)."""
+        group = self.plan_group_for(specs, max_paths=max_paths,
+                                    num_chunks=num_chunks,
+                                    exclusive=exclusive)
+        entries = tuple(
+            (p.src, p.dst, nelems, str(jnp.dtype(dtype)), plan_signature(p))
+            for (s, d, nelems, dtype), p in zip(specs, group.plans))
+        key = GroupKey(entries, window)
+        shapes = [(nelems, jnp.dtype(dtype))
+                  for (_, _, nelems, dtype) in specs]
+        compiled = self.cache.get_or_build(
+            key, lambda: self._compile_group(key, group.plans, shapes))
+        return compiled, group

@@ -3,6 +3,13 @@
 Moved from ``repro/core/paths.py`` as part of the ``repro.comm`` API
 consolidation; pure data, shared by policies, the planner, the pipelining
 time model, and the executable engine.
+
+Beyond the single-message :class:`TransferPlan`, this module holds the
+*group* data model: a :class:`TransferRequest` describes one message of a
+set planned jointly, and a :class:`TransferGroup` is the jointly-planned
+result — one plan per message, produced by
+:meth:`~repro.comm.planner.PathPlanner.plan_group` so that cross-message
+link sharing is priced (and, where feasible, avoided) instead of ignored.
 """
 
 from __future__ import annotations
@@ -64,3 +71,77 @@ class TransferPlan:
 
     def covered_bytes(self) -> int:
         return sum(p.nbytes for p in self.paths)
+
+    def directional_links(self) -> set[tuple[int, int]]:
+        """All directional links used by any path of this plan."""
+        return {link for pa in self.paths
+                for link in pa.route.directional_links()}
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferRequest:
+    """One message of a jointly-planned transfer group.
+
+    ``granularity`` keeps chunk boundaries aligned per message (dtype
+    itemsize when the engine moves typed arrays) — messages of a group may
+    have different dtypes, so it is per-request rather than per-group.
+    """
+
+    src: int
+    dst: int
+    nbytes: int
+    granularity: int = 1
+
+    @property
+    def flow(self) -> tuple[int, int]:
+        return (self.src, self.dst)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferGroup:
+    """A set of concurrent P2P messages planned as one unit.
+
+    Produced by :meth:`~repro.comm.planner.PathPlanner.plan_group`: plans
+    are aligned with the requests, and route selection accounted for every
+    other message of the group. Distinct flows (``(src, dst)`` pairs) get
+    link-disjoint routes whenever the topology permits; messages of the
+    *same* flow share that flow's routes (they serialize per link, which
+    the analytic model prices as contention). The engine fuses the whole
+    group into one compiled SPMD program and one launch.
+    """
+
+    plans: tuple[TransferPlan, ...]
+    topology_name: str
+
+    @property
+    def num_messages(self) -> int:
+        return len(self.plans)
+
+    @property
+    def num_nodes(self) -> int:
+        """Total copy-node count of the fused program (one CUDA Graph)."""
+        return sum(p.num_nodes for p in self.plans)
+
+    @property
+    def total_nbytes(self) -> int:
+        return sum(p.nbytes for p in self.plans)
+
+    def link_flows(self) -> dict[tuple[int, int], set[tuple[int, int]]]:
+        """Directional link → set of flows (src, dst) that use it."""
+        out: dict[tuple[int, int], set[tuple[int, int]]] = {}
+        for plan in self.plans:
+            for link in plan.directional_links():
+                out.setdefault(link, set()).add((plan.src, plan.dst))
+        return out
+
+    def shared_links(self) -> set[tuple[int, int]]:
+        """Directional links carrying more than one flow (contended)."""
+        return {link for link, flows in self.link_flows().items()
+                if len(flows) > 1}
+
+    @property
+    def exclusive(self) -> bool:
+        """True when no directional link is shared across distinct flows —
+        the group-level §4.5 invariant, feasible for exchange patterns
+        (bidirectional, halo) but not e.g. many messages into one device."""
+        return not self.shared_links()

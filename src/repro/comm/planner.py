@@ -23,8 +23,10 @@ from __future__ import annotations
 from typing import Sequence
 
 from repro.comm.config import CommConfig
-from repro.comm.plan import PathAssignment, TransferPlan
-from repro.comm.policy import GreedyBandwidthPolicy, PathPolicy, make_policy
+from repro.comm.plan import (PathAssignment, TransferGroup, TransferPlan,
+                             TransferRequest)
+from repro.comm.policy import (GreedyBandwidthPolicy, PathPolicy,
+                               contention_scaled, make_policy)
 from repro.core.topology import HOST, Route, Topology
 
 _GREEDY = GreedyBandwidthPolicy()
@@ -98,8 +100,15 @@ class PathPlanner:
             for v1 in topo.neighbors(src):
                 if v1 in (dst, src):
                     continue
+                if v1 == HOST and not include_host:
+                    # neighbors() includes the PCIe host node; a detour
+                    # staged through it must honor the caller's host
+                    # constraint just like the 2-hop host route does.
+                    continue
                 for v2 in topo.neighbors(dst):
                     if v2 in (src, dst, v1):
+                        continue
+                    if v2 == HOST and not include_host:
                         continue
                     h1, h2, h3 = (topo.link(src, v1), topo.link(v1, v2),
                                   topo.link(v2, dst))
@@ -182,6 +191,155 @@ class PathPlanner:
                             max_paths=max_paths, num_chunks=num_chunks,
                             granularity=granularity,
                             include_host=include_host)
+
+    # -- group planning (concurrent messages) ---------------------------------
+    def plan_group(self, requests: Sequence[TransferRequest | tuple], *,
+                   max_paths: int | None = None,
+                   include_host: bool | None = None,
+                   num_chunks: int | None = None,
+                   exclusive: bool = False) -> TransferGroup:
+        """Jointly plan a set of concurrent messages (a transfer group).
+
+        ``requests`` are :class:`TransferRequest` objects or plain
+        ``(src, dst, nbytes)`` tuples. Unlike N independent ``plan()``
+        calls, the group planner prices cross-message link sharing. Two
+        candidate groups are built and the §4.4 analytic model picks:
+
+        * **exclusive** — distinct flows claim routes round-robin
+          (best-first), a route only while all of its directional links
+          are unclaimed, so flows end up link-disjoint whenever the
+          topology has the capacity (the group-level §4.5 invariant,
+          ``TransferGroup.exclusive``). Optimal for exchange patterns
+          (bidirectional, halo) where full disjointness exists.
+        * **shared** — every flow keeps its full route set with bandwidths
+          derated by the traffic already planned
+          (:func:`~repro.comm.policy.contention_scaled`), so shares
+          reflect the capacity each path will actually see. Optimal when
+          flows converge (fan-in) and partitioning links would starve
+          someone.
+
+        In both candidates, each message's path count is chosen by scoring
+        plans under :func:`~repro.core.pipelining.estimate_transfer_time_s`
+        with every previously-planned group member as ``concurrent_plans``
+        — never in isolation. ``exclusive=True`` forces the exclusive
+        candidate and raises if some flow has no link-disjoint route.
+
+        Messages of the same flow share that flow's routes — they ride one
+        fused program and serialize per link, which the model prices as
+        contention.
+        """
+        reqs = [r if isinstance(r, TransferRequest) else TransferRequest(*r)
+                for r in requests]
+        if not reqs:
+            return TransferGroup((), self.topology.name)
+        for r in reqs:
+            if r.src == r.dst:
+                raise ValueError(f"src == dst in group request {r}")
+            if r.nbytes <= 0:
+                raise ValueError(f"nbytes must be positive in {r}")
+            if r.nbytes % r.granularity:
+                raise ValueError(f"nbytes {r.nbytes} not a multiple of "
+                                 f"granularity {r.granularity} in {r}")
+        max_paths = self.max_paths if max_paths is None else max_paths
+        if max_paths < 1:
+            raise ValueError(f"max_paths must be >= 1, got {max_paths}")
+        include_host = (self.include_host if include_host is None
+                        else include_host)
+
+        # Phase 1: round-robin route claiming per distinct flow.
+        flows = list(dict.fromkeys(r.flow for r in reqs))
+        largest = {f: max(r.nbytes for r in reqs if r.flow == f)
+                   for f in flows}
+        candidates = {f: self.enumerate_routes(*f, include_host=include_host)
+                      for f in flows}
+        for f in flows:
+            if not candidates[f]:
+                raise ValueError(f"no route {f[0]}->{f[1]} in topology "
+                                 f"{self.topology.name}")
+        want = {f: (1 if largest[f] < self.multipath_threshold else max_paths)
+                for f in flows}
+        claimed: dict[tuple[int, int], list[Route]] = {f: [] for f in flows}
+        used_links: set[tuple[int, int]] = set()
+        progress = True
+        while progress:
+            progress = False
+            for f in flows:
+                if len(claimed[f]) >= want[f]:
+                    continue
+                for route in candidates[f]:
+                    links = set(route.directional_links())
+                    if links & used_links:
+                        continue
+                    claimed[f].append(route)
+                    used_links |= links
+                    progress = True
+                    break
+        starved = [f for f in flows if not claimed[f]]
+        if starved and exclusive:
+            raise ValueError(
+                f"cannot plan link-exclusive group: flows {starved} have no "
+                f"route disjoint from the rest of the group on topology "
+                f"{self.topology.name}; drop exclusive=True to share links "
+                f"with contention-aware splitting")
+        link_flow_count = {l: 1 for l in used_links}
+
+        # Phase 2: per-message configuration, scored under the §4.4 model
+        # with the rest of the group as concurrent traffic.
+        from repro.core.pipelining import (estimate_group_time_s,
+                                           estimate_transfer_time_s)
+
+        policy = (self.policy if getattr(self.policy, "honors_routes", False)
+                  else _GREEDY)
+
+        def build_message(r: TransferRequest, routes: Sequence[Route],
+                          prior: list[TransferPlan]) -> TransferPlan:
+            if r.nbytes < self.multipath_threshold:
+                routes = routes[:1]
+            best, best_t = None, float("inf")
+            for k in range(1, min(max_paths, len(routes)) + 1):
+                cand = policy.build(
+                    self, r.src, r.dst, r.nbytes, routes=routes[:k],
+                    max_paths=k, num_chunks=num_chunks,
+                    granularity=r.granularity, include_host=include_host)
+                t = estimate_transfer_time_s(cand, self.topology,
+                                             concurrent_plans=prior)
+                if t < best_t:
+                    best, best_t = cand, t
+            assert best is not None
+            return best
+
+        def link_counts(plans: Sequence[TransferPlan]
+                        ) -> dict[tuple[int, int], int]:
+            counts: dict[tuple[int, int], int] = {}
+            for p in plans:
+                for link in p.directional_links():
+                    counts[link] = counts.get(link, 0) + 1
+            return counts
+
+        # Candidate A: link-exclusive flows (starved flows fall back to
+        # contention-derated sharing so the candidate is always complete).
+        plans_ex: list[TransferPlan] = []
+        for r in reqs:
+            routes = claimed[r.flow] or contention_scaled(
+                candidates[r.flow], link_flow_count)
+            plans_ex.append(build_message(r, routes, plans_ex))
+        group_ex = TransferGroup(tuple(plans_ex), self.topology.name)
+        if exclusive:
+            return group_ex
+
+        # Candidate B: shared routes with contention-derated shares.
+        plans_sh: list[TransferPlan] = []
+        for r in reqs:
+            routes = contention_scaled(candidates[r.flow],
+                                       link_counts(plans_sh))
+            plans_sh.append(build_message(r, routes, plans_sh))
+        group_sh = TransferGroup(tuple(plans_sh), self.topology.name)
+
+        # The model arbitrates; ties prefer the exclusive candidate (a
+        # contention-free wire is the paper's §4.5 default).
+        t_ex = estimate_group_time_s(group_ex, self.topology)
+        t_sh = estimate_group_time_s(group_sh, self.topology)
+        return group_ex if t_ex <= t_sh else group_sh
 
     # -- offline tuner (paper §4.4) -------------------------------------------
     def tune(self, src: int, dst: int, nbytes: int, *,

@@ -20,13 +20,37 @@ each gets. Three strategies ship:
 
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Protocol, Sequence, runtime_checkable
+import dataclasses
+from typing import TYPE_CHECKING, Mapping, Protocol, Sequence, \
+    runtime_checkable
 
-from repro.core.topology import Route
+from repro.core.topology import HOST, Route
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.comm.planner import PathPlanner
     from repro.comm.plan import TransferPlan
+
+
+def contention_scaled(routes: Sequence[Route],
+                      link_flows: Mapping[tuple[int, int], int]
+                      ) -> list[Route]:
+    """Derate each route's bottleneck bandwidth by group contention.
+
+    ``link_flows`` counts how many other flows of the group already use
+    each directional link; a link carrying *k* other flows contributes
+    ``bandwidth / (1 + k)`` to the route's bottleneck — the same
+    equal-share model :func:`repro.core.pipelining.wire_time_s` applies.
+    Routes are re-sorted best-first under the derated bandwidths (host
+    last, as in enumeration) so bandwidth-proportional share splitting
+    sees the *effective* capacities instead of the nominal ones.
+    """
+    out = []
+    for r in routes:
+        eff = min(h.bandwidth_gbps / (1 + link_flows.get((h.src, h.dst), 0))
+                  for h in r.hops)
+        out.append(dataclasses.replace(r, bottleneck_gbps=eff))
+    out.sort(key=lambda r: (r.via == HOST, -r.bottleneck_gbps, r.num_hops))
+    return out
 
 
 @runtime_checkable
@@ -41,6 +65,12 @@ class PathPolicy(Protocol):
     """
 
     name: str
+    #: True when ``build`` selects among exactly the ``routes`` it is given.
+    #: Group planning (``PathPlanner.plan_group``) relies on this to keep
+    #: its contention-filtered route sets authoritative; policies that
+    #: replan from scratch (the tuner) are swapped for greedy inside a
+    #: group.
+    honors_routes: bool
 
     def build(self, planner: "PathPlanner", src: int, dst: int, nbytes: int,
               *, routes: Sequence[Route], max_paths: int,
@@ -53,6 +83,7 @@ class GreedyBandwidthPolicy:
     """Bandwidth-proportional shares over the best ``max_paths`` routes."""
 
     name = "greedy"
+    honors_routes = True
 
     def build(self, planner: "PathPlanner", src: int, dst: int, nbytes: int,
               *, routes: Sequence[Route], max_paths: int,
@@ -78,6 +109,7 @@ class RoundRobinPolicy:
     """Equal shares across the selected routes (uniform striping)."""
 
     name = "round_robin"
+    honors_routes = True
 
     def build(self, planner: "PathPlanner", src: int, dst: int, nbytes: int,
               *, routes: Sequence[Route], max_paths: int,
@@ -101,6 +133,7 @@ class TunerPolicy:
     """
 
     name = "tuner"
+    honors_routes = False
 
     def __init__(self, *, path_counts: tuple[int, ...] = (1, 2, 3, 4),
                  chunk_counts: tuple[int, ...] = (1, 2, 4, 8, 16),

@@ -10,6 +10,9 @@ training, serving, benchmarks, examples — drives communication through it:
 
 * ``session.send(x, src, dst)`` / ``session.bidirectional(...)`` — compiled
   multi-path P2P (the executable engine),
+* ``session.exchange([(x, src, dst), ...])`` — a *transfer group*: a set of
+  concurrent messages planned jointly (contention-aware), fused into one
+  compiled SPMD program, one cache entry, one launch,
 * ``session.all_gather/reduce_scatter/all_reduce/all_to_all/psum(...)`` —
   driver-level launches of the bidirectional-ring collectives, compiled
   once per (op, shape, dtype) and cached in the *same* plan cache,
@@ -165,12 +168,68 @@ class CommSession:
 
     def bidirectional(self, x: jax.Array, src: int, dst: int, *,
                       window: int | None = None, max_paths: int | None = None,
-                      num_chunks: int | None = None) -> jax.Array:
-        """Simultaneous src→dst and dst→src of the same message (OMB BIBW)."""
-        return self.engine.transfer(
-            x, src, dst, bidirectional=True,
+                      num_chunks: int | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+        """Simultaneous src→dst and dst→src of the same message (OMB BIBW).
+
+        Executes as a 2-transfer group (one fused launch, cache-keyed on
+        BOTH plans' signatures) and returns ``(forward, reverse)`` — the
+        reception at ``dst`` and the reception at ``src``. Earlier versions
+        returned only the forward reception; see DESIGN.md §6.
+        """
+        fwd, rev = self.exchange(
+            [(x, src, dst), (x, dst, src)],
             window=self.config.window if window is None else window,
             max_paths=max_paths, num_chunks=num_chunks)
+        return fwd, rev
+
+    def exchange(self, items, *, window: int | None = None,
+                 max_paths: int | None = None,
+                 num_chunks: int | None = None,
+                 exclusive: bool = False,
+                 block: bool = True) -> list[jax.Array]:
+        """Execute a transfer group: ``items`` is a sequence of
+        ``(x, src, dst)`` triples moved *concurrently*.
+
+        The set is planned jointly — distinct flows get link-disjoint
+        routes when the topology permits, and shares are derated for any
+        sharing that remains (§4.4 model with ``concurrent_plans``) — then
+        fused into ONE compiled SPMD program: one trace/lower/compile, one
+        plan-cache entry keyed on every plan's signature, one launch.
+
+        Arrays may be any shape/dtype (flattened on the wire, restored on
+        return). Degenerate items are per-item no-ops returned unchanged:
+        ``src == dst`` (nothing to move) and zero-size arrays (nothing to
+        send — ``nbytes must be positive`` would otherwise reject them).
+        ``exclusive=True`` demands group-level link exclusivity and raises
+        if the topology cannot provide it. Returns the received arrays,
+        aligned with ``items``.
+        """
+        items = list(items)
+        results: list[jax.Array | None] = [None] * len(items)
+        live: list[tuple[int, jax.Array, int, int]] = []
+        for i, (x, src, dst) in enumerate(items):
+            x = jnp.asarray(x)
+            if src == dst or x.size == 0:
+                results[i] = x
+                continue
+            live.append((i, x, src, dst))
+        if live:
+            outs = self.engine.transfer_group(
+                [x.reshape(-1) for _, x, _, _ in live],
+                [(src, dst) for _, _, src, dst in live],
+                window=self.config.window if window is None else window,
+                max_paths=max_paths, num_chunks=num_chunks,
+                exclusive=exclusive, block=block)
+            for (i, x, _, _), out in zip(live, outs):
+                results[i] = out.reshape(x.shape)
+        return results  # type: ignore[return-value]
+
+    def plan_group(self, requests, **kwargs):
+        """Jointly plan concurrent messages without executing
+        (:meth:`PathPlanner.plan_group`); ``requests`` are
+        ``(src, dst, nbytes)`` tuples or :class:`TransferRequest`."""
+        return self.planner.plan_group(requests, **kwargs)
 
     def compiled_for(self, src: int, dst: int, nelems: int,
                      dtype=jnp.float32, **kwargs
@@ -181,20 +240,16 @@ class CommSession:
     def send_pytree(self, tree, src: int, dst: int):
         """Move every array leaf of ``tree`` from ``src`` to ``dst``.
 
-        Each leaf is flattened, sent through the multi-path engine (one
-        cached compiled plan per distinct (size, dtype)), and restored to
-        its shape — the KV-cache-migration primitive used by serving.
-        Leaves are independent, so every transfer is dispatched without
-        blocking and the tree is synced once at the end.
+        All leaves are fused into ONE transfer group: one compiled SPMD
+        program covering every leaf (one plan-cache entry keyed on all
+        leaf plans, not one per leaf), and one launch — steady-state KV
+        migration is a single dispatch regardless of leaf count.
+        Zero-size leaves and ``src == dst`` are per-leaf no-ops.
         """
-        def move(leaf):
-            leaf = jnp.asarray(leaf)
-            flat = leaf.reshape(-1)
-            out = self.send(flat, src, dst, block=False)
-            return out.reshape(leaf.shape)
-        moved = jax.tree.map(move, tree)
+        leaves, treedef = jax.tree.flatten(tree)
+        moved = self.exchange([(leaf, src, dst) for leaf in leaves])
         jax.block_until_ready(moved)
-        return moved
+        return jax.tree.unflatten(treedef, moved)
 
     # -- driver-level collectives ------------------------------------------
     def _run_collective(self, op: str, x: jax.Array, local_fn,
@@ -281,9 +336,14 @@ class CommSession:
 
     # -- introspection ------------------------------------------------------
     def stats(self) -> dict:
-        """One-stop accounting: cache hits/misses, policy, topology."""
+        """One-stop accounting: cache hits/misses, launches, policy,
+        topology. ``dispatches`` counts compiled-program launches — a fused
+        group (``exchange``, ``send_pytree``, ``bidirectional``) is ONE
+        dispatch however many messages it carries."""
         return {
             "cache": self.cache.stats(),
+            "dispatches": (self._engine.dispatches
+                           if self._engine is not None else 0),
             "policy": self.policy.name,
             "topology": self.topology.name,
             "num_devices": self.topology.num_devices,

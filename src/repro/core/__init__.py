@@ -27,15 +27,18 @@ import importlib
 from repro.core.topology import HOST, Link, Route, Topology  # noqa: F401
 from repro.core.pipelining import (  # noqa: F401
     ChunkTask, build_schedule, effective_bandwidth_gbps,
-    estimate_transfer_time_s, launch_overhead_ns, validate_plan,
-    windowed_bandwidth_gbps)
+    estimate_group_time_s, estimate_transfer_time_s,
+    group_launch_overhead_ns, launch_overhead_ns, validate_group,
+    validate_plan, windowed_bandwidth_gbps, wire_time_s)
 
 # Legacy re-exports: these classes moved to repro.comm (PEP 562 lazy
 # attributes — resolving them eagerly here would recreate the
 # core.topology → core.__init__ → comm → core.topology import cycle).
 _COMM_EXPORTS = {
     "PathAssignment": "repro.comm.plan",
+    "TransferGroup": "repro.comm.plan",
     "TransferPlan": "repro.comm.plan",
+    "TransferRequest": "repro.comm.plan",
     "PathPlanner": "repro.comm.planner",
     "CompiledPlan": "repro.comm.cache",
     "PlanLifecycle": "repro.comm.cache",
@@ -50,8 +53,10 @@ _COMM_EXPORTS = {
 __all__ = [  # noqa: F822 - lazy names resolved via __getattr__
     "HOST", "Link", "Route", "Topology",
     "ChunkTask", "build_schedule", "effective_bandwidth_gbps",
-    "estimate_transfer_time_s", "launch_overhead_ns", "validate_plan",
-    "windowed_bandwidth_gbps", *sorted(_COMM_EXPORTS),
+    "estimate_group_time_s", "estimate_transfer_time_s",
+    "group_launch_overhead_ns", "launch_overhead_ns", "validate_group",
+    "validate_plan", "windowed_bandwidth_gbps", "wire_time_s",
+    *sorted(_COMM_EXPORTS),
 ]
 
 

@@ -14,11 +14,16 @@ shared doubled bandwidth rather than strict link exclusivity (DESIGN.md §7.3).
 
 from __future__ import annotations
 
+from typing import TYPE_CHECKING
+
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.compat import axis_size
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.comm.session import CommSession
 
 
 def _shift_perm(n: int, shift: int):
@@ -67,6 +72,34 @@ def halo_exchange_ring(left_bnd: jax.Array, right_bnd: jax.Array,
     left_staged = lax.ppermute(staged, axis_name, _shift_perm(n, 1))   # hop-2
     right_halo = jnp.concatenate([left_direct, left_staged], axis=-1)
     return left_halo, right_halo
+
+
+def halo_exchange_group(session: "CommSession", blocks: jax.Array
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Driver-level ring halo exchange as ONE fused transfer group.
+
+    ``blocks`` is the column-decomposed domain, shape ``(n, rows, cols)``
+    (one block per rank). Every rank's two boundary columns ride a single
+    ``2n``-message group — the paper's 4-rank pattern is a 4-transfer
+    group per shift direction — planned jointly (the ring's directional
+    links are disjoint, so the group is link-exclusive) and launched once,
+    instead of ``2n`` independent sends. Returns ``(left_halos,
+    right_halos)``, shape ``(n, rows, 1)`` each: rank *i*'s left halo is
+    rank *i-1*'s right boundary and vice versa (periodic; apply Dirichlet
+    masking downstream as :func:`jacobi_step` does).
+    """
+    n = blocks.shape[0]
+    if n == 1:
+        return blocks[:, :, -1:], blocks[:, :, :1]
+    items = []
+    for i in range(n):
+        items.append((blocks[i, :, -1:], i, (i + 1) % n))  # → right nbr
+        items.append((blocks[i, :, :1], i, (i - 1) % n))   # → left nbr
+    received = session.exchange(items)
+    left_halos = jnp.stack([received[2 * ((i - 1) % n)] for i in range(n)])
+    right_halos = jnp.stack([received[2 * ((i + 1) % n) + 1]
+                             for i in range(n)])
+    return left_halos, right_halos
 
 
 def jacobi_step(u: jax.Array, axis_name: str, *, multipath: bool = False,

@@ -31,7 +31,7 @@ from typing import TYPE_CHECKING, Iterable, Sequence
 from repro.core.topology import HOST, Topology
 
 if TYPE_CHECKING:  # pragma: no cover - typing only (avoids an import cycle)
-    from repro.comm.plan import TransferPlan
+    from repro.comm.plan import TransferGroup, TransferPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,17 +110,47 @@ def validate_plan(plan: TransferPlan) -> None:
         raise ValueError(f"coverage ends at {pos}, message is {plan.nbytes}")
 
 
+def _launch_overhead_from_counts(num_nodes: int, num_paths: int, *,
+                                 compiled_plan: bool,
+                                 first_iteration: bool = False) -> float:
+    if not compiled_plan:
+        return (num_nodes * LAUNCH_NS_PER_NODE
+                + num_paths * SYNC_NS_PER_PATH)
+    cost = GRAPH_LAUNCH_BASE_NS + num_nodes * GRAPH_LAUNCH_PER_NODE_NS
+    if first_iteration:
+        cost += (GRAPH_INSTANTIATE_BASE_NS
+                 + num_nodes * GRAPH_INSTANTIATE_PER_NODE_NS)
+    return float(cost)
+
+
 def launch_overhead_ns(plan: TransferPlan, *, compiled_plan: bool,
                        first_iteration: bool = False) -> float:
     """CPU-side overhead for dispatching the plan once (paper §5.5)."""
-    n = plan.num_nodes
-    if not compiled_plan:
-        return (n * LAUNCH_NS_PER_NODE
-                + len(plan.paths) * SYNC_NS_PER_PATH)
-    cost = GRAPH_LAUNCH_BASE_NS + n * GRAPH_LAUNCH_PER_NODE_NS
-    if first_iteration:
-        cost += GRAPH_INSTANTIATE_BASE_NS + n * GRAPH_INSTANTIATE_PER_NODE_NS
-    return float(cost)
+    return _launch_overhead_from_counts(
+        plan.num_nodes, len(plan.paths), compiled_plan=compiled_plan,
+        first_iteration=first_iteration)
+
+
+def group_launch_overhead_ns(plans: Sequence[TransferPlan], *,
+                             compiled_plan: bool,
+                             first_iteration: bool = False,
+                             fused: bool = True) -> float:
+    """CPU-side overhead for a transfer group.
+
+    ``fused=True`` models the group as ONE graph launch (the fused SPMD
+    program the engine compiles): a single base launch cost amortized over
+    the total node count, and one instantiation on the first iteration.
+    ``fused=False`` models the legacy dispatch loop — one launch (and one
+    first-iteration instantiation) per message.
+    """
+    if fused:
+        return _launch_overhead_from_counts(
+            sum(p.num_nodes for p in plans),
+            sum(len(p.paths) for p in plans),
+            compiled_plan=compiled_plan, first_iteration=first_iteration)
+    return sum(launch_overhead_ns(p, compiled_plan=compiled_plan,
+                                  first_iteration=first_iteration)
+               for p in plans)
 
 
 def _link_times_s(plan: TransferPlan, topo: Topology,
@@ -144,17 +174,15 @@ def _link_times_s(plan: TransferPlan, topo: Topology,
     return out
 
 
-def estimate_transfer_time_s(
-        plan: TransferPlan, topo: Topology, *,
-        compiled_plan: bool = True,
-        first_iteration: bool = False,
-        concurrent_plans: Sequence[TransferPlan] = ()) -> float:
-    """Analytic end-to-end time for one message under the pipeline model.
+def wire_time_s(plan: TransferPlan, topo: Topology, *,
+                concurrent_plans: Sequence[TransferPlan] = ()) -> float:
+    """Pure wire time (no launch overhead) for one message.
 
     ``concurrent_plans`` are other transfers in flight at the same time
-    (e.g. the reverse direction of a bidirectional test): any directional
-    link they share with ``plan`` is time-shared, and host-staged flows
-    contend on host capacity.
+    (e.g. the reverse direction of a bidirectional test, or the other
+    messages of a transfer group): any directional link they share with
+    ``plan`` is time-shared, and host-staged flows contend on host
+    capacity.
     """
     contention: dict[tuple[int, int], int] = defaultdict(lambda: 0)
     host_flows = 0
@@ -172,10 +200,89 @@ def estimate_transfer_time_s(
         fill = sum(hop_times)                 # first chunk traverses all hops
         steady = (n - 1) * max(hop_times)     # pipeline bottleneck stage
         path_times.append(fill + steady)
-    wire = max(path_times) if path_times else 0.0
-    return wire + launch_overhead_ns(
-        plan, compiled_plan=compiled_plan,
-        first_iteration=first_iteration) / 1e9
+    return max(path_times) if path_times else 0.0
+
+
+def estimate_transfer_time_s(
+        plan: TransferPlan, topo: Topology, *,
+        compiled_plan: bool = True,
+        first_iteration: bool = False,
+        concurrent_plans: Sequence[TransferPlan] = ()) -> float:
+    """Analytic end-to-end time for one message under the pipeline model.
+
+    See :func:`wire_time_s` for the ``concurrent_plans`` contention
+    semantics; launch overhead is added per §5.5.
+    """
+    return wire_time_s(plan, topo, concurrent_plans=concurrent_plans) + (
+        launch_overhead_ns(plan, compiled_plan=compiled_plan,
+                           first_iteration=first_iteration) / 1e9)
+
+
+def _group_plans(group) -> tuple:
+    plans = getattr(group, "plans", group)
+    return tuple(plans)
+
+
+def validate_group(group: "TransferGroup | Sequence[TransferPlan]") -> None:
+    """Assert the group-level §4.5 invariants. Raises ``ValueError``.
+
+    1. every plan individually satisfies :func:`validate_plan` (disjoint
+       cover of its own message, within-plan link exclusivity, ...),
+    2. **cross-flow link exclusivity** — no directional link is used by
+       plans of two *distinct* flows (src, dst). Plans of the same flow
+       (e.g. the leaves of one pytree migration) legitimately share that
+       flow's routes and are exempt.
+    """
+    owner: dict[tuple[int, int], tuple[int, int]] = {}
+    for plan in _group_plans(group):
+        validate_plan(plan)
+        flow = (plan.src, plan.dst)
+        for link in plan.directional_links():
+            prev = owner.setdefault(link, flow)
+            if prev != flow:
+                raise ValueError(
+                    f"directional link {link} shared across flows {prev} "
+                    f"and {flow} (group-level §4.5 exclusivity breach)")
+
+
+def estimate_group_time_s(
+        group: "TransferGroup | Sequence[TransferPlan]", topo: Topology, *,
+        compiled_plan: bool = True,
+        first_iteration: bool = False,
+        fused: bool = True) -> float:
+    """Analytic makespan of a set of concurrent transfers.
+
+    ``fused=True`` is the transfer-group execution model: one compiled
+    launch covering every message, so the makespan is a single (fused)
+    launch overhead plus the slowest message's wire time — each message
+    priced with every other group member as concurrent traffic.
+
+    ``fused=False`` is the legacy dispatch loop (one compiled program per
+    message, launched back-to-back without blocking): the CPU serializes
+    the launches, so message *i* cannot start before launches ``1..i``
+    have issued, while the wires still contend. This is the baseline
+    `exchange()` is measured against.
+    """
+    plans = _group_plans(group)
+    if not plans:
+        return 0.0
+    others = [
+        [q for j, q in enumerate(plans) if j != i]
+        for i in range(len(plans))
+    ]
+    wires = [wire_time_s(p, topo, concurrent_plans=o)
+             for p, o in zip(plans, others)]
+    if fused:
+        return max(wires) + group_launch_overhead_ns(
+            plans, compiled_plan=compiled_plan,
+            first_iteration=first_iteration, fused=True) / 1e9
+    makespan, dispatched = 0.0, 0.0
+    for plan, wire in zip(plans, wires):
+        dispatched += launch_overhead_ns(
+            plan, compiled_plan=compiled_plan,
+            first_iteration=first_iteration) / 1e9
+        makespan = max(makespan, dispatched + wire)
+    return makespan
 
 
 def effective_bandwidth_gbps(plan: TransferPlan, topo: Topology, *,

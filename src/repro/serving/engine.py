@@ -8,7 +8,8 @@ sampling, per-request completion tracking.
 Communication goes through an optional :class:`repro.comm.CommSession`:
 ``ServeEngine.migrate_kv`` moves a populated KV cache between devices over
 the session's compiled multi-path plans (the prefill→decode disaggregation
-primitive), with one cached plan per distinct leaf (size, dtype).
+primitive). All leaves are fused into ONE transfer group — one compiled
+program and one launch per migration, regardless of leaf count.
 """
 
 from __future__ import annotations
@@ -83,9 +84,11 @@ class ServeEngine:
         """Move a KV cache from device ``src`` to ``dst`` through the comm
         session's multi-path engine (prefill→decode disaggregation).
 
-        Every leaf rides the session's compiled transfer plans, so repeated
-        migrations of same-shaped caches are pure cache hits — check
-        ``self.comm.stats()["cache"]``.
+        All leaves ride ONE fused transfer group: a single compiled
+        program (one plan-cache entry keyed on every leaf's plan) and a
+        single dispatch per migration — steady-state migration of a
+        same-shaped cache is one cache hit and one launch; check
+        ``self.comm.stats()``. Empty caches and ``src == dst`` no-op.
         """
         if self.comm is None:
             raise ValueError("ServeEngine was built without a CommSession; "

@@ -62,17 +62,38 @@ def test_serve_engine_kv_migration(mini_cfg):
                          comm=comm)
     toks = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
     _, cache = engine.prefill(toks)
+    assert len(jax.tree.leaves(cache)) > 1   # multi-leaf KV pytree
 
     moved = engine.migrate_kv(cache, src=0, dst=5)
     for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(moved)):
         assert a.shape == b.shape and a.dtype == b.dtype
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
+    # Acceptance: the whole multi-leaf migration is ONE fused transfer
+    # group — exactly one plan-cache entry and one dispatch.
+    stats = comm.stats()
+    assert stats["cache"]["size"] == 1
+    assert stats["dispatches"] == 1
+
     before = comm.stats()["cache"]
     engine.migrate_kv(cache, src=0, dst=5)   # same shapes → pure hits
     after = comm.stats()["cache"]
     assert after["misses"] == before["misses"]
     assert after["hits"] > before["hits"]
+    assert comm.stats()["dispatches"] == 2   # steady state: 1 launch/round
+
+
+def test_serve_engine_kv_migration_degenerate(mini_cfg):
+    """Regression: empty and same-device cache migrations must no-op."""
+    params = tfm.init_params(jax.random.key(0), mini_cfg)
+    comm = CommSession()
+    engine = ServeEngine(mini_cfg, params, max_len=32, kv_chunks=1,
+                         comm=comm)
+    assert engine.migrate_kv({}, 0, 1) == {}
+    _, cache = engine.prefill(jnp.asarray([[1, 2]], jnp.int32))
+    same = engine.migrate_kv(cache, src=3, dst=3)
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(same)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_serve_engine_without_comm_rejects_migration(mini_cfg):

@@ -24,10 +24,34 @@ def test_transfer_roundtrip(engine, nelems, dtype):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(msg))
 
 
-def test_bidirectional(engine):
-    msg = jnp.arange(4096, dtype=jnp.float32)
-    got = engine.transfer(msg, 2, 5, bidirectional=True)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(msg))
+def test_bidirectional_group(engine):
+    """Opposite-direction traffic is a 2-transfer group (the old
+    ``bidirectional=True`` flag); BOTH receptions are returned."""
+    fwd_msg = jnp.arange(4096, dtype=jnp.float32)
+    rev_msg = jnp.arange(4096, dtype=jnp.float32) * -3.0
+    fwd, rev = engine.transfer_group([fwd_msg, rev_msg], [(2, 5), (5, 2)])
+    np.testing.assert_array_equal(np.asarray(fwd), np.asarray(fwd_msg))
+    np.testing.assert_array_equal(np.asarray(rev), np.asarray(rev_msg))
+
+
+def test_transfer_group_mixed_sizes_dtypes(engine):
+    msgs = [jnp.arange(1000, dtype=jnp.float32),
+            jnp.arange(64, dtype=jnp.int32),
+            jnp.arange(4096, dtype=jnp.bfloat16)]
+    outs = engine.transfer_group(msgs, [(0, 1), (2, 3), (6, 4)])
+    for m, o in zip(msgs, outs):
+        assert o.dtype == m.dtype
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(m))
+
+
+def test_transfer_group_one_cache_entry_one_dispatch(engine):
+    c0, d0 = len(engine.cache), engine.dispatches
+    msgs = [jnp.arange(256, dtype=jnp.float32) * i for i in range(3)]
+    engine.transfer_group(msgs, [(0, 7), (0, 7), (0, 7)])
+    assert len(engine.cache) == c0 + 1      # ONE fused program
+    assert engine.dispatches == d0 + 1      # ONE launch
+    engine.transfer_group(msgs, [(0, 7), (0, 7), (0, 7)])
+    assert len(engine.cache) == c0 + 1      # steady state: pure cache hit
 
 
 def test_window(engine):

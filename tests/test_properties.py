@@ -15,7 +15,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.comm import (CommConfig, CommSession, PathPlanner,  # noqa: E402
                         TransferPlanCache)
-from repro.core import Topology, build_schedule, validate_plan  # noqa: E402
+from repro.core import (Topology, build_schedule,  # noqa: E402
+                        validate_group, validate_plan)
 
 MiB = 1 << 20
 
@@ -47,6 +48,62 @@ def test_plan_invariants_property(nbytes, max_paths, chunks, gran_pow,
     # alignment: every chunk boundary is granularity-aligned except the tail
     for t in sched:
         assert t.offset % gran == 0
+
+
+_pairs8 = st.tuples(st.integers(0, 7), st.integers(0, 7)).filter(
+    lambda p: p[0] != p[1])
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    pairs=st.lists(_pairs8, min_size=1, max_size=5, unique=True),
+    sizes=st.lists(st.integers(64, 8 * MiB), min_size=5, max_size=5),
+    max_paths=st.integers(1, 4),
+)
+def test_group_invariants_property(pairs, sizes, max_paths):
+    """Group-level §4.5 invariants hold for arbitrary distinct-flow groups:
+
+    * every plan of the group covers its own message disjointly,
+    * an *exclusive* group shares no directional link across flows
+      (``validate_group``), and ``exclusive`` is reported faithfully.
+
+    (The fused-vs-sequential time comparison is deterministic — see
+    ``test_transfer_group.py`` — because for pathological size mixes a
+    tiny message's launch nodes legitimately land on the fused critical
+    path while the dispatch loop hides them behind a long wire.)
+    """
+    topo = Topology.full_mesh(8, with_host=False)
+    planner = PathPlanner(topo, multipath_threshold=256)
+    reqs = [(s, d, n) for (s, d), n in zip(pairs, sizes)]
+    group = planner.plan_group(reqs, max_paths=max_paths)
+    assert group.num_messages == len(reqs)
+    for plan, (s, d, n) in zip(group.plans, reqs):
+        validate_plan(plan)            # per-plan disjoint cover + links
+        assert (plan.src, plan.dst, plan.nbytes) == (s, d, n)
+    if group.exclusive:
+        validate_group(group)          # cross-flow link exclusivity
+    else:
+        with pytest.raises(ValueError, match="exclusivity"):
+            validate_group(group)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    pairs=st.lists(_pairs8, min_size=1, max_size=4, unique=True),
+    sizes=st.lists(st.integers(64, 4 * MiB), min_size=4, max_size=4),
+)
+def test_group_exclusive_property(pairs, sizes):
+    """Whenever exclusive=True succeeds, the result passes the strict
+    cross-flow validator and reports itself exclusive."""
+    topo = Topology.full_mesh(8, with_host=False)
+    planner = PathPlanner(topo, multipath_threshold=256)
+    reqs = [(s, d, n) for (s, d), n in zip(pairs, sizes)]
+    try:
+        group = planner.plan_group(reqs, exclusive=True)
+    except ValueError:
+        hypothesis.reject()
+    validate_group(group)
+    assert group.exclusive
 
 
 @settings(max_examples=12, deadline=None)

@@ -1,0 +1,306 @@
+"""Transfer groups: joint planning, fused execution, and the concurrency
+bugfixes the group rework flushed out.
+
+* ``plan_group`` — contention-aware joint planning: link-exclusive flows
+  when the topology permits, contention-derated sharing when it doesn't,
+  arbitrated by the §4.4 analytic model,
+* ``session.exchange`` — one compiled launch for N concurrent messages,
+  numerics identical to sequential sends,
+* group cache key carries EVERY plan's signature (subsumes the old
+  bidirectional key bug that dropped the reverse plan),
+* regression: 3-hop detours can no longer stage through the host when
+  ``include_host=False``, and ``_check_executable`` rejects a host on ANY
+  hop (not just ``route.via``),
+* regression: ``bidirectional`` returns both receptions; ``send_pytree``
+  no-ops zero-size and same-device leaves.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (CommConfig, CommSession, PathPlanner,
+                        TransferPlanCache, TransferRequest)
+from repro.comm.engine import _check_executable
+from repro.comm.plan import PathAssignment, TransferPlan
+from repro.core import (HOST, Link, Topology, estimate_group_time_s,
+                        estimate_transfer_time_s, validate_group,
+                        validate_plan)
+
+MiB = 1 << 20
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    return Topology.full_mesh(8, with_host=False, name="mesh8")
+
+
+@pytest.fixture(scope="module")
+def session(mesh8):
+    return CommSession(CommConfig(multipath_threshold=256), topology=mesh8)
+
+
+def _bridge_topology():
+    """3 GPUs + host where the only alternative 0→1 path stages mid-route
+    through the host: 0↔1 (direct), 0↔2, 2↔HOST, HOST↔1. The detour
+    (0,2),(2,HOST),(HOST,1) records via=2, so a via-only executability
+    check misses the host hop."""
+    gb = 25.0
+    links = []
+    for a, b in ((0, 1), (0, 2)):
+        links += [Link(a, b, "nvlink", gb), Link(b, a, "nvlink", gb)]
+    links += [Link(2, HOST, "pcie", 12.0), Link(HOST, 2, "pcie", 12.0),
+              Link(HOST, 1, "pcie", 12.0), Link(1, HOST, "pcie", 12.0)]
+    return Topology(3, links, name="bridge3")
+
+
+# ------------------------- detour host regressions --------------------------
+
+def test_detour_never_stages_through_host_without_include_host():
+    """Regression: neighbors() includes HOST, so the 3-hop detour search
+    could route through the host even with include_host=False."""
+    planner = PathPlanner(_bridge_topology(), multipath_threshold=0)
+    routes = planner.enumerate_routes(0, 1, include_host=False)
+    for r in routes:
+        for (a, b) in r.directional_links():
+            assert HOST not in (a, b), f"host leaked into {r}"
+    plan = planner.plan(0, 1, 8 * MiB)
+    assert all(HOST not in (a, b) for pa in plan.paths
+               for (a, b) in pa.route.directional_links())
+
+
+def test_detour_through_host_allowed_when_requested():
+    planner = PathPlanner(_bridge_topology(), multipath_threshold=0)
+    routes = planner.enumerate_routes(0, 1, include_host=True)
+    hosted = [r for r in routes
+              if any(HOST in link for link in r.directional_links())]
+    assert hosted, "host detour should be admitted with include_host=True"
+
+
+def test_check_executable_rejects_mid_route_host():
+    """Regression: the detour (0,2),(2,HOST),(HOST,1) has via=2, so the
+    old via-only check would hand device id -1 to ppermute."""
+    topo = _bridge_topology()
+    planner = PathPlanner(topo, multipath_threshold=0)
+    routes = planner.enumerate_routes(0, 1, include_host=True)
+    hosted = [r for r in routes if r.via != HOST
+              and any(HOST in link for link in r.directional_links())]
+    assert hosted, "need a mid-route-host / device-via route to regress"
+    plan = TransferPlan(0, 1, 4096,
+                        (PathAssignment(hosted[0], 0, 4096, 1, 4),),
+                        topo.name)
+    with pytest.raises(ValueError, match="host-staged"):
+        _check_executable(plan)
+
+
+def test_two_gpu_host_topology_plans_clean():
+    """2-GPU + host: include_host=False plans must never touch the host
+    anywhere (detour search runs because only the direct route exists)."""
+    topo = Topology.full_mesh(2, with_host=True, name="pair")
+    planner = PathPlanner(topo, multipath_threshold=0)
+    plan = planner.plan(0, 1, 8 * MiB, max_paths=4, include_host=False)
+    validate_plan(plan)
+    assert all(HOST not in (a, b) for pa in plan.paths
+               for (a, b) in pa.route.directional_links())
+
+
+# ------------------------------ plan_group ----------------------------------
+
+def test_plan_group_empty(mesh8):
+    g = PathPlanner(mesh8).plan_group([])
+    assert g.num_messages == 0 and g.exclusive
+
+
+def test_plan_group_rejects_degenerate(mesh8):
+    planner = PathPlanner(mesh8)
+    with pytest.raises(ValueError, match="src == dst"):
+        planner.plan_group([(2, 2, 1024)])
+    with pytest.raises(ValueError, match="positive"):
+        planner.plan_group([(0, 1, 0)])
+    with pytest.raises(ValueError, match="granularity"):
+        planner.plan_group([TransferRequest(0, 1, 10, 4)])
+
+
+def test_plan_group_bidirectional_exclusive(mesh8):
+    """Opposite directions use disjoint directional links — the exclusive
+    candidate wins and matches the group-level §4.5 invariant."""
+    g = PathPlanner(mesh8, multipath_threshold=0).plan_group(
+        [(0, 1, 8 * MiB), (1, 0, 8 * MiB)], exclusive=True)
+    validate_group(g)
+    assert g.exclusive
+
+
+def test_plan_group_halo_ring_exclusive():
+    """The paper's 4-rank halo pattern rides a 4-transfer group with fully
+    disjoint links on the Beluga mesh."""
+    topo = Topology.full_mesh(4)
+    g = PathPlanner(topo, multipath_threshold=0).plan_group(
+        [(0, 1, 2 * MiB), (1, 2, 2 * MiB), (2, 3, 2 * MiB), (3, 0, 2 * MiB)])
+    validate_group(g)
+    assert g.exclusive and g.num_messages == 4
+
+
+def test_plan_group_fan_in_falls_back_to_sharing():
+    """Flows converging on one device can't be link-disjoint without
+    starving someone; the model must pick contention-derated sharing and
+    still beat the sequential dispatch loop."""
+    topo = Topology.full_mesh(4, with_host=False)
+    planner = PathPlanner(topo, multipath_threshold=256)
+    reqs = [(0, 1, 4 * MiB), (2, 1, 4 * MiB)]
+    g = planner.plan_group(reqs)
+    for p in g.plans:
+        validate_plan(p)
+    with pytest.raises(ValueError, match="exclusivity"):
+        validate_group(g)            # sharing is real — and detected
+    indep = [planner.plan(s, d, n) for s, d, n in reqs]
+    t_group = estimate_group_time_s(g, topo, fused=True)
+    t_loop = estimate_group_time_s(indep, topo, fused=False)
+    assert t_group <= t_loop
+    forced = planner.plan_group(reqs, exclusive=True)
+    validate_group(forced)          # a (suboptimal) partition does exist
+    assert estimate_group_time_s(forced, topo) >= t_group
+
+
+def test_plan_group_exclusive_raises_when_starved():
+    """Chain 2—0—1: flow (0,1) claims the only link into 1, so a
+    link-exclusive plan for flow (2,1) cannot exist."""
+    gb = 25.0
+    links = [Link(a, b, "nvlink", gb)
+             for (a, b) in ((0, 1), (1, 0), (2, 0), (0, 2))]
+    topo = Topology(3, links, name="chain3")
+    planner = PathPlanner(topo, multipath_threshold=0)
+    reqs = [(0, 1, MiB), (2, 1, MiB)]
+    with pytest.raises(ValueError, match="link-exclusive"):
+        planner.plan_group(reqs, exclusive=True)
+    g = planner.plan_group(reqs)    # default: contention-aware sharing
+    for p in g.plans:
+        validate_plan(p)
+    assert not g.exclusive and (0, 1) in g.shared_links()
+
+
+def test_plan_group_same_flow_messages_share_routes(mesh8):
+    """Pytree-migration shape: N messages of ONE flow share the flow's
+    routes (allowed by the group invariant) and each plan stays valid."""
+    planner = PathPlanner(mesh8, multipath_threshold=0)
+    g = planner.plan_group([TransferRequest(0, 3, 64 * 1024, 4)] * 4)
+    validate_group(g)               # same-flow sharing is exempt
+    assert g.num_messages == 4
+
+
+def test_exchange_model_beats_sequential_sends():
+    """Acceptance: analytic exchange() time ≤ the max completion of
+    independently-planned sequential sends on a contended topology."""
+    topo = Topology.full_mesh(4)
+    planner = PathPlanner(topo, multipath_threshold=256)
+    for reqs in (
+            [(0, 1, 8 * MiB), (1, 0, 8 * MiB)],                 # BIBW
+            [(0, 1, 4 * MiB), (2, 1, 4 * MiB)],                 # fan-in
+            [(0, 1, 2 * MiB), (1, 2, 2 * MiB),
+             (2, 3, 2 * MiB), (3, 0, 2 * MiB)],                 # halo ring
+            [(0, 1, 16 * MiB), (1, 0, 4 * MiB), (2, 3, 1 * MiB)]):
+        group = planner.plan_group(reqs)
+        indep = [planner.plan(s, d, n) for s, d, n in reqs]
+        t_group = estimate_group_time_s(group, topo, fused=True)
+        t_loop = estimate_group_time_s(indep, topo, fused=False)
+        assert t_group <= t_loop, (reqs, t_group, t_loop)
+
+
+# --------------------------- fused execution --------------------------------
+
+def test_exchange_matches_sequential_sends(session):
+    rng = np.random.RandomState(0)
+    items = [(jnp.asarray(rng.randn(501), jnp.float32), 0, 3),
+             (jnp.asarray(rng.randn(1024), jnp.float32), 3, 0),
+             (jnp.asarray(rng.randn(77), jnp.float32), 5, 2)]
+    got = session.exchange(items)
+    for (x, src, dst), out in zip(items, got):
+        ref = session.send(x, src, dst)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_exchange_noops_and_shapes(session):
+    """src == dst and zero-size items no-op per item; shapes restored."""
+    x = jnp.arange(24, dtype=jnp.float32).reshape(2, 3, 4)
+    e = jnp.zeros((0, 5), jnp.int32)
+    y = jnp.arange(640, dtype=jnp.float32)
+    got = session.exchange([(x, 2, 2), (e, 0, 1), (y, 1, 4)])
+    assert got[0].shape == x.shape
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(x))
+    assert got[1].shape == e.shape and got[1].dtype == e.dtype
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(y))
+
+
+def test_exchange_all_noops_skips_engine(mesh8):
+    sess = CommSession(CommConfig(multipath_threshold=256), topology=mesh8)
+    out = sess.exchange([(jnp.ones((3,)), 1, 1)])
+    assert sess.stats()["dispatches"] == 0    # engine never materialized
+    np.testing.assert_array_equal(np.asarray(out[0]), 1.0)
+
+
+def test_bidirectional_returns_both_receptions(session):
+    """Regression: the docstring always claimed both receptions were
+    validated; now they are actually returned and checked."""
+    msg = jnp.arange(4096, dtype=jnp.float32)
+    fwd, rev = session.bidirectional(msg, 1, 6)
+    np.testing.assert_array_equal(np.asarray(fwd), np.asarray(msg))
+    np.testing.assert_array_equal(np.asarray(rev), np.asarray(msg))
+
+
+def test_group_cache_key_carries_every_plan(session):
+    """Regression (old engine.py:190): the bidirectional cache key dropped
+    the reverse plan's signature. Two groups with an identical forward
+    message but different second messages must be distinct entries."""
+    cache = session.cache
+    x = jnp.arange(512, dtype=jnp.float32)
+    c0 = len(cache)
+    session.exchange([(x, 6, 7), (x, 7, 6)])
+    session.exchange([(x, 6, 7), (jnp.arange(100, dtype=jnp.float32), 7, 6)])
+    session.exchange([(x, 6, 7), (x, 5, 6)])
+    assert len(cache) == c0 + 3
+
+
+def test_send_pytree_fused_one_entry_one_dispatch(mesh8):
+    """Acceptance: a multi-leaf pytree migration is ONE plan-cache entry
+    and ONE dispatch (was one compiled program + dispatch per leaf)."""
+    sess = CommSession(CommConfig(multipath_threshold=256), topology=mesh8)
+    tree = {"layer0": {"k": jnp.arange(2 * 3 * 8, dtype=jnp.bfloat16
+                                       ).reshape(2, 3, 8),
+                       "v": jnp.ones((2, 3, 8), jnp.bfloat16)},
+            "layer1": {"k": jnp.zeros((2, 3, 8), jnp.bfloat16),
+                       "v": jnp.full((2, 3, 8), 2.0, jnp.bfloat16)},
+            "lengths": jnp.arange(2, dtype=jnp.int32)}
+    moved = sess.send_pytree(tree, 0, 5)
+    stats = sess.stats()
+    assert stats["cache"]["size"] == 1
+    assert stats["dispatches"] == 1
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(moved)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    sess.send_pytree(tree, 0, 5)             # steady state: hit + 1 dispatch
+    stats = sess.stats()
+    assert stats["cache"]["size"] == 1 and stats["cache"]["hits"] >= 1
+    assert stats["dispatches"] == 2
+
+
+def test_send_pytree_zero_size_and_same_device(session):
+    """Regression: zero-size leaves crashed with 'nbytes must be positive'
+    and src == dst crashed in route enumeration; both are per-leaf no-ops."""
+    tree = {"kv": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "empty": jnp.zeros((4, 0), jnp.float32)}
+    moved = session.send_pytree(tree, 0, 2)
+    np.testing.assert_array_equal(np.asarray(moved["kv"]),
+                                  np.asarray(tree["kv"]))
+    assert moved["empty"].shape == (4, 0)
+    same = session.send_pytree(tree, 3, 3)    # same-device: identity
+    np.testing.assert_array_equal(np.asarray(same["kv"]),
+                                  np.asarray(tree["kv"]))
+    empty = session.send_pytree({}, 0, 1)     # empty cache entry: no-op
+    assert empty == {}
+
+
+def test_exchange_respects_window(session):
+    msg = jnp.arange(256, dtype=jnp.float32)
+    (out,) = session.exchange([(msg, 2, 4)], window=3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(msg))
