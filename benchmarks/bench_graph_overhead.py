@@ -1,8 +1,13 @@
-"""Paper Fig. 13/14 — transfer-plan (CUDA Graph analogue) lifecycle costs.
+"""Paper Fig. 13/14 — transfer-graph (CUDA Graph analogue) lifecycle costs.
 
 Measures the REAL trace / lower / compile(=instantiate) / launch times of
 compiled multipath plans as a function of copy-node count, first iteration
-vs steady state — the JAX counterpart of the paper's overhead analysis.
+vs steady state — the JAX counterpart of the paper's overhead analysis —
+and, alongside them, the ANALYTIC launch cost the pipeline model derives
+from the same :class:`~repro.comm.graph.TransferGraph` node count (graph
+launch constants vs per-node launch constants). Every row carries the
+graph's node/edge counts in the ``--json`` artifact so the perf trajectory
+can be plotted against graph size directly.
 """
 
 from benchmarks.common import Row, timeit_us
@@ -12,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import CommConfig, CommSession
-from repro.core import Topology
+from repro.comm.graph import lower
+from repro.core import Topology, launch_overhead_ns
 
 
 def run() -> list[Row]:
@@ -27,23 +33,44 @@ def run() -> list[Row]:
         nelems = 1 << 16
         compiled, plan = sess.compiled_for(0, 1, nelems, max_paths=3,
                                            num_chunks=chunks)
+        graph = lower(plan)
+        counts = {"nodes": graph.num_nodes, "edges": graph.num_edges,
+                  "critical_path_nodes": graph.critical_path_nodes()}
+        assert graph.num_nodes == compiled.lifecycle.num_nodes
         life = compiled.lifecycle
         rows.append(Row(
-            f"plan_lifecycle/nodes{plan.num_nodes}/trace",
-            life.trace_ns / 1e3, "first_iter"))
+            f"plan_lifecycle/nodes{graph.num_nodes}/trace",
+            life.trace_ns / 1e3, "first_iter", counts))
         rows.append(Row(
-            f"plan_lifecycle/nodes{plan.num_nodes}/lower",
-            life.lower_ns / 1e3, "first_iter"))
+            f"plan_lifecycle/nodes{graph.num_nodes}/lower",
+            life.lower_ns / 1e3, "first_iter", counts))
         rows.append(Row(
-            f"plan_lifecycle/nodes{plan.num_nodes}/instantiate",
-            life.compile_ns / 1e3, "first_iter"))
+            f"plan_lifecycle/nodes{graph.num_nodes}/instantiate",
+            life.compile_ns / 1e3, "first_iter", counts))
         x = jnp.zeros((1, 4, nelems), jnp.float32)
         launch_us = timeit_us(compiled.compiled, x, iters=10, warmup=3)
         rows.append(Row(
-            f"plan_lifecycle/nodes{plan.num_nodes}/launch",
-            launch_us, "steady_state"))
+            f"plan_lifecycle/nodes{graph.num_nodes}/launch",
+            launch_us, "steady_state", counts))
+        # modeled launch costs from the SAME graph node count: one fused
+        # graph launch vs per-node async-copy launches (paper §5.5)
+        modeled_graph_us = launch_overhead_ns(
+            plan, compiled_plan=True) / 1e3
+        modeled_pernode_us = launch_overhead_ns(
+            plan, compiled_plan=False) / 1e3
+        rows.append(Row(
+            f"plan_lifecycle/nodes{graph.num_nodes}/modeled_graph_launch",
+            modeled_graph_us, "model", counts))
+        rows.append(Row(
+            f"plan_lifecycle/nodes{graph.num_nodes}/modeled_pernode_launch",
+            modeled_pernode_us, "model",
+            {**counts,
+             "graph_vs_pernode":
+                 round(modeled_pernode_us / max(modeled_graph_us, 1e-9),
+                       2)}))
         total_first = life.build_ns / 1e3 + launch_us
         rows.append(Row(
-            f"plan_lifecycle/nodes{plan.num_nodes}/amortize_breakeven",
-            0.0, f"{total_first / max(launch_us, 1e-9):.0f}launches"))
+            f"plan_lifecycle/nodes{graph.num_nodes}/amortize_breakeven",
+            0.0, f"{total_first / max(launch_us, 1e-9):.0f}launches",
+            counts))
     return rows

@@ -27,10 +27,14 @@ def timeit_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
 
 
 class Row:
-    def __init__(self, name: str, us_per_call: float, derived: str):
+    def __init__(self, name: str, us_per_call: float, derived: str,
+                 extra: dict | None = None):
         self.name = name
         self.us = us_per_call
         self.derived = derived
+        #: Structured extras (e.g. graph node/edge counts) — emitted into
+        #: the ``--json`` artifact rows, not the CSV stream.
+        self.extra = extra or {}
 
     def csv(self) -> str:
         return f"{self.name},{self.us:.2f},{self.derived}"

@@ -56,7 +56,8 @@ def main() -> None:
         print(row.csv(), flush=True)
     if args.json:
         payload = [{"name": r.name, "us_per_call": round(r.us, 2),
-                    "derived": r.derived} for r in rows]
+                    "derived": r.derived,
+                    **getattr(r, "extra", {})} for r in rows]
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {len(payload)} rows to {args.json}", flush=True)

@@ -5,6 +5,7 @@ caching. Layering (DESIGN.md §1):
 
 * :mod:`repro.comm.config`      — :class:`CommConfig` (+ ``from_env``)
 * :mod:`repro.comm.plan`        — transfer-plan data model
+* :mod:`repro.comm.graph`       — :class:`TransferGraph` copy-node DAG IR
 * :mod:`repro.comm.policy`      — pluggable :class:`PathPolicy` strategies
 * :mod:`repro.comm.planner`     — route enumeration + plan construction
 * :mod:`repro.comm.cache`       — compiled-plan LRU (CUDA-Graph analogue)
@@ -29,6 +30,8 @@ from repro.compat import make_mesh, shard_map  # noqa: F401
 from repro.comm.config import POLICY_NAMES, CommConfig  # noqa: F401
 from repro.comm.plan import (  # noqa: F401
     PathAssignment, TransferGroup, TransferPlan, TransferRequest)
+from repro.comm.graph import (  # noqa: F401
+    CopyNode, DepEdge, TransferGraph, canonical_digest, lower)
 from repro.comm.policy import (  # noqa: F401
     GreedyBandwidthPolicy, PathPolicy, RoundRobinPolicy, TunerPolicy,
     contention_scaled, make_policy)
@@ -39,7 +42,7 @@ from repro.comm.collectives import (  # noqa: F401
     bidir_ring_all_gather, bidir_ring_reduce_scatter, multipath_all_reduce,
     multipath_all_to_all, psum_via_multipath)
 from repro.comm.engine import (  # noqa: F401
-    AXIS, GroupKey, MultiPathTransfer, TransferKey, group_signature,
+    AXIS, GroupKey, MultiPathTransfer, group_signature,
     multipath_send_local, plan_signature)
 from repro.comm.session import (  # noqa: F401
     BoundCollectives, CollectiveKey, CommSession)

@@ -143,6 +143,10 @@ class TransferPlanCache:
             self.put(key, plan)
         return plan
 
+    def keys(self) -> list[Hashable]:
+        """Current keys, least-recently-used first (eviction order)."""
+        return list(self._store)
+
     def stats(self) -> dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "size": len(self._store),

@@ -1,27 +1,29 @@
 """MultiPathTransfer — executable multi-path P2P transfers on a JAX mesh.
 
-This is the UCT-layer analogue (DESIGN.md §2): it takes one or more
-:class:`~repro.comm.plan.TransferPlan` objects, builds the SPMD program
-whose ops are the plans' copy nodes (one ``ppermute`` per chunk per hop —
-the CUDA Graph's memcpy nodes), compiles it once, and caches the executable
-in a :class:`~repro.comm.cache.TransferPlanCache` keyed like the paper's
-graph cache on *every* message's (src, dst, size, path configuration).
+This is the UCT-layer analogue (DESIGN.md §2): it lowers one or more
+:class:`~repro.comm.plan.TransferPlan` objects to ONE
+:class:`~repro.comm.graph.TransferGraph` (the CUDA Graph analogue), walks
+the graph's copy nodes in topological order emitting one ``ppermute`` per
+node, compiles the resulting SPMD program once, and caches the executable
+in a :class:`~repro.comm.cache.TransferPlanCache` keyed on the graph's
+canonical :meth:`~repro.comm.graph.TransferGraph.digest` — the paper's
+graph cache keyed on (src, dst, size, path configuration).
 
 A **transfer group** (:meth:`MultiPathTransfer.transfer_group`) fuses a set
 of concurrent messages — planned jointly by
-:meth:`~repro.comm.planner.PathPlanner.plan_group` — into ONE traced /
-lowered / compiled program, one cache entry, and one launch: the paper's
-graph-per-message becomes one graph per traffic pattern (message fusion à
-la Choi et al.). Single sends are the 1-message special case of the same
-machinery.
+:meth:`~repro.comm.planner.PathPlanner.plan_group` — into ONE graph, one
+traced / lowered / compiled program, one cache entry, and one launch: the
+paper's graph-per-message becomes one graph per traffic pattern (message
+fusion à la Choi et al.). Single sends are the 1-message special case of
+the same machinery.
 
-Correctness model (§4.5 of the paper → functional dataflow here):
-
-* each chunk writes a disjoint, precomputed destination offset,
-* staged hop-2 consumes hop-1's value (dataflow dependency),
-* paths never share a directional link (planner invariant, held across a
-  whole group for distinct flows — ``validate_group``),
-* "final synchronization" is the functional join of all chunk outputs.
+Correctness model (§4.5 of the paper → functional dataflow here): the
+graph's hop edges ARE the program's dataflow (hop *i+1* consumes hop *i*'s
+value), chunks write disjoint precomputed destination offsets, paths never
+share a directional link (validated on the same graph the program is
+emitted from), and "final synchronization" is the functional join of all
+terminal copy nodes. Because the emitter walks the same lowering the
+model and the validators consume, the three can no longer diverge.
 
 The engine runs on a flat 1-D device axis (default ``"dev"``); topology
 device ids are mesh positions. Model-parallel meshes are a separate concern
@@ -41,6 +43,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm.cache import CompiledPlan, TransferPlanCache, compile_plan
 from repro.compat import shard_map
+from repro.comm.graph import TransferGraph, lower
 from repro.comm.plan import TransferGroup, TransferPlan, TransferRequest
 from repro.comm.planner import PathPlanner
 from repro.core.pipelining import validate_plan
@@ -50,38 +53,34 @@ AXIS = "dev"
 
 
 @dataclasses.dataclass(frozen=True)
-class TransferKey:
-    """Legacy single-message cache key (kept for backwards compatibility).
-
-    New code keys compiled programs with :class:`GroupKey`, which carries
-    one entry per message — including for single sends.
-    """
-
-    src: int
-    dst: int
-    nelems: int
-    dtype: str
-    plan_sig: tuple  # ((via, num_chunks, nbytes), ...) per path
-    window: int = 1
-    bidirectional: bool = False
-
-
-@dataclasses.dataclass(frozen=True)
 class GroupKey:
     """Graph-cache key for a fused transfer group.
 
-    ``entries`` holds one ``(src, dst, nelems, dtype, plan_signature)``
-    tuple per message — EVERY plan of the group contributes its signature,
-    so two groups sharing a forward plan but differing anywhere else (the
-    old bidirectional cache-key bug: the reverse plan's signature was
-    silently dropped) can never collide.
+    ``digest`` is the canonical content hash of the lowered
+    :class:`~repro.comm.graph.TransferGraph` (nodes + edges + window), so
+    the key can never diverge from the program that was actually emitted
+    — EVERY message's routes, chunking, and byte ranges contribute (the
+    old hand-assembled key once dropped the reverse plan's signature; a
+    digest of the whole graph cannot). ``entries`` adds the per-message
+    element type/count, which the graph (byte-level) does not carry but
+    the traced program shape depends on.
     """
 
-    entries: tuple
+    digest: str
+    entries: tuple   # ((src, dst, nelems, dtype_str), ...) per message
     window: int = 1
+    #: Mesh size the program was compiled for: operand shapes/shardings are
+    #: (window, num_devices, nelems), so a cache shared by sessions on
+    #: different-sized meshes must not serve one mesh's executable to the
+    #: other (the graph digest covers routes, not the device axis).
+    num_devices: int = 0
 
 
 def plan_signature(plan: TransferPlan) -> tuple:
+    """Human-readable per-path summary ((links, chunks, bytes), ...).
+
+    Informational/diagnostic — cache keys use the graph digest instead.
+    """
     return tuple((p.route.directional_links(), p.num_chunks, p.nbytes)
                  for p in plan.paths)
 
@@ -105,6 +104,48 @@ def _check_executable(plan: TransferPlan) -> None:
                     "mesh (DESIGN.md §2); plan with include_host=False")
 
 
+def emit_graph(graph: TransferGraph, xs: Sequence[jax.Array],
+               axis_name: str, itemsizes: Sequence[int]) -> list[jax.Array]:
+    """Walk graph nodes in topological order, one ``ppermute`` per node.
+
+    ``xs[i]`` is message *i*'s local shard of shape ``(window, 1,
+    nelems_i)``; on the source device it holds the message, elsewhere
+    contents are ignored. Returns same-shaped arrays holding each message
+    on its destination device and zeros elsewhere.
+
+    Dataflow follows the graph's hop edges exactly: a node with no hop
+    predecessor slices its chunk from the input, every other node consumes
+    its predecessor's ``ppermute`` output, and terminal nodes join into
+    the zero-initialized output (the §4.5 "final synchronization").
+    """
+    outs = [jnp.zeros_like(x) for x in xs]
+    preds = graph.hop_predecessor
+    terminals = graph.terminal_nodes
+    values: dict[int, jax.Array] = {}
+    for idx in graph.topological_order():
+        node = graph.nodes[idx]
+        isz = itemsizes[node.msg_idx]
+        if node.offset % isz or node.nbytes % isz:
+            raise ValueError("chunk bounds not element-aligned; pass "
+                             "granularity=itemsize to planner.plan()")
+        off_e, size_e = node.offset // isz, node.nbytes // isz
+        pred = preds.get(idx)
+        if pred is None:
+            chunk = jax.lax.slice(
+                xs[node.msg_idx],
+                (node.window, 0, off_e),
+                (node.window + 1, 1, off_e + size_e))
+        else:
+            chunk = values.pop(pred)
+        chunk = jax.lax.ppermute(chunk, axis_name, [node.link])
+        if idx in terminals:
+            outs[node.msg_idx] = jax.lax.dynamic_update_slice(
+                outs[node.msg_idx], chunk, (node.window, 0, off_e))
+        else:
+            values[idx] = chunk
+    return outs
+
+
 def multipath_send_local(x: jax.Array, plan: TransferPlan, *,
                          axis_name: str = AXIS,
                          itemsize: int | None = None) -> jax.Array:
@@ -113,22 +154,12 @@ def multipath_send_local(x: jax.Array, plan: TransferPlan, *,
     ``x`` is the local shard, shape ``(1, nelems)``; on the source device it
     holds the message, elsewhere contents are ignored. Returns an array of
     the same shape that holds the message on the destination device and
-    zeros elsewhere. One ``ppermute`` per chunk per hop = one copy node.
+    zeros elsewhere. One ``ppermute`` per graph copy node.
     """
     _check_executable(plan)
     itemsize = itemsize or x.dtype.itemsize
-    out = jnp.zeros_like(x)
-    for pa in plan.paths:
-        for off_b, size_b in pa.chunk_bounds():
-            if off_b % itemsize or size_b % itemsize:
-                raise ValueError("chunk bounds not element-aligned; pass "
-                                 "granularity=itemsize to planner.plan()")
-            off_e, size_e = off_b // itemsize, size_b // itemsize
-            chunk = jax.lax.slice(x, (0, off_e), (1, off_e + size_e))
-            for (a, b) in pa.route.directional_links():
-                chunk = jax.lax.ppermute(chunk, axis_name, [(a, b)])
-            out = jax.lax.dynamic_update_slice(out, chunk, (0, off_e))
-    return out
+    (out,) = emit_graph(lower(plan), (x[None],), axis_name, (itemsize,))
+    return out[0]
 
 
 class MultiPathTransfer:
@@ -156,6 +187,10 @@ class MultiPathTransfer:
         #: Number of compiled-program launches issued (one per transfer or
         #: per fused group — the paper's "one cudaGraphLaunch" count).
         self.dispatches = 0
+        #: Copy nodes / dependency edges across every graph this engine
+        #: compiled (cache misses only) — `session.stats()` surfaces them.
+        self.nodes_compiled = 0
+        self.edges_compiled = 0
 
     # -- planning -----------------------------------------------------------
     def plan_for(self, src: int, dst: int, nelems: int, dtype=jnp.float32,
@@ -192,45 +227,55 @@ class MultiPathTransfer:
         return group
 
     # -- program construction -----------------------------------------------
-    def _build_group_fn(self, plans: Sequence[TransferPlan], window: int):
-        """Fused SPMD program: ``window`` rounds of every plan, one trace."""
+    def _group_graph(self, plans: Sequence[TransferPlan],
+                     window: int) -> TransferGraph:
+        """Lower the fused group to its transfer graph (memoized)."""
         for p in plans:
             _check_executable(p)
+        return lower(TransferGroup(tuple(plans), self.topology.name),
+                     window)
+
+    def _build_group_fn(self, graph: TransferGraph,
+                        itemsizes: Sequence[int]):
+        """Fused SPMD program: the graph's copy nodes, one trace."""
         ax = self.axis_name
 
         def local_body(*xs):  # x_i local: (window, 1, nelems_i)
-            outs = []
-            for x, plan in zip(xs, plans):
-                rows = [multipath_send_local(x[w], plan, axis_name=ax)
-                        for w in range(window)]
-                outs.append(jnp.stack(rows))
-            return tuple(outs)
+            return tuple(emit_graph(graph, xs, ax, itemsizes))
 
-        specs = tuple(P(None, ax) for _ in plans)
+        specs = tuple(P(None, ax) for _ in itemsizes)
         return shard_map(local_body, mesh=self.mesh,
                          in_specs=specs, out_specs=specs, check_vma=False)
 
-    def _compile_group(self, key: GroupKey, plans: Sequence[TransferPlan],
+    def _compile_group(self, key: GroupKey, graph: TransferGraph,
                        shapes: Sequence[tuple[int, object]]) -> CompiledPlan:
         abstracts = tuple(
             jax.ShapeDtypeStruct((key.window, self.num_devices, nelems),
                                  dtype, sharding=self._sharding)
             for nelems, dtype in shapes)
-        num_nodes = sum(p.num_nodes for p in plans) * key.window
-        fn = self._build_group_fn(plans, key.window)
-        return compile_plan(key, fn, abstracts, num_nodes=num_nodes)
+        itemsizes = tuple(jnp.dtype(dtype).itemsize for _, dtype in shapes)
+        fn = self._build_group_fn(graph, itemsizes)
+        self.nodes_compiled += graph.num_nodes
+        self.edges_compiled += graph.num_edges
+        return compile_plan(key, fn, abstracts, num_nodes=graph.num_nodes)
+
+    def _group_key(self, graph: TransferGraph, plans: Sequence[TransferPlan],
+                   shapes: Sequence[tuple[int, object]],
+                   window: int) -> GroupKey:
+        entries = tuple(
+            (p.src, p.dst, nelems, str(jnp.dtype(dtype)))
+            for p, (nelems, dtype) in zip(plans, shapes))
+        return GroupKey(graph.digest(), entries, window, self.num_devices)
 
     def _launch_group(self, messages: Sequence[jax.Array],
                       plans: Sequence[TransferPlan], *,
                       window: int, block: bool) -> list[jax.Array]:
         """Compile (or fetch) the fused program and launch it ONCE."""
-        entries = tuple(
-            (p.src, p.dst, m.shape[0], str(m.dtype), plan_signature(p))
-            for m, p in zip(messages, plans))
-        key = GroupKey(entries, window)
+        graph = self._group_graph(plans, window)
         shapes = [(m.shape[0], m.dtype) for m in messages]
+        key = self._group_key(graph, plans, shapes, window)
         compiled = self.cache.get_or_build(
-            key, lambda: self._compile_group(key, plans, shapes))
+            key, lambda: self._compile_group(key, graph, shapes))
         xs = []
         for m, p in zip(messages, plans):
             x = jnp.zeros((window, self.num_devices, m.shape[0]), m.dtype)
@@ -271,9 +316,10 @@ class MultiPathTransfer:
         — all of them in ONE compiled launch.
 
         The set is planned jointly (contention-aware; see
-        :meth:`PathPlanner.plan_group`), fused into one SPMD program, and
-        cached under a :class:`GroupKey` carrying every plan's signature.
-        Returns the received messages, aligned with the inputs.
+        :meth:`PathPlanner.plan_group`), lowered to one transfer graph,
+        fused into one SPMD program, and cached under a :class:`GroupKey`
+        derived from the graph digest. Returns the received messages,
+        aligned with the inputs.
         """
         msgs = [jnp.asarray(m) for m in messages]
         if len(msgs) != len(pairs):
@@ -298,12 +344,11 @@ class MultiPathTransfer:
         """AOT handle for benchmarks: returns (executable, plan)."""
         plan = self.plan_for(src, dst, nelems, dtype, max_paths=max_paths,
                              num_chunks=num_chunks)
-        dtype = jnp.dtype(dtype)
-        key = GroupKey(((src, dst, nelems, str(dtype),
-                         plan_signature(plan)),), window)
+        graph = self._group_graph((plan,), window)
+        shapes = ((nelems, jnp.dtype(dtype)),)
+        key = self._group_key(graph, (plan,), shapes, window)
         compiled = self.cache.get_or_build(
-            key, lambda: self._compile_group(key, (plan,),
-                                             ((nelems, dtype),)))
+            key, lambda: self._compile_group(key, graph, shapes))
         return compiled, plan
 
     def compiled_for_group(self, specs: Sequence[tuple], *,
@@ -316,12 +361,10 @@ class MultiPathTransfer:
         group = self.plan_group_for(specs, max_paths=max_paths,
                                     num_chunks=num_chunks,
                                     exclusive=exclusive)
-        entries = tuple(
-            (p.src, p.dst, nelems, str(jnp.dtype(dtype)), plan_signature(p))
-            for (s, d, nelems, dtype), p in zip(specs, group.plans))
-        key = GroupKey(entries, window)
+        graph = self._group_graph(group.plans, window)
         shapes = [(nelems, jnp.dtype(dtype))
                   for (_, _, nelems, dtype) in specs]
+        key = self._group_key(graph, group.plans, shapes, window)
         compiled = self.cache.get_or_build(
-            key, lambda: self._compile_group(key, group.plans, shapes))
+            key, lambda: self._compile_group(key, graph, shapes))
         return compiled, group

@@ -1,0 +1,335 @@
+"""TransferGraph — the first-class copy-node DAG (the CUDA Graph analogue).
+
+The paper's core artifact is the CUDA Graph itself: explicit memcpy nodes
+with dependency edges, instantiated once and replayed. This module makes
+that graph a first-class IR for the repo: a single lowering pass
+(:func:`lower`) turns a :class:`~repro.comm.plan.TransferPlan` or a
+:class:`~repro.comm.plan.TransferGroup` into a :class:`TransferGraph` —
+one :class:`CopyNode` per chunk per hop per window round, plus explicit
+dependency edges — and every downstream layer consumes the same graph:
+
+* the executable engine (:mod:`repro.comm.engine`) walks nodes in
+  topological order emitting one ``ppermute`` per node,
+* the analytic model (:mod:`repro.core.pipelining`) evaluates wire time
+  as the critical path over the DAG and launch overhead from the node
+  count,
+* the §4.5 validators check disjoint byte cover, directional-link
+  exclusivity, and connected hop chains on nodes/edges,
+* compiled-program cache keys derive from the canonical
+  :meth:`TransferGraph.digest`.
+
+Because the model, the validator, and the executable are all views over
+ONE lowering, they can no longer silently disagree about what a plan
+means (the PR-2 mid-route-host bug was exactly such a divergence).
+
+Edge kinds:
+
+* ``"hop"`` — hop order within a chunk (hop *i+1* consumes hop *i*'s
+  value; the CUDA Graph dependency edge),
+* ``"window"`` — replay ordering between window rounds of the same chunk
+  (round *w+1* re-sends the chunk after round *w* completed).
+
+Per-link serialization between consecutive chunks of one path is *not*
+stored — it is derivable (:meth:`TransferGraph.serialization_edges`) and
+only the time model needs it; storing it would bloat digests without
+adding information.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import heapq
+from functools import cached_property, lru_cache
+
+from repro.comm.plan import TransferGroup, TransferPlan
+
+#: Edge kinds (see module docstring).
+HOP_EDGE = "hop"
+WINDOW_EDGE = "window"
+
+
+@dataclasses.dataclass(frozen=True)
+class CopyNode:
+    """One copy node: one chunk of one message crossing one link.
+
+    The CUDA-Graph memcpy-node analogue (paper Fig. 13/14). ``offset`` /
+    ``nbytes`` are the chunk's byte range *within its message* — constant
+    along the chunk's hop chain, so every node knows exactly which bytes
+    it moves.
+    """
+
+    flow: tuple[int, int]      # (src, dst) of the owning message
+    msg_idx: int               # message index within the group
+    path_idx: int              # horizontal split index within the message
+    chunk_idx: int             # vertical split index within the path
+    hop_idx: int               # position along the route's hop chain
+    window: int                # replay round (0-based)
+    link: tuple[int, int]      # directional link traversed
+    offset: int                # byte offset into the message
+    nbytes: int                # chunk size in bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class DepEdge:
+    """A dependency edge between node indices (``src`` before ``dst``)."""
+
+    src: int
+    dst: int
+    kind: str  # HOP_EDGE | WINDOW_EDGE
+
+
+def canonical_digest(payload: object) -> str:
+    """Stable hex digest of a canonical (repr-able) payload.
+
+    Used by :meth:`TransferGraph.digest` and by non-P2P cache keys (the
+    collective keys) so every compiled-program key in the plan cache is
+    derived the same way.
+    """
+    return hashlib.sha256(repr(payload).encode()).hexdigest()[:32]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferGraph:
+    """The copy-node DAG for one message or one fused transfer group."""
+
+    nodes: tuple[CopyNode, ...]
+    edges: tuple[DepEdge, ...]
+    window: int
+    num_messages: int
+    topology_name: str
+
+    # -- basic shape --------------------------------------------------------
+    @property
+    def num_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.edges)
+
+    def flows(self) -> tuple[tuple[int, int], ...]:
+        """Per-message (src, dst), aligned with ``msg_idx``."""
+        seen: dict[int, tuple[int, int]] = {}
+        for n in self.nodes:
+            seen.setdefault(n.msg_idx, n.flow)
+        return tuple(seen[i] for i in sorted(seen))
+
+    # -- dataflow structure -------------------------------------------------
+    @cached_property
+    def hop_predecessor(self) -> dict[int, int]:
+        """Node index → its hop-chain predecessor (data dependency)."""
+        return {e.dst: e.src for e in self.edges if e.kind == HOP_EDGE}
+
+    @cached_property
+    def terminal_nodes(self) -> frozenset[int]:
+        """Nodes with no outgoing hop edge — each chunk's landing copy."""
+        non_terminal = {e.src for e in self.edges if e.kind == HOP_EDGE}
+        return frozenset(range(self.num_nodes)) - non_terminal
+
+    def topological_order(self) -> list[int]:
+        """Kahn's algorithm over the stored edges, lowest index first.
+
+        The lowering emits nodes in a valid topological order already;
+        running Kahn's keeps that a checked property rather than a
+        convention (a cycle raises ``ValueError``).
+        """
+        succs: dict[int, list[int]] = {}
+        indeg = [0] * self.num_nodes
+        for e in self.edges:
+            succs.setdefault(e.src, []).append(e.dst)
+            indeg[e.dst] += 1
+        ready = [i for i, d in enumerate(indeg) if d == 0]
+        heapq.heapify(ready)
+        order: list[int] = []
+        while ready:
+            i = heapq.heappop(ready)
+            order.append(i)
+            for j in succs.get(i, ()):
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    heapq.heappush(ready, j)
+        if len(order) != self.num_nodes:
+            raise ValueError("dependency cycle in transfer graph")
+        return order
+
+    def serialization_edges(self) -> list[tuple[int, int]]:
+        """Implicit per-link serialization edges (not stored, derived).
+
+        Consecutive chunks of one (message, path, window) traverse the
+        same directional link at the same hop position and serialize on
+        it; the critical-path evaluation in
+        :func:`repro.core.pipelining.wire_time_s` adds these to the hop
+        and window edges.
+        """
+        by_slot: dict[tuple[int, int, int, int], list[tuple[int, int]]] = {}
+        for i, n in enumerate(self.nodes):
+            by_slot.setdefault(
+                (n.msg_idx, n.path_idx, n.window, n.hop_idx),
+                []).append((n.chunk_idx, i))
+        out: list[tuple[int, int]] = []
+        for slot in by_slot.values():
+            slot.sort()
+            out.extend((a, b) for (_, a), (_, b) in zip(slot, slot[1:]))
+        return out
+
+    def critical_path_nodes(self) -> int:
+        """Longest chain length (in nodes) over hop + serialization +
+        window edges — the depth of the DAG the scheduler must respect."""
+        depth = [1] * self.num_nodes
+        succs: dict[int, list[int]] = {}
+        for e in self.edges:
+            succs.setdefault(e.src, []).append(e.dst)
+        for a, b in self.serialization_edges():
+            succs.setdefault(a, []).append(b)
+        for i in reversed(self.topological_order()):
+            for j in succs.get(i, ()):
+                depth[i] = max(depth[i], 1 + depth[j])
+        return max(depth, default=0)
+
+    # -- identity -----------------------------------------------------------
+    def digest(self) -> str:
+        """Canonical content hash — THE cache-key ingredient.
+
+        Two lowerings digest equal iff they have identical nodes, edges,
+        and window count, regardless of how the source plan objects were
+        assembled; compiled-program keys (:class:`repro.comm.engine.\
+GroupKey`) are derived from this instead of hand-assembled plan
+        signatures.
+        """
+        return canonical_digest((
+            tuple(dataclasses.astuple(n) for n in self.nodes),
+            tuple(dataclasses.astuple(e) for e in self.edges),
+            self.window, self.num_messages))
+
+    # -- invariants (§4.5, checked on nodes/edges) --------------------------
+    def validate(self, nbytes_per_message: dict[int, int] | None = None,
+                 *, cross_flow_exclusive: bool = True) -> None:
+        """Assert the §4.5 integrity invariants on the graph itself.
+
+        1. **Disjoint byte cover** — per message, terminal-node chunk
+           ranges are disjoint and (when ``nbytes_per_message`` is given)
+           exactly cover ``[0, nbytes)``.
+        2. **Directional-link exclusivity** — within one message no two
+           paths share a link; across messages no link carries two
+           *distinct* flows (same-flow messages legitimately share their
+           flow's routes). ``cross_flow_exclusive=False`` skips the
+           cross-message half (the planner's shared fallback trades it
+           away deliberately).
+        3. **Connected hop chains** — every chunk's links chain
+           ``flow.src → ... → flow.dst`` in hop order.
+
+        Raises ``ValueError`` on any breach.
+        """
+        # (2) link exclusivity, on nodes
+        link_paths: dict[tuple[int, tuple[int, int]], int] = {}
+        link_flow: dict[tuple[int, int], tuple[int, int]] = {}
+        for n in self.nodes:
+            prev_path = link_paths.setdefault((n.msg_idx, n.link),
+                                              n.path_idx)
+            if prev_path != n.path_idx:
+                raise ValueError(
+                    f"directional link {n.link} shared by paths")
+            if cross_flow_exclusive:
+                prev_flow = link_flow.setdefault(n.link, n.flow)
+                if prev_flow != n.flow:
+                    raise ValueError(
+                        f"directional link {n.link} shared across flows "
+                        f"{prev_flow} and {n.flow} (group-level §4.5 "
+                        f"exclusivity breach)")
+        # (3) connected hop chains, on hop edges
+        chains: dict[tuple[int, int, int, int], list[CopyNode]] = {}
+        for n in self.nodes:
+            chains.setdefault(
+                (n.msg_idx, n.path_idx, n.chunk_idx, n.window),
+                []).append(n)
+        for chain in chains.values():
+            chain.sort(key=lambda n: n.hop_idx)
+            links = [n.link for n in chain]
+            flow = chain[0].flow
+            if links[0][0] != flow[0] or links[-1][1] != flow[1]:
+                raise ValueError(f"route endpoints wrong: {links}")
+            for (a, b), (c, d) in zip(links, links[1:]):
+                if b != c:
+                    raise ValueError(f"disconnected hops {links}")
+        # (1) disjoint cover, on terminal nodes of window 0 (messages that
+        # lowered to no nodes still get their coverage checked)
+        per_msg: dict[int, list[tuple[int, int]]] = {
+            m: [] for m in range(self.num_messages)}
+        for i in self.terminal_nodes:
+            n = self.nodes[i]
+            if n.window:
+                continue
+            per_msg.setdefault(n.msg_idx, []).append((n.offset, n.nbytes))
+        for msg_idx, intervals in per_msg.items():
+            intervals.sort()
+            pos = 0
+            for off, size in intervals:
+                if off != pos:
+                    raise ValueError(
+                        f"gap/overlap at byte {pos} (chunk at {off})")
+                if size <= 0:
+                    raise ValueError("empty chunk")
+                pos = off + size
+            if nbytes_per_message is not None:
+                want = nbytes_per_message[msg_idx]
+                if pos != want:
+                    raise ValueError(
+                        f"coverage ends at {pos}, message is {want}")
+
+
+@lru_cache(maxsize=256)
+def lower(obj: TransferPlan | TransferGroup, window: int = 1
+          ) -> TransferGraph:
+    """THE lowering pass: plan/group → copy-node DAG.
+
+    One :class:`CopyNode` per chunk per hop per window round, emitted in
+    a topological order (window-major, then message, path, chunk, hop).
+    Edges: hop order within each chunk (``"hop"``), and replay ordering
+    between a chunk's last hop in round *w* and its first hop in round
+    *w+1* (``"window"``). So for any lowering::
+
+        num_nodes == window * Σ_paths chunks·hops
+        num_edges == window * Σ_chunks (hops−1) + (window−1) · Σ chunks
+
+    Plans and groups are frozen/hashable, so lowerings are memoized —
+    the engine, the model, and the validator all get the *same* graph
+    object for the same source.
+    """
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    if isinstance(obj, TransferPlan):
+        plans: tuple[TransferPlan, ...] = (obj,)
+        topo_name = obj.topology_name
+        num_messages = 1
+    else:
+        plans = tuple(obj.plans)
+        topo_name = obj.topology_name
+        num_messages = len(plans)
+
+    nodes: list[CopyNode] = []
+    edges: list[DepEdge] = []
+    # (msg, path, chunk) → (first-hop idx, last-hop idx) of previous window
+    prev_round: dict[tuple[int, int, int], tuple[int, int]] = {}
+    for w in range(window):
+        for m_idx, plan in enumerate(plans):
+            flow = (plan.src, plan.dst)
+            for p_idx, pa in enumerate(plan.paths):
+                links = pa.route.directional_links()
+                for c_idx, (off, size) in enumerate(pa.chunk_bounds()):
+                    first = len(nodes)
+                    for h_idx, link in enumerate(links):
+                        idx = len(nodes)
+                        nodes.append(CopyNode(
+                            flow, m_idx, p_idx, c_idx, h_idx, w,
+                            link, off, size))
+                        if h_idx:
+                            edges.append(DepEdge(idx - 1, idx, HOP_EDGE))
+                    last = len(nodes) - 1
+                    chunk_key = (m_idx, p_idx, c_idx)
+                    if chunk_key in prev_round:
+                        edges.append(DepEdge(prev_round[chunk_key][1],
+                                             first, WINDOW_EDGE))
+                    prev_round[chunk_key] = (first, last)
+    return TransferGraph(tuple(nodes), tuple(edges), window,
+                         num_messages, topo_name)

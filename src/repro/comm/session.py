@@ -41,6 +41,7 @@ from repro.comm.cache import CompiledPlan, TransferPlanCache, compile_plan
 from repro.compat import shard_map
 from repro.comm.config import CommConfig
 from repro.comm.engine import MultiPathTransfer
+from repro.comm.graph import canonical_digest, lower
 from repro.comm.plan import TransferPlan
 from repro.comm.planner import PathPlanner
 from repro.comm.policy import PathPolicy, make_policy
@@ -51,16 +52,24 @@ from repro.core.topology import Topology
 class CollectiveKey:
     """Plan-cache key for a compiled collective launch.
 
-    ``num_devices`` keys the mesh size: a cache shared across sessions on
-    different-sized meshes must not serve one mesh's executable to the
-    other (P2P keys get this for free via the plan signature).
+    The digest keys the mesh size along with op/shape/dtype/axis: a cache
+    shared across sessions on different-sized meshes must not serve one
+    mesh's executable to the other (P2P keys carry
+    ``GroupKey.num_devices`` for the same reason — the transfer-graph
+    digest covers routes, not the device axis).
+    Like :class:`~repro.comm.engine.GroupKey`, the key's identity is a
+    canonical digest (:func:`repro.comm.graph.canonical_digest`) so every
+    entry in the shared plan cache is derived the same way.
     """
 
     op: str
-    shape: tuple
-    dtype: str
-    axis: str
-    num_devices: int
+    digest: str
+
+    @classmethod
+    def for_collective(cls, op: str, shape: tuple, dtype: str, axis: str,
+                       num_devices: int) -> "CollectiveKey":
+        return cls(op, canonical_digest(
+            ("collective", op, tuple(shape), dtype, axis, num_devices)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,8 +265,9 @@ class CommSession:
                         in_spec: P, out_spec: P,
                         num_nodes: int) -> jax.Array:
         x = jnp.asarray(x)
-        key = CollectiveKey(op, tuple(x.shape), str(x.dtype), self.axis_name,
-                            self.mesh.devices.size)
+        key = CollectiveKey.for_collective(
+            op, tuple(x.shape), str(x.dtype), self.axis_name,
+            self.mesh.devices.size)
         in_sharding = NamedSharding(self.mesh, in_spec)
 
         def build() -> CompiledPlan:
@@ -335,15 +345,62 @@ class CommSession:
             P(*([None] * nd)), P(*([None] * nd)), num_nodes=4 * (n - 1))
 
     # -- introspection ------------------------------------------------------
+    def describe(self, src: int, dst: int, nbytes: int, *,
+                 window: int | None = None, **plan_kwargs) -> dict:
+        """Plan one message and report its transfer graph + model costs.
+
+        Pure planning — no mesh, no compilation — so it works on
+        planning-only sessions and is what the dry-run reporter and the
+        benchmarks consume. Returns the graph shape (copy nodes, dependency
+        edges, critical-path depth, canonical digest) and the analytic
+        model's costs, all derived from the SAME lowering the engine would
+        execute.
+        """
+        from repro.core import pipelining as pl
+
+        window = self.config.window if window is None else window
+        plan = self.plan(src, dst, nbytes, **plan_kwargs)
+        graph = lower(plan, window)
+        wire = pl.wire_time_s(plan, self.topology)
+        return {
+            "src": src, "dst": dst, "nbytes": nbytes, "window": window,
+            "topology": self.topology.name,
+            "num_paths": plan.num_paths,
+            "graph": {
+                "digest": graph.digest(),
+                "nodes": graph.num_nodes,
+                "edges": graph.num_edges,
+                "critical_path_nodes": graph.critical_path_nodes(),
+            },
+            "model": {
+                "wire_time_s": wire,
+                "time_s": pl.estimate_transfer_time_s(plan, self.topology),
+                "time_first_iter_s": pl.estimate_transfer_time_s(
+                    plan, self.topology, first_iteration=True),
+                "launch_overhead_ns": pl.launch_overhead_ns(
+                    plan, compiled_plan=True),
+                "launch_overhead_nograph_ns": pl.launch_overhead_ns(
+                    plan, compiled_plan=False),
+                "effective_gbps": pl.effective_bandwidth_gbps(
+                    plan, self.topology),
+            },
+        }
+
     def stats(self) -> dict:
         """One-stop accounting: cache hits/misses, launches, policy,
         topology. ``dispatches`` counts compiled-program launches — a fused
         group (``exchange``, ``send_pytree``, ``bidirectional``) is ONE
-        dispatch however many messages it carries."""
+        dispatch however many messages it carries. ``graph`` totals the
+        copy nodes / dependency edges of every transfer graph this session
+        compiled (cache misses only)."""
+        eng = self._engine
         return {
             "cache": self.cache.stats(),
-            "dispatches": (self._engine.dispatches
-                           if self._engine is not None else 0),
+            "dispatches": eng.dispatches if eng is not None else 0,
+            "graph": {
+                "nodes_compiled": eng.nodes_compiled if eng else 0,
+                "edges_compiled": eng.edges_compiled if eng else 0,
+            },
             "policy": self.policy.name,
             "topology": self.topology.name,
             "num_devices": self.topology.num_devices,

@@ -22,7 +22,9 @@ Layering (mirrors the paper's Fig. 3):
 * :mod:`repro.core.halo`       — Jacobi halo exchange application layer
 """
 
+import dataclasses
 import importlib
+import warnings
 
 from repro.core.topology import HOST, Link, Route, Topology  # noqa: F401
 from repro.core.pipelining import (  # noqa: F401
@@ -45,10 +47,24 @@ _COMM_EXPORTS = {
     "TransferPlanCache": "repro.comm.cache",
     "compile_plan": "repro.comm.cache",
     "MultiPathTransfer": "repro.comm.engine",
-    "TransferKey": "repro.comm.engine",
     "multipath_send_local": "repro.comm.engine",
     "plan_signature": "repro.comm.engine",
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class _LegacyTransferKey:
+    """Pre-group single-message cache key. DEPRECATED and unused: compiled
+    programs are keyed by :class:`repro.comm.engine.GroupKey`, whose
+    identity is the lowered transfer graph's canonical digest."""
+
+    src: int
+    dst: int
+    nelems: int
+    dtype: str
+    plan_sig: tuple
+    window: int = 1
+    bidirectional: bool = False
 
 __all__ = [  # noqa: F822 - lazy names resolved via __getattr__
     "HOST", "Link", "Route", "Topology",
@@ -56,11 +72,20 @@ __all__ = [  # noqa: F822 - lazy names resolved via __getattr__
     "estimate_group_time_s", "estimate_transfer_time_s",
     "group_launch_overhead_ns", "launch_overhead_ns", "validate_group",
     "validate_plan", "windowed_bandwidth_gbps", "wire_time_s",
+    "TransferKey",
     *sorted(_COMM_EXPORTS),
 ]
 
 
 def __getattr__(name):
+    if name == "TransferKey":
+        # Deprecation alias only — nothing in the repo constructs one since
+        # the transfer-group rework; kept so legacy imports keep resolving.
+        warnings.warn(
+            "repro.core.TransferKey is deprecated and unused; compiled "
+            "programs are keyed by repro.comm.engine.GroupKey (graph "
+            "digest)", DeprecationWarning, stacklevel=2)
+        return _LegacyTransferKey
     target = _COMM_EXPORTS.get(name)
     if target is None:
         raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

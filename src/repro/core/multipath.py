@@ -8,8 +8,15 @@ Construct a :class:`repro.comm.CommSession` and use ``session.send`` /
 import warnings
 
 from repro.comm.engine import (  # noqa: F401
-    AXIS, MultiPathTransfer, TransferKey, _check_executable,
+    AXIS, MultiPathTransfer, _check_executable,
     multipath_send_local, plan_signature)
+
+
+def __getattr__(name):  # legacy TransferKey lives on repro.core only now
+    if name == "TransferKey":
+        import repro.core
+        return repro.core.TransferKey
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 warnings.warn(
     "repro.core.multipath is deprecated; use repro.comm (CommSession, "

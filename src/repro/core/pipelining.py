@@ -9,34 +9,50 @@ The engine performs the paper's two splits (§4.3):
   path's hops in a pipelined fashion (hop-2 of chunk *i* overlaps hop-1 of
   chunk *i+1*).
 
-Because this repo's execution substrate is XLA (no wall-clock TPU), the
-module also provides the calibrated analytic time model used by the offline
-tuner and the bandwidth benchmarks. The model captures exactly the effects
-the paper measures:
+As of the transfer-graph IR (DESIGN.md §2.1), everything in this module is
+a *view over* or an *evaluation of* the :class:`~repro.comm.graph.\
+TransferGraph` produced by the single lowering pass
+:func:`repro.comm.graph.lower` — the same copy-node DAG the executable
+engine walks:
 
-* pipelined staged hops (fill + steady-state),
-* per-directional-link exclusivity (§4.5) and host-node capacity contention
-  (reproduces the paper's "host path hurts BIBW" finding),
-* per-copy-node launch overhead vs amortized compiled-plan (CUDA Graph)
-  launch overhead, including the first-iteration construction costs
-  (paper Fig. 13/14).
+* :func:`build_schedule` flattens graph nodes into dispatch-ordered
+  :class:`ChunkTask` views,
+* :func:`validate_plan` / :func:`validate_group` are the §4.5 invariants
+  checked on graph nodes/edges (:meth:`TransferGraph.validate`),
+* :func:`wire_time_s` / :func:`estimate_transfer_time_s` /
+  :func:`estimate_group_time_s` evaluate the **critical path** of the DAG
+  (hop edges + per-link serialization edges), and the launch-overhead
+  model prices per-node launch cost × graph node count.
+
+Because this repo's execution substrate is XLA (no wall-clock TPU), the
+time model is calibrated-analytic; it captures exactly the effects the
+paper measures: pipelined staged hops (fill + steady-state),
+per-directional-link exclusivity (§4.5) and host-node capacity contention
+(the paper's "host path hurts BIBW" finding), and per-copy-node launch
+overhead vs amortized compiled-plan (CUDA Graph) launch overhead including
+first-iteration construction costs (paper Fig. 13/14).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import TYPE_CHECKING, Iterable, Sequence
+from typing import TYPE_CHECKING, Sequence
 
 from repro.core.topology import HOST, Topology
 
 if TYPE_CHECKING:  # pragma: no cover - typing only (avoids an import cycle)
+    from repro.comm.graph import TransferGraph
     from repro.comm.plan import TransferGroup, TransferPlan
 
 
 @dataclasses.dataclass(frozen=True)
 class ChunkTask:
-    """One chunk flowing along one route — ``num_hops`` copy nodes."""
+    """One chunk flowing along one route — ``num_hops`` copy nodes.
+
+    A thin dispatch-ordered *view* over the transfer graph: ``hops`` is
+    the chunk's copy-node chain collapsed into its link sequence.
+    """
 
     path_idx: int
     chunk_idx: int
@@ -55,23 +71,46 @@ GRAPH_INSTANTIATE_PER_NODE_NS = 85_000
 SYNC_NS_PER_PATH = 2_000            # event record + stream-wait per path
 
 
+def _lower(obj, window: int = 1) -> "TransferGraph":
+    # Local import: repro.core must stay importable without repro.comm
+    # (the comm package itself imports core.topology).
+    from repro.comm.graph import lower
+    return lower(obj, window)
+
+
+def _as_group(group: "TransferGroup | Sequence[TransferPlan]"
+              ) -> "TransferGroup":
+    from repro.comm.plan import TransferGroup
+    if isinstance(group, TransferGroup):
+        return group
+    plans = tuple(group)
+    name = plans[0].topology_name if plans else ""
+    return TransferGroup(plans, name)
+
+
 def build_schedule(plan: TransferPlan) -> list[ChunkTask]:
-    """Flatten a plan into chunk tasks, round-robin across paths.
+    """Flatten the plan's transfer graph into chunk tasks, round-robin
+    across paths.
 
     The paper distributes chunks across paths one-by-one (Alg. 1 note); the
     round-robin order is the dispatch order — data dependencies (hop order
-    within a chunk, §4.5) are carried in each task's ``hops``.
+    within a chunk, §4.5) are carried in each task's ``hops``, which is the
+    chunk's copy-node chain from the graph.
     """
-    per_path: list[list[ChunkTask]] = []
-    for p_idx, pa in enumerate(plan.paths):
-        tasks = [
-            ChunkTask(p_idx, c_idx, off, size, pa.route.directional_links())
-            for c_idx, (off, size) in enumerate(pa.chunk_bounds())
-        ]
-        per_path.append(tasks)
+    graph = _lower(plan)
+    chains: dict[tuple[int, int], list] = {}
+    for node in graph.nodes:
+        chains.setdefault((node.path_idx, node.chunk_idx), []).append(node)
+    per_path: dict[int, list[ChunkTask]] = defaultdict(list)
+    for (p_idx, c_idx) in sorted(chains):
+        nodes = sorted(chains[(p_idx, c_idx)], key=lambda n: n.hop_idx)
+        per_path[p_idx].append(ChunkTask(
+            p_idx, c_idx, nodes[0].offset, nodes[0].nbytes,
+            tuple(n.link for n in nodes)))
     schedule: list[ChunkTask] = []
-    for wave in range(max((len(t) for t in per_path), default=0)):
-        for tasks in per_path:
+    paths = [per_path[p] for p in sorted(per_path)]
+    for wave in range(max((len(t) for t in paths), default=0)):
+        for tasks in paths:
             if wave < len(tasks):
                 schedule.append(tasks[wave])
     return schedule
@@ -80,34 +119,29 @@ def build_schedule(plan: TransferPlan) -> list[ChunkTask]:
 def validate_plan(plan: TransferPlan) -> None:
     """Assert the §4.5 integrity invariants. Raises ``ValueError`` on breach.
 
+    Checked on the plan's transfer graph (:meth:`TransferGraph.validate`):
+
     1. chunk byte ranges are disjoint and exactly cover ``[0, nbytes)``,
     2. no two paths share a directional link (contention avoidance),
     3. every staged route's hops are connected (src → via → dst).
     """
-    intervals: list[tuple[int, int]] = []
-    seen_links: set[tuple[int, int]] = set()
-    for pa in plan.paths:
-        links = pa.route.directional_links()
-        for link in links:
-            if link in seen_links:
-                raise ValueError(f"directional link {link} shared by paths")
-            seen_links.add(link)
-        if links[0][0] != plan.src or links[-1][1] != plan.dst:
-            raise ValueError(f"route endpoints wrong: {links}")
-        for (a, b), (c, d) in zip(links, links[1:]):
-            if b != c:
-                raise ValueError(f"disconnected hops {links}")
-        intervals.extend(pa.chunk_bounds())
-    intervals.sort()
-    pos = 0
-    for off, size in intervals:
-        if off != pos:
-            raise ValueError(f"gap/overlap at byte {pos} (chunk at {off})")
-        if size <= 0:
-            raise ValueError("empty chunk")
-        pos = off + size
-    if pos != plan.nbytes:
-        raise ValueError(f"coverage ends at {pos}, message is {plan.nbytes}")
+    _lower(plan).validate({0: plan.nbytes})
+
+
+def validate_group(group: "TransferGroup | Sequence[TransferPlan]") -> None:
+    """Assert the group-level §4.5 invariants. Raises ``ValueError``.
+
+    Checked on the fused group's transfer graph:
+
+    1. every message individually satisfies :func:`validate_plan`
+       (disjoint cover of its own message, within-plan link exclusivity),
+    2. **cross-flow link exclusivity** — no directional link is used by
+       plans of two *distinct* flows (src, dst). Plans of the same flow
+       (e.g. the leaves of one pytree migration) legitimately share that
+       flow's routes and are exempt.
+    """
+    g = _as_group(group)
+    _lower(g).validate({i: p.nbytes for i, p in enumerate(g.plans)})
 
 
 def _launch_overhead_from_counts(num_nodes: int, num_paths: int, *,
@@ -125,10 +159,11 @@ def _launch_overhead_from_counts(num_nodes: int, num_paths: int, *,
 
 def launch_overhead_ns(plan: TransferPlan, *, compiled_plan: bool,
                        first_iteration: bool = False) -> float:
-    """CPU-side overhead for dispatching the plan once (paper §5.5)."""
+    """CPU-side overhead for dispatching the plan once (paper §5.5):
+    per-node launch cost × graph node count."""
     return _launch_overhead_from_counts(
-        plan.num_nodes, len(plan.paths), compiled_plan=compiled_plan,
-        first_iteration=first_iteration)
+        _lower(plan).num_nodes, len(plan.paths),
+        compiled_plan=compiled_plan, first_iteration=first_iteration)
 
 
 def group_launch_overhead_ns(plans: Sequence[TransferPlan], *,
@@ -139,13 +174,13 @@ def group_launch_overhead_ns(plans: Sequence[TransferPlan], *,
 
     ``fused=True`` models the group as ONE graph launch (the fused SPMD
     program the engine compiles): a single base launch cost amortized over
-    the total node count, and one instantiation on the first iteration.
-    ``fused=False`` models the legacy dispatch loop — one launch (and one
-    first-iteration instantiation) per message.
+    the fused graph's node count, and one instantiation on the first
+    iteration. ``fused=False`` models the legacy dispatch loop — one
+    launch (and one first-iteration instantiation) per message.
     """
     if fused:
         return _launch_overhead_from_counts(
-            sum(p.num_nodes for p in plans),
+            _lower(_as_group(plans)).num_nodes,
             sum(len(p.paths) for p in plans),
             compiled_plan=compiled_plan, first_iteration=first_iteration)
     return sum(launch_overhead_ns(p, compiled_plan=compiled_plan,
@@ -153,30 +188,87 @@ def group_launch_overhead_ns(plans: Sequence[TransferPlan], *,
                for p in plans)
 
 
-def _link_times_s(plan: TransferPlan, topo: Topology,
-                  contention: dict[tuple[int, int], int],
-                  host_flows: int) -> list[list[float]]:
-    """Per-path list of per-hop chunk-times (seconds, steady-state chunk)."""
-    out = []
-    for pa in plan.paths:
-        nchunks = max(1, pa.num_chunks)
-        chunk_bytes = pa.nbytes / nchunks
+# -- critical-path evaluation over the transfer graph ------------------------
+
+def _contention(plans: Sequence[TransferPlan]
+                ) -> tuple[dict[tuple[int, int], int], int]:
+    """Directional-link use counts + host-staged flow count across plans."""
+    counts: dict[tuple[int, int], int] = defaultdict(int)
+    host_flows = 0
+    for p in plans:
+        for pa in p.paths:
+            for link in pa.route.directional_links():
+                counts[link] += 1
+            if pa.route.via == HOST:
+                host_flows += 1
+    return counts, host_flows
+
+
+def _bandwidth_map(plans: Sequence[TransferPlan]
+                   ) -> dict[tuple[int, int], float]:
+    """Directional link → GB/s, from the links embedded in the plans."""
+    bw: dict[tuple[int, int], float] = {}
+    for p in plans:
+        for pa in p.paths:
+            for link in pa.route.hops:
+                bw[(link.src, link.dst)] = link.bandwidth_gbps
+    return bw
+
+
+def _graph_message_times_s(graph: "TransferGraph",
+                           bw_gbps: dict[tuple[int, int], float],
+                           contention: dict[tuple[int, int], int],
+                           host_flows: int) -> dict[int, float]:
+    """Per-message critical-path wire time over the copy-node DAG.
+
+    The relevant DAG per (message, path) is the chunks × hops grid: hop
+    edges within each chunk plus the per-link serialization edges between
+    consecutive chunks (:meth:`TransferGraph.serialization_edges`). Its
+    longest weighted path runs along the bottleneck link, which for the
+    uniform steady-state chunk weight the model prices reduces to the
+    closed form ``fill + (n_chunks − 1) · max(hop_times)`` — evaluated
+    here per path directly from the graph's nodes/edges structure.
+
+    Node weights: steady-state chunk bytes over the link's contended
+    bandwidth. A directional link shared by several concurrent paths is
+    time-shared; flows staging through the host additionally split the
+    host's aggregate copy bandwidth (paper §5.3 obs. 6).
+    """
+    # per (msg, path): hop link sequence + chunk count + total bytes,
+    # read off window-0 nodes (windows replay the identical round).
+    hops: dict[tuple[int, int], dict[int, tuple[int, int]]] = {}
+    totals: dict[tuple[int, int], int] = defaultdict(int)
+    chunks: dict[tuple[int, int], int] = defaultdict(int)
+    for node in graph.nodes:
+        if node.window:
+            continue
+        key = (node.msg_idx, node.path_idx)
+        hops.setdefault(key, {})[node.hop_idx] = node.link
+        if node.hop_idx == 0:
+            totals[key] += node.nbytes
+            chunks[key] += 1
+    times: dict[int, float] = {m: 0.0 for m in range(graph.num_messages)}
+    for key, link_by_hop in hops.items():
+        n = max(1, chunks[key])
+        chunk_bytes = totals[key] / n
         hop_times = []
-        for link in pa.route.hops:
-            bw = link.bandwidth_gbps * 1e9
-            share = max(1, contention.get((link.src, link.dst), 1))
-            # Host-node capacity: concurrent flows staging through the host
-            # split its aggregate copy bandwidth (paper §5.3 obs. 6).
-            if HOST in (link.src, link.dst) and host_flows > 1:
+        for h in sorted(link_by_hop):
+            link = link_by_hop[h]
+            bw = bw_gbps[link] * 1e9
+            share = max(1, contention.get(link, 1))
+            if HOST in link and host_flows > 1:
                 share = max(share, host_flows)
             hop_times.append(chunk_bytes / (bw / share))
-        out.append(hop_times)
-    return out
+        fill = sum(hop_times)                 # first chunk: all hop edges
+        steady = (n - 1) * max(hop_times)     # serialization on bottleneck
+        times[key[0]] = max(times[key[0]], fill + steady)
+    return times
 
 
 def wire_time_s(plan: TransferPlan, topo: Topology, *,
                 concurrent_plans: Sequence[TransferPlan] = ()) -> float:
-    """Pure wire time (no launch overhead) for one message.
+    """Pure wire time (no launch overhead) for one message: the critical
+    path of its transfer graph.
 
     ``concurrent_plans`` are other transfers in flight at the same time
     (e.g. the reverse direction of a bidirectional test, or the other
@@ -184,23 +276,11 @@ def wire_time_s(plan: TransferPlan, topo: Topology, *,
     ``plan`` is time-shared, and host-staged flows contend on host
     capacity.
     """
-    contention: dict[tuple[int, int], int] = defaultdict(lambda: 0)
-    host_flows = 0
-    for p in (plan, *concurrent_plans):
-        for pa in p.paths:
-            for link in pa.route.directional_links():
-                contention[link] += 1
-            if pa.route.via == HOST:
-                host_flows += 1
-
-    per_path = _link_times_s(plan, topo, dict(contention), host_flows)
-    path_times = []
-    for pa, hop_times in zip(plan.paths, per_path):
-        n = max(1, pa.num_chunks)
-        fill = sum(hop_times)                 # first chunk traverses all hops
-        steady = (n - 1) * max(hop_times)     # pipeline bottleneck stage
-        path_times.append(fill + steady)
-    return max(path_times) if path_times else 0.0
+    all_plans = (plan, *concurrent_plans)
+    contention, host_flows = _contention(all_plans)
+    times = _graph_message_times_s(_lower(plan), _bandwidth_map(all_plans),
+                                   contention, host_flows)
+    return times[0]
 
 
 def estimate_transfer_time_s(
@@ -218,44 +298,19 @@ def estimate_transfer_time_s(
                            first_iteration=first_iteration) / 1e9)
 
 
-def _group_plans(group) -> tuple:
-    plans = getattr(group, "plans", group)
-    return tuple(plans)
-
-
-def validate_group(group: "TransferGroup | Sequence[TransferPlan]") -> None:
-    """Assert the group-level §4.5 invariants. Raises ``ValueError``.
-
-    1. every plan individually satisfies :func:`validate_plan` (disjoint
-       cover of its own message, within-plan link exclusivity, ...),
-    2. **cross-flow link exclusivity** — no directional link is used by
-       plans of two *distinct* flows (src, dst). Plans of the same flow
-       (e.g. the leaves of one pytree migration) legitimately share that
-       flow's routes and are exempt.
-    """
-    owner: dict[tuple[int, int], tuple[int, int]] = {}
-    for plan in _group_plans(group):
-        validate_plan(plan)
-        flow = (plan.src, plan.dst)
-        for link in plan.directional_links():
-            prev = owner.setdefault(link, flow)
-            if prev != flow:
-                raise ValueError(
-                    f"directional link {link} shared across flows {prev} "
-                    f"and {flow} (group-level §4.5 exclusivity breach)")
-
-
 def estimate_group_time_s(
         group: "TransferGroup | Sequence[TransferPlan]", topo: Topology, *,
         compiled_plan: bool = True,
         first_iteration: bool = False,
         fused: bool = True) -> float:
-    """Analytic makespan of a set of concurrent transfers.
+    """Analytic makespan of a set of concurrent transfers: critical-path
+    evaluation over the fused group's transfer graph.
 
     ``fused=True`` is the transfer-group execution model: one compiled
     launch covering every message, so the makespan is a single (fused)
-    launch overhead plus the slowest message's wire time — each message
-    priced with every other group member as concurrent traffic.
+    launch overhead plus the DAG's critical path — the slowest message's
+    wire time, each message priced with every other group member as
+    concurrent traffic.
 
     ``fused=False`` is the legacy dispatch loop (one compiled program per
     message, launched back-to-back without blocking): the CPU serializes
@@ -263,15 +318,14 @@ def estimate_group_time_s(
     have issued, while the wires still contend. This is the baseline
     `exchange()` is measured against.
     """
-    plans = _group_plans(group)
+    g = _as_group(group)
+    plans = g.plans
     if not plans:
         return 0.0
-    others = [
-        [q for j, q in enumerate(plans) if j != i]
-        for i in range(len(plans))
-    ]
-    wires = [wire_time_s(p, topo, concurrent_plans=o)
-             for p, o in zip(plans, others)]
+    contention, host_flows = _contention(plans)
+    times = _graph_message_times_s(_lower(g), _bandwidth_map(plans),
+                                   contention, host_flows)
+    wires = [times[i] for i in range(len(plans))]
     if fused:
         return max(wires) + group_launch_overhead_ns(
             plans, compiled_plan=compiled_plan,
@@ -303,8 +357,7 @@ def windowed_bandwidth_gbps(plan: TransferPlan, topo: Topology, *,
     plans the CPU can run ahead, so per-message cost approaches pure wire
     time; without, per-node launches serialize on the CPU.
     """
-    wire = estimate_transfer_time_s(plan, topo, compiled_plan=True)
-    wire -= launch_overhead_ns(plan, compiled_plan=True) / 1e9  # pure wire
+    wire = wire_time_s(plan, topo)
     launch = launch_overhead_ns(plan, compiled_plan=compiled_plan) / 1e9
     # CPU dispatch pipeline: total = first launch + max(wire, launch)*(W-1)
     # + wire of the last message's tail.

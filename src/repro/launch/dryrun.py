@@ -6,6 +6,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 The two lines above MUST stay first: jax locks the device count at first
 init, and the production meshes need 512 placeholder host devices.
 
+``--comm`` switches to the *transfer-graph* dry-run instead: plan-only
+``session.describe(...)`` rows (copy-node/edge counts, critical-path
+depth, modeled times) over the standard topologies — no jax device init,
+no compilation. ``repro.launch.report`` renders both row kinds.
+
 For every non-skipped cell this driver:
 
 1. builds ``input_specs`` (ShapeDtypeStruct + shardings, no allocation),
@@ -148,13 +153,61 @@ def run_cell(arch, shape, mesh, mesh_name):
     return row
 
 
+#: (name, constructor) cells swept by the ``--comm`` transfer-graph dry-run.
+def _comm_topologies():
+    from repro.core.topology import Topology
+    return [
+        ("beluga4", Topology.full_mesh(4)),
+        ("narval4", Topology.full_mesh(4, sublinks_per_pair=4,
+                                       name="narval4")),
+        ("torus4x4", Topology.torus2d(4, 4)),
+    ]
+
+
+def run_comm_dryrun(out_path: str) -> list[dict]:
+    """Plan-only sweep: ``session.describe`` over topology × size × paths.
+
+    Every row is one transfer graph — node/edge counts, critical-path
+    depth, canonical digest, and the analytic model's costs. Appended to
+    ``out_path`` (replacing stale comm rows) next to the model-cell rows
+    so one JSON feeds ``repro.launch.report``.
+    """
+    from repro.comm import CommConfig, CommSession
+
+    MiB = 1 << 20
+    rows = []
+    for topo_name, topo in _comm_topologies():
+        sess = CommSession(CommConfig(multipath_threshold=MiB),
+                           topology=topo)
+        for nbytes in (1 * MiB, 8 * MiB, 64 * MiB):
+            for max_paths in (1, 3):
+                d = sess.describe(0, 1, nbytes, max_paths=max_paths)
+                row = {"kind": "comm_graph", "status": "ok",
+                       "topology": topo_name,
+                       "nbytes": nbytes, "max_paths": max_paths,
+                       "num_paths": d["num_paths"], **d["graph"],
+                       **d["model"]}
+                rows.append(row)
+                print(f"COMM {topo_name} {nbytes >> 20}MiB "
+                      f"paths={d['num_paths']} nodes={d['graph']['nodes']} "
+                      f"edges={d['graph']['edges']} "
+                      f"cp={d['graph']['critical_path_nodes']} "
+                      f"bw={d['model']['effective_gbps']:.1f}GB/s",
+                      flush=True)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    results = [r for r in results if r.get("kind") != "comm_graph"]
+    results.extend(rows)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\ncomm dry-run complete: {len(rows)} transfer graphs")
+    return rows
+
+
 def main() -> None:
-    import jax
-
-    from repro.configs import load_all, REGISTRY
-    from repro.configs.shapes import SHAPES, skip_reason
-    from repro.launch.mesh import make_production_mesh
-
     parser = argparse.ArgumentParser()
     parser.add_argument("--arch", default=None)
     parser.add_argument("--shape", default=None)
@@ -162,7 +215,20 @@ def main() -> None:
                         choices=["single", "multi", "both"])
     parser.add_argument("--out", default="experiments/dryrun_results.json")
     parser.add_argument("--skip-existing", action="store_true")
+    parser.add_argument("--comm", action="store_true",
+                        help="transfer-graph dry-run (plan-only, no jax "
+                             "device init)")
     args = parser.parse_args()
+
+    if args.comm:
+        run_comm_dryrun(args.out)
+        return
+
+    import jax
+
+    from repro.configs import load_all, REGISTRY
+    from repro.configs.shapes import SHAPES, skip_reason
+    from repro.launch.mesh import make_production_mesh
 
     assert len(jax.devices()) == 512, (
         "dry-run needs 512 placeholder devices; do not import jax before "

@@ -1,5 +1,9 @@
 """Generate EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSON.
 
+Renders both row kinds the dry-run driver emits: model compilation cells
+and ``--comm`` transfer-graph rows (copy-node/edge counts, critical-path
+depth, modeled bandwidth — see ``session.describe``).
+
 Usage: PYTHONPATH=src python -m repro.launch.report \
            experiments/dryrun_results.json > experiments/roofline.md
 """
@@ -38,17 +42,42 @@ def fmt_table(rows: list[dict], mesh: str) -> str:
     return "\n".join(out) + "\n"
 
 
+def fmt_comm_table(rows: list[dict]) -> str:
+    """§Transfer graphs — one row per ``--comm`` dry-run lowering."""
+    out = [
+        "### Transfer graphs (`--comm` dry-run)\n",
+        "| topology | MiB | paths | nodes | edges | critical path | "
+        "launch µs (graph/per-node) | modeled GB/s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["topology"], r["nbytes"],
+                                         r["max_paths"])):
+        out.append(
+            f"| {r['topology']} | {r['nbytes'] >> 20} | {r['num_paths']} "
+            f"| {r['nodes']} | {r['edges']} | {r['critical_path_nodes']} "
+            f"| {r['launch_overhead_ns'] / 1e3:.1f}/"
+            f"{r['launch_overhead_nograph_ns'] / 1e3:.1f} "
+            f"| {r['effective_gbps']:.1f} |")
+    return "\n".join(out) + "\n"
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else \
         "experiments/dryrun_results.json"
     rows = json.load(open(path))
+    comm = [r for r in rows if r.get("kind") == "comm_graph"]
+    rows = [r for r in rows if r.get("kind") != "comm_graph"]
     ok = [r for r in rows if r["status"] == "ok"]
     sk = [r for r in rows if r["status"] == "skipped"]
     print(f"Cells: {len(ok)} compiled, {len(sk)} skipped, "
-          f"{len(rows) - len(ok) - len(sk)} errors.\n")
+          f"{len(rows) - len(ok) - len(sk)} errors; "
+          f"{len(comm)} transfer graphs.\n")
     for mesh in ("single_pod_16x16", "multi_pod_2x16x16"):
         sub = [r for r in rows if r["mesh"] == mesh]
-        print(fmt_table(sub, mesh))
+        if sub:
+            print(fmt_table(sub, mesh))
+    if comm:
+        print(fmt_comm_table(comm))
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
-"""TransferPlanCache: LRU behaviour + lifecycle instrumentation."""
+"""TransferPlanCache: LRU behaviour + lifecycle instrumentation — including
+eviction under the digest-derived ``GroupKey``s real sessions use."""
 
 import jax.numpy as jnp
 import pytest
 
-from repro.core import TransferPlanCache, compile_plan
+from repro.comm import CommConfig, CommSession
+from repro.comm.engine import GroupKey
+from repro.core import Topology, TransferPlanCache, compile_plan
 
 
 def _dummy_plan(key, n=4):
@@ -67,6 +70,45 @@ def test_lifecycle_stages_recorded():
     assert out[0] == 2.0
     assert plan.lifecycle.launches == 1
     assert plan.lifecycle.mean_launch_ns > 0
+
+
+def test_lru_eviction_under_group_keys():
+    """End-to-end LRU behaviour with the keys real sessions produce: a
+    capacity hit evicts the least-recently-used fused program, a re-send
+    bumps recency, a re-compile after eviction is a fresh miss, and the
+    ``stats()`` counters stay consistent throughout."""
+    cache = TransferPlanCache(capacity=2)
+    sess = CommSession(CommConfig(multipath_threshold=64),
+                       topology=Topology.full_mesh(8, with_host=False),
+                       cache=cache)
+
+    def send(n):
+        sess.send(jnp.arange(n, dtype=jnp.float32), 0, 1)
+
+    send(128)                                   # miss → compile key A
+    send(256)                                   # miss → compile key B
+    keys = cache.keys()
+    assert len(keys) == 2 and all(isinstance(k, GroupKey) for k in keys)
+    assert len({k.digest for k in keys}) == 2   # digest-distinct entries
+    key_a, key_b = keys
+
+    send(128)                                   # hit A → bumps recency
+    assert cache.keys() == [key_b, key_a]       # B is now the LRU entry
+    send(512)                                   # miss → evicts B, not A
+    assert key_a in cache and key_b not in cache
+    assert cache.evictions == 1
+
+    h0, m0 = cache.hits, cache.misses
+    send(128)                                   # A retained: pure hit
+    assert (cache.hits, cache.misses) == (h0 + 1, m0)
+    send(256)                                   # B was evicted: re-compile
+    assert (cache.hits, cache.misses) == (h0 + 1, m0 + 1)
+    assert cache.keys()[-1].digest == key_b.digest  # same graph, new entry
+
+    s = cache.stats()
+    assert s["size"] == s["capacity"] == 2
+    assert s["hits"] + s["misses"] == 6         # one lookup per send
+    assert (s["hits"], s["misses"], s["evictions"]) == (2, 4, 2)
 
 
 def test_compile_dominates_build():

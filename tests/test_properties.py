@@ -15,10 +15,19 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.comm import (CommConfig, CommSession, PathPlanner,  # noqa: E402
                         TransferPlanCache)
+from repro.comm.graph import lower  # noqa: E402
 from repro.core import (Topology, build_schedule,  # noqa: E402
                         validate_group, validate_plan)
 
 MiB = 1 << 20
+
+
+def _expected_edges(plans, window):
+    """window · Σ_chunks (hops−1)  +  (window−1) · Σ chunks."""
+    chunks = sum(len(pa.chunk_bounds()) for p in plans for pa in p.paths)
+    hop_edges = sum(len(pa.chunk_bounds()) * (pa.route.num_hops - 1)
+                    for p in plans for pa in p.paths)
+    return window * hop_edges + (window - 1) * chunks
 
 
 @settings(max_examples=60, deadline=None)
@@ -48,6 +57,41 @@ def test_plan_invariants_property(nbytes, max_paths, chunks, gran_pow,
     # alignment: every chunk boundary is granularity-aligned except the tail
     for t in sched:
         assert t.offset % gran == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    nbytes=st.integers(1, 256 * MiB),
+    max_paths=st.integers(1, 4),
+    chunks=st.one_of(st.none(), st.integers(1, 16)),
+    gran_pow=st.integers(0, 3),
+    host=st.booleans(),
+    src=st.integers(0, 3), dst=st.integers(0, 3),
+    window=st.integers(1, 4),
+)
+def test_lower_roundtrip_property(nbytes, max_paths, chunks, gran_pow,
+                                  host, src, dst, window):
+    """The lowering round-trips: for arbitrary plans, node byte ranges
+    reproduce ``chunk_bounds()`` exactly, node count is chunks × hops ×
+    window, and edge count is ``window·Σ(hops−1 per chunk) + window
+    links`` ((window−1) per chunk)."""
+    if src == dst:
+        return
+    gran = 2 ** gran_pow
+    nbytes = max(gran, nbytes // gran * gran)
+    planner = PathPlanner(Topology.full_mesh(4))
+    plan = planner.plan(src, dst, nbytes, max_paths=max_paths,
+                        include_host=host, num_chunks=chunks,
+                        granularity=gran)
+    graph = lower(plan, window)
+    assert graph.num_nodes == window * sum(
+        len(pa.chunk_bounds()) * pa.route.num_hops for pa in plan.paths)
+    assert graph.num_edges == _expected_edges([plan], window)
+    for p_idx, pa in enumerate(plan.paths):
+        got = sorted({(n.offset, n.nbytes) for n in graph.nodes
+                      if n.path_idx == p_idx and n.window == 0})
+        assert got == sorted(pa.chunk_bounds())
+    assert lower(plan, window).digest() == graph.digest()
 
 
 _pairs8 = st.tuples(st.integers(0, 7), st.integers(0, 7)).filter(
@@ -80,6 +124,18 @@ def test_group_invariants_property(pairs, sizes, max_paths):
     for plan, (s, d, n) in zip(group.plans, reqs):
         validate_plan(plan)            # per-plan disjoint cover + links
         assert (plan.src, plan.dst, plan.nbytes) == (s, d, n)
+    # the fused lowering round-trips the whole group
+    graph = lower(group)
+    assert graph.num_messages == len(reqs)
+    assert graph.num_nodes == sum(
+        len(pa.chunk_bounds()) * pa.route.num_hops
+        for p in group.plans for pa in p.paths)
+    assert graph.num_edges == _expected_edges(group.plans, 1)
+    for m_idx, plan in enumerate(group.plans):
+        per_msg = sorted((n.offset, n.nbytes) for n in graph.nodes
+                         if n.msg_idx == m_idx and n.hop_idx == 0)
+        assert per_msg == sorted(
+            b for pa in plan.paths for b in pa.chunk_bounds())
     if group.exclusive:
         validate_group(group)          # cross-flow link exclusivity
     else:
