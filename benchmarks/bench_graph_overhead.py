@@ -8,8 +8,15 @@ from the same :class:`~repro.comm.graph.TransferGraph` node count (graph
 launch constants vs per-node launch constants). Every row carries the
 graph's node/edge counts in the ``--json`` artifact so the perf trajectory
 can be plotted against graph size directly.
+
+The ``--schedule`` axis (``benchmarks.common.SCHEDULES``, narrowed by
+``run.py --schedule``) additionally emits one modeled-time row per
+chunk-interleaving scheduler (DESIGN.md §2.2) per graph size, with the
+scheduled digest and the delta vs the round-robin baseline in the
+``--json`` extras — the BENCH_*.json trajectory tracks schedule deltas.
 """
 
+from benchmarks import common
 from benchmarks.common import Row, timeit_us
 
 import jax
@@ -18,7 +25,8 @@ import numpy as np
 
 from repro.comm import CommConfig, CommSession
 from repro.comm.graph import lower
-from repro.core import Topology, launch_overhead_ns
+from repro.comm.passes import apply_schedule
+from repro.core import Topology, launch_overhead_ns, scheduled_time_s
 
 
 def run() -> list[Row]:
@@ -73,4 +81,18 @@ def run() -> list[Row]:
             f"plan_lifecycle/nodes{graph.num_nodes}/amortize_breakeven",
             0.0, f"{total_first / max(launch_us, 1e-9):.0f}launches",
             counts))
+        # --schedule axis: modeled time per chunk-interleaving scheduler
+        # over the SAME lowering (DESIGN.md §2.2); the round-robin row is
+        # the baseline every delta is against.
+        baseline_us = scheduled_time_s(graph, topo) * 1e6
+        for sched in common.SCHEDULES:
+            sg, chosen = apply_schedule(graph, sched, topo)
+            t_us = scheduled_time_s(sg, topo) * 1e6
+            rows.append(Row(
+                f"plan_lifecycle/nodes{graph.num_nodes}/schedule_{sched}",
+                t_us, chosen,
+                {**counts, "schedule": sched, "chosen": chosen,
+                 "digest": sg.digest(),
+                 "delta_vs_round_robin_us":
+                     round(t_us - baseline_us, 4)}))
     return rows

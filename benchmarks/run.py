@@ -46,9 +46,17 @@ def main() -> None:
                     help="tiny sizes only (CI smoke step)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as a JSON artifact")
+    ap.add_argument("--schedule", metavar="NAME", default=None,
+                    choices=common.SCHEDULES,
+                    help="restrict the bench_graph_overhead scheduler "
+                         "sweep to one chunk-interleaving pass "
+                         "(default: sweep all of "
+                         f"{', '.join(common.SCHEDULES)})")
     args = ap.parse_args()
     if args.smoke:
         _apply_smoke()
+    if args.schedule:
+        common.SCHEDULES[:] = [args.schedule]
 
     rows = collect()
     print("name,us_per_call,derived")

@@ -6,6 +6,7 @@ caching. Layering (DESIGN.md §1):
 * :mod:`repro.comm.config`      — :class:`CommConfig` (+ ``from_env``)
 * :mod:`repro.comm.plan`        — transfer-plan data model
 * :mod:`repro.comm.graph`       — :class:`TransferGraph` copy-node DAG IR
+* :mod:`repro.comm.passes`      — chunk-interleaving scheduler passes (§2.2)
 * :mod:`repro.comm.policy`      — pluggable :class:`PathPolicy` strategies
 * :mod:`repro.comm.planner`     — route enumeration + plan construction
 * :mod:`repro.comm.cache`       — compiled-plan LRU (CUDA-Graph analogue)
@@ -27,11 +28,16 @@ deprecated shims over this package.
 """
 
 from repro.compat import make_mesh, shard_map  # noqa: F401
-from repro.comm.config import POLICY_NAMES, CommConfig  # noqa: F401
+from repro.comm.config import (  # noqa: F401
+    POLICY_NAMES, SCHEDULE_NAMES, CommConfig)
 from repro.comm.plan import (  # noqa: F401
     PathAssignment, TransferGroup, TransferPlan, TransferRequest)
 from repro.comm.graph import (  # noqa: F401
     CopyNode, DepEdge, TransferGraph, canonical_digest, lower)
+from repro.comm.passes import (  # noqa: F401
+    AutoSchedule, CriticalPathSchedule, DepthFirstSchedule, GraphPass,
+    RoundRobinSchedule, apply_schedule, check_pass, make_schedule,
+    reindex, run_pipeline)
 from repro.comm.policy import (  # noqa: F401
     GreedyBandwidthPolicy, PathPolicy, RoundRobinPolicy, TunerPolicy,
     contention_scaled, make_policy)

@@ -18,6 +18,9 @@ Environment variables read by :meth:`from_env`:
   paper §5.3: below it the single direct path wins)
 * ``REPRO_MP_WINDOW``      — default message window for ``session.send``
 * ``REPRO_MP_POLICY``      — path policy name (greedy | round_robin | tuner)
+* ``REPRO_MP_SCHEDULE``    — chunk-interleaving scheduler applied to the
+  lowered transfer graph (round_robin | depth_first | critical_path |
+  auto; DESIGN.md §2.2)
 * ``REPRO_PLAN_CACHE_SIZE``— compiled-plan LRU capacity (default 64)
 """
 
@@ -30,6 +33,12 @@ _MiB = 1 << 20
 
 #: Policy names accepted by :func:`repro.comm.policy.make_policy`.
 POLICY_NAMES = ("greedy", "round_robin", "tuner")
+
+#: Scheduler (graph-pass) names accepted by
+#: :func:`repro.comm.passes.make_schedule` — ``round_robin`` is today's
+#: lowering order (identity pass), ``auto`` model-scores every candidate
+#: order and picks the winner before compiling (DESIGN.md §2.2).
+SCHEDULE_NAMES = ("round_robin", "depth_first", "critical_path", "auto")
 
 
 def _env_int(name: str, default: int) -> int:
@@ -62,6 +71,7 @@ class CommConfig:
     multipath_threshold: int = 2 * _MiB
     window: int = 1
     policy: str = "greedy"
+    schedule: str = "round_robin"
     cache_capacity: int = 64
     axis_name: str = "dev"
 
@@ -85,6 +95,9 @@ class CommConfig:
         if self.policy not in POLICY_NAMES:
             raise ValueError(f"unknown policy {self.policy!r}; "
                              f"expected one of {POLICY_NAMES}")
+        if self.schedule not in SCHEDULE_NAMES:
+            raise ValueError(f"unknown schedule {self.schedule!r}; "
+                             f"expected one of {SCHEDULE_NAMES}")
         if not self.axis_name:
             raise ValueError("axis_name must be non-empty")
 
@@ -104,6 +117,7 @@ class CommConfig:
                                          cls.multipath_threshold),
             window=_env_int("REPRO_MP_WINDOW", cls.window),
             policy=os.environ.get("REPRO_MP_POLICY", cls.policy),
+            schedule=os.environ.get("REPRO_MP_SCHEDULE", cls.schedule),
             cache_capacity=_env_int("REPRO_PLAN_CACHE_SIZE",
                                     cls.cache_capacity),
         )

@@ -2,12 +2,16 @@
 
 This is the UCT-layer analogue (DESIGN.md §2): it lowers one or more
 :class:`~repro.comm.plan.TransferPlan` objects to ONE
-:class:`~repro.comm.graph.TransferGraph` (the CUDA Graph analogue), walks
-the graph's copy nodes in topological order emitting one ``ppermute`` per
-node, compiles the resulting SPMD program once, and caches the executable
-in a :class:`~repro.comm.cache.TransferPlanCache` keyed on the graph's
-canonical :meth:`~repro.comm.graph.TransferGraph.digest` — the paper's
-graph cache keyed on (src, dst, size, path configuration).
+:class:`~repro.comm.graph.TransferGraph` (the CUDA Graph analogue), runs
+the configured chunk-interleaving scheduler pass over it
+(:mod:`repro.comm.passes`, DESIGN.md §2.2 — the emitter owns no ordering
+of its own), walks the SCHEDULED graph's copy nodes in topological order
+emitting one ``ppermute`` per node, compiles the resulting SPMD program
+once, and caches the executable in a
+:class:`~repro.comm.cache.TransferPlanCache` keyed on the scheduled
+graph's canonical :meth:`~repro.comm.graph.TransferGraph.digest` — the
+paper's graph cache keyed on (src, dst, size, path configuration), here
+additionally distinguishing dispatch orders.
 
 A **transfer group** (:meth:`MultiPathTransfer.transfer_group`) fuses a set
 of concurrent messages — planned jointly by
@@ -35,6 +39,7 @@ engine directly.
 from __future__ import annotations
 
 import dataclasses
+from functools import lru_cache
 from typing import Sequence
 
 import jax
@@ -44,6 +49,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.comm.cache import CompiledPlan, TransferPlanCache, compile_plan
 from repro.compat import shard_map
 from repro.comm.graph import TransferGraph, lower
+from repro.comm.passes import GraphPass, apply_schedule
 from repro.comm.plan import TransferGroup, TransferPlan, TransferRequest
 from repro.comm.planner import PathPlanner
 from repro.core.pipelining import validate_plan
@@ -89,6 +95,20 @@ def group_signature(group: TransferGroup) -> tuple:
     """Per-plan (src, dst, nbytes, plan signature) for the whole group."""
     return tuple((p.src, p.dst, p.nbytes, plan_signature(p))
                  for p in group.plans)
+
+
+@lru_cache(maxsize=256)
+def _scheduled_graph(graph: TransferGraph, schedule: str,
+                     topology: Topology) -> tuple[TransferGraph, str]:
+    """Memoized schedule application for name-addressed schedulers.
+
+    ``lower()`` memoizes the lowering, so steady-state launches replay
+    the same graph object; without this cache every cache-hit dispatch
+    would re-run the pass AND the full §2.2 contract check. Custom
+    :class:`GraphPass` objects bypass the memo (their identity is not a
+    stable key).
+    """
+    return apply_schedule(graph, schedule, topology)
 
 
 def _check_executable(plan: TransferPlan) -> None:
@@ -148,17 +168,25 @@ def emit_graph(graph: TransferGraph, xs: Sequence[jax.Array],
 
 def multipath_send_local(x: jax.Array, plan: TransferPlan, *,
                          axis_name: str = AXIS,
-                         itemsize: int | None = None) -> jax.Array:
+                         itemsize: int | None = None,
+                         schedule: str | GraphPass = "round_robin",
+                         topology: Topology | None = None) -> jax.Array:
     """Execute a plan *inside* a ``shard_map`` program.
 
     ``x`` is the local shard, shape ``(1, nelems)``; on the source device it
     holds the message, elsewhere contents are ignored. Returns an array of
     the same shape that holds the message on the destination device and
-    zeros elsewhere. One ``ppermute`` per graph copy node.
+    zeros elsewhere. One ``ppermute`` per graph copy node, dispatched in
+    the order the ``schedule`` pass (§2.2) produces. Pass ``topology``
+    alongside a model-weighted scheduler (``"critical_path"``,
+    ``"auto"``) to get the same dispatch order the engine derives for
+    that name; without it, ``"critical_path"`` degrades to uniform
+    raw-byte weights and ``"auto"`` raises.
     """
     _check_executable(plan)
     itemsize = itemsize or x.dtype.itemsize
-    (out,) = emit_graph(lower(plan), (x[None],), axis_name, (itemsize,))
+    graph, _ = apply_schedule(lower(plan), schedule, topology)
+    (out,) = emit_graph(graph, (x[None],), axis_name, (itemsize,))
     return out[0]
 
 
@@ -168,7 +196,8 @@ class MultiPathTransfer:
     def __init__(self, mesh: jax.sharding.Mesh | None = None, *,
                  topology: Topology | None = None,
                  planner: PathPlanner | None = None,
-                 cache: TransferPlanCache | None = None):
+                 cache: TransferPlanCache | None = None,
+                 schedule: str | GraphPass = "round_robin"):
         if mesh is None:
             devs = jax.devices()
             mesh = jax.sharding.Mesh(devs, (AXIS,))
@@ -183,6 +212,15 @@ class MultiPathTransfer:
         self.planner = planner if planner is not None else PathPlanner(
             topology)
         self.cache = cache if cache is not None else TransferPlanCache()
+        #: Default chunk-interleaving scheduler (DESIGN.md §2.2) applied
+        #: to every lowering between ``lower()`` and the emitter; every
+        #: public entry point takes a per-call ``schedule=`` override.
+        self.schedule = schedule
+        #: Concrete schedule name → dispatch/compile calls resolved to it
+        #: (``auto`` counts as the candidate it picked; cache hits and
+        #: memoized pass applications included). Surfaced via
+        #: ``session.stats()``.
+        self.schedule_counts: dict[str, int] = {}
         self._sharding = NamedSharding(mesh, P(None, self.axis_name))
         #: Number of compiled-program launches issued (one per transfer or
         #: per fused group — the paper's "one cudaGraphLaunch" count).
@@ -227,13 +265,29 @@ class MultiPathTransfer:
         return group
 
     # -- program construction -----------------------------------------------
-    def _group_graph(self, plans: Sequence[TransferPlan],
-                     window: int) -> TransferGraph:
-        """Lower the fused group to its transfer graph (memoized)."""
+    def _group_graph(self, plans: Sequence[TransferPlan], window: int,
+                     schedule: str | GraphPass | None = None
+                     ) -> TransferGraph:
+        """Lower the fused group and run the scheduler pass (§2.2).
+
+        Returns the SCHEDULED graph — the one the program is emitted
+        from AND the one ``_group_key`` digests, so the cache key always
+        incorporates the post-pass dispatch order (two schedules of one
+        plan get distinct entries and can never cross-serve
+        executables). The emitter owns no ordering of its own.
+        """
         for p in plans:
             _check_executable(p)
-        return lower(TransferGroup(tuple(plans), self.topology.name),
-                     window)
+        graph = lower(TransferGroup(tuple(plans), self.topology.name),
+                      window)
+        sched = self.schedule if schedule is None else schedule
+        if isinstance(sched, str):
+            graph, chosen = _scheduled_graph(graph, sched, self.topology)
+        else:
+            graph, chosen = apply_schedule(graph, sched, self.topology)
+        self.schedule_counts[chosen] = self.schedule_counts.get(chosen,
+                                                                0) + 1
+        return graph
 
     def _build_group_fn(self, graph: TransferGraph,
                         itemsizes: Sequence[int]):
@@ -269,9 +323,11 @@ class MultiPathTransfer:
 
     def _launch_group(self, messages: Sequence[jax.Array],
                       plans: Sequence[TransferPlan], *,
-                      window: int, block: bool) -> list[jax.Array]:
+                      window: int, block: bool,
+                      schedule: str | GraphPass | None = None
+                      ) -> list[jax.Array]:
         """Compile (or fetch) the fused program and launch it ONCE."""
-        graph = self._group_graph(plans, window)
+        graph = self._group_graph(plans, window, schedule)
         shapes = [(m.shape[0], m.dtype) for m in messages]
         key = self._group_key(graph, plans, shapes, window)
         compiled = self.cache.get_or_build(
@@ -289,14 +345,17 @@ class MultiPathTransfer:
     def transfer(self, message: jax.Array, src: int, dst: int, *,
                  window: int = 1, max_paths: int | None = None,
                  num_chunks: int | None = None,
+                 schedule: str | GraphPass | None = None,
                  block: bool = True) -> jax.Array:
         """Move ``message`` (1-D array) from device ``src`` to ``dst``.
 
         Returns the received message (fetched from the destination shard).
-        ``block=False`` launches without waiting; the caller syncs. For
-        simultaneous opposite-direction traffic (OMB BIBW) or any other
-        concurrent set, use :meth:`transfer_group` — the old
-        ``bidirectional=True`` flag is folded into the group API.
+        ``block=False`` launches without waiting; the caller syncs.
+        ``schedule`` overrides the engine's chunk-interleaving scheduler
+        for this call (DESIGN.md §2.2). For simultaneous
+        opposite-direction traffic (OMB BIBW) or any other concurrent
+        set, use :meth:`transfer_group` — the old ``bidirectional=True``
+        flag is folded into the group API.
         """
         message = jnp.asarray(message)
         if message.ndim != 1:
@@ -304,13 +363,14 @@ class MultiPathTransfer:
         plan = self.plan_for(src, dst, message.shape[0], message.dtype,
                              max_paths=max_paths, num_chunks=num_chunks)
         return self._launch_group([message], (plan,), window=window,
-                                  block=block)[0]
+                                  block=block, schedule=schedule)[0]
 
     def transfer_group(self, messages: Sequence[jax.Array],
                        pairs: Sequence[tuple[int, int]], *,
                        window: int = 1, max_paths: int | None = None,
                        num_chunks: int | None = None,
                        exclusive: bool = False,
+                       schedule: str | GraphPass | None = None,
                        block: bool = True) -> list[jax.Array]:
         """Move ``messages[i]`` (1-D) from ``pairs[i][0]`` to ``pairs[i][1]``
         — all of them in ONE compiled launch.
@@ -335,16 +395,17 @@ class MultiPathTransfer:
                                     num_chunks=num_chunks,
                                     exclusive=exclusive)
         return self._launch_group(msgs, group.plans, window=window,
-                                  block=block)
+                                  block=block, schedule=schedule)
 
     def compiled_for(self, src: int, dst: int, nelems: int, dtype=jnp.float32,
                      *, window: int = 1, max_paths: int | None = None,
                      num_chunks: int | None = None,
+                     schedule: str | GraphPass | None = None,
                      ) -> tuple[CompiledPlan, TransferPlan]:
         """AOT handle for benchmarks: returns (executable, plan)."""
         plan = self.plan_for(src, dst, nelems, dtype, max_paths=max_paths,
                              num_chunks=num_chunks)
-        graph = self._group_graph((plan,), window)
+        graph = self._group_graph((plan,), window, schedule)
         shapes = ((nelems, jnp.dtype(dtype)),)
         key = self._group_key(graph, (plan,), shapes, window)
         compiled = self.cache.get_or_build(
@@ -355,13 +416,14 @@ class MultiPathTransfer:
                            window: int = 1, max_paths: int | None = None,
                            num_chunks: int | None = None,
                            exclusive: bool = False,
+                           schedule: str | GraphPass | None = None,
                            ) -> tuple[CompiledPlan, TransferGroup]:
         """AOT handle for a fused group; ``specs`` as in
         :meth:`plan_group_for`. Returns (executable, group)."""
         group = self.plan_group_for(specs, max_paths=max_paths,
                                     num_chunks=num_chunks,
                                     exclusive=exclusive)
-        graph = self._group_graph(group.plans, window)
+        graph = self._group_graph(group.plans, window, schedule)
         shapes = [(nelems, jnp.dtype(dtype))
                   for (_, _, nelems, dtype) in specs]
         key = self._group_key(graph, group.plans, shapes, window)

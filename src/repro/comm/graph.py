@@ -33,6 +33,14 @@ Per-link serialization between consecutive chunks of one path is *not*
 stored — it is derivable (:meth:`TransferGraph.serialization_edges`) and
 only the time model needs it; storing it would bloat digests without
 adding information.
+
+**Dispatch order is node-index order.** The lowering emits nodes in the
+paper's Algorithm 1 round-robin interleave (chunk waves across paths);
+chunk-interleaving schedulers (:mod:`repro.comm.passes`) are graph→graph
+rewrites that renumber nodes into a different dispatch order between
+:func:`lower` and the emitter, preserving the §4.5 invariants (byte cover
+and hop chains fixed, serialization order free) while :meth:`digest`
+distinguishes the schedules. See DESIGN.md §2.2 for the pass contract.
 """
 
 from __future__ import annotations
@@ -57,6 +65,13 @@ class CopyNode:
     ``nbytes`` are the chunk's byte range *within its message* — constant
     along the chunk's hop chain, so every node knows exactly which bytes
     it moves.
+
+    Invariant obligations (§4.5, checked by :meth:`TransferGraph.validate`):
+    nodes of one message must cover ``[0, nbytes)`` disjointly at their
+    terminal hops, and a node's ``(flow, msg_idx, path_idx, chunk_idx,
+    hop_idx, window, link, offset, nbytes)`` tuple is its identity — a
+    scheduler pass may renumber node *indices* but must never alter the
+    tuple itself (byte cover and hop chains are fixed).
     """
 
     flow: tuple[int, int]      # (src, dst) of the owning message
@@ -72,7 +87,15 @@ class CopyNode:
 
 @dataclasses.dataclass(frozen=True)
 class DepEdge:
-    """A dependency edge between node indices (``src`` before ``dst``)."""
+    """A dependency edge between node indices (``src`` before ``dst``).
+
+    Invariant obligations: index order is dispatch order, so every stored
+    edge must point forward (``src < dst`` after any scheduler pass — the
+    §2.2 contract; :meth:`TransferGraph.topological_order` re-validates
+    acyclicity). ``kind`` is :data:`HOP_EDGE` (dataflow: hop *i+1*
+    consumes hop *i*'s value) or :data:`WINDOW_EDGE` (replay ordering);
+    passes may not add, drop, or re-kind edges, only renumber endpoints.
+    """
 
     src: int
     dst: int
@@ -84,14 +107,24 @@ def canonical_digest(payload: object) -> str:
 
     Used by :meth:`TransferGraph.digest` and by non-P2P cache keys (the
     collective keys) so every compiled-program key in the plan cache is
-    derived the same way.
+    derived the same way. The payload must already be canonical — the
+    caller's invariant obligation is that two semantically identical
+    inputs ``repr`` identically (sort any unordered parts first).
     """
     return hashlib.sha256(repr(payload).encode()).hexdigest()[:32]
 
 
 @dataclasses.dataclass(frozen=True)
 class TransferGraph:
-    """The copy-node DAG for one message or one fused transfer group."""
+    """The copy-node DAG for one message or one fused transfer group.
+
+    Node-index order is the dispatch schedule: the emitter walks indices
+    (via :meth:`topological_order`), the model serializes same-link chunks
+    in index order, and :meth:`digest` — the cache-key ingredient — hashes
+    nodes *in order*, so two schedules of one plan digest apart. The §4.5
+    invariants live in :meth:`validate`; scheduler passes must preserve
+    them and leave the node/edge *content* untouched (DESIGN.md §2.2).
+    """
 
     nodes: tuple[CopyNode, ...]
     edges: tuple[DepEdge, ...]
@@ -102,10 +135,14 @@ class TransferGraph:
     # -- basic shape --------------------------------------------------------
     @property
     def num_nodes(self) -> int:
+        """Copy-node count — invariant under every scheduler pass (the
+        equal-graph acceptance: traced ``ppermute`` count equals this)."""
         return len(self.nodes)
 
     @property
     def num_edges(self) -> int:
+        """Stored dependency-edge count (hop + window; serialization
+        edges are derived, not stored) — invariant under passes."""
         return len(self.edges)
 
     def flows(self) -> tuple[tuple[int, int], ...]:
@@ -158,19 +195,20 @@ class TransferGraph:
 
         Consecutive chunks of one (message, path, window) traverse the
         same directional link at the same hop position and serialize on
-        it; the critical-path evaluation in
-        :func:`repro.core.pipelining.wire_time_s` adds these to the hop
+        it **in dispatch (node-index) order** — so a scheduler pass that
+        renumbers nodes reorders exactly these edges, which is the only
+        freedom the §2.2 pass contract grants. The critical-path
+        evaluations in :mod:`repro.core.pipelining` add these to the hop
         and window edges.
         """
-        by_slot: dict[tuple[int, int, int, int], list[tuple[int, int]]] = {}
+        by_slot: dict[tuple[int, int, int, int], list[int]] = {}
         for i, n in enumerate(self.nodes):
             by_slot.setdefault(
                 (n.msg_idx, n.path_idx, n.window, n.hop_idx),
-                []).append((n.chunk_idx, i))
+                []).append(i)
         out: list[tuple[int, int]] = []
         for slot in by_slot.values():
-            slot.sort()
-            out.extend((a, b) for (_, a), (_, b) in zip(slot, slot[1:]))
+            out.extend(zip(slot, slot[1:]))
         return out
 
     def critical_path_nodes(self) -> int:
@@ -191,15 +229,22 @@ class TransferGraph:
     def digest(self) -> str:
         """Canonical content hash — THE cache-key ingredient.
 
-        Two lowerings digest equal iff they have identical nodes, edges,
-        and window count, regardless of how the source plan objects were
-        assembled; compiled-program keys (:class:`repro.comm.engine.\
-GroupKey`) are derived from this instead of hand-assembled plan
-        signatures.
+        Two lowerings digest equal iff they have identical nodes *in the
+        same dispatch order*, the same edge set, and the same window
+        count, regardless of how the source plan objects were assembled;
+        compiled-program keys (:class:`repro.comm.engine.GroupKey`) are
+        derived from this instead of hand-assembled plan signatures.
+
+        Node order is significant on purpose — it IS the schedule, so two
+        scheduler passes over one plan digest apart and can never
+        cross-serve executables. Edge *storage* order is not semantic
+        (edges are a set) and is sorted before hashing, so a pass that
+        renumbers nodes and re-sorts edges digests equal to any other
+        pass producing the same dispatch order.
         """
         return canonical_digest((
             tuple(dataclasses.astuple(n) for n in self.nodes),
-            tuple(dataclasses.astuple(e) for e in self.edges),
+            tuple(sorted(dataclasses.astuple(e) for e in self.edges)),
             self.window, self.num_messages))
 
     # -- invariants (§4.5, checked on nodes/edges) --------------------------
@@ -284,7 +329,12 @@ def lower(obj: TransferPlan | TransferGroup, window: int = 1
     """THE lowering pass: plan/group → copy-node DAG.
 
     One :class:`CopyNode` per chunk per hop per window round, emitted in
-    a topological order (window-major, then message, path, chunk, hop).
+    the paper's Algorithm 1 **round-robin dispatch order**: window-major,
+    then message, then chunk *waves* interleaved across paths (chunk 0 of
+    every path, chunk 1 of every path, …), hops innermost. This emission
+    order is a valid topological order and is exactly what the
+    ``round_robin`` scheduler pass (:mod:`repro.comm.passes`) reproduces
+    — applying it to a fresh lowering is the identity (same digest).
     Edges: hop order within each chunk (``"hop"``), and replay ordering
     between a chunk's last hop in round *w* and its first hop in round
     *w+1* (``"window"``). So for any lowering::
@@ -294,7 +344,8 @@ def lower(obj: TransferPlan | TransferGroup, window: int = 1
 
     Plans and groups are frozen/hashable, so lowerings are memoized —
     the engine, the model, and the validator all get the *same* graph
-    object for the same source.
+    object for the same source, and the invariant checks
+    (:meth:`TransferGraph.validate`) apply to the one graph they share.
     """
     if window < 1:
         raise ValueError(f"window must be >= 1, got {window}")
@@ -314,9 +365,14 @@ def lower(obj: TransferPlan | TransferGroup, window: int = 1
     for w in range(window):
         for m_idx, plan in enumerate(plans):
             flow = (plan.src, plan.dst)
-            for p_idx, pa in enumerate(plan.paths):
-                links = pa.route.directional_links()
-                for c_idx, (off, size) in enumerate(pa.chunk_bounds()):
+            per_path = [(pa.route.directional_links(), pa.chunk_bounds())
+                        for pa in plan.paths]
+            waves = max((len(bounds) for _, bounds in per_path), default=0)
+            for c_idx in range(waves):
+                for p_idx, (links, bounds) in enumerate(per_path):
+                    if c_idx >= len(bounds):
+                        continue
+                    off, size = bounds[c_idx]
                     first = len(nodes)
                     for h_idx, link in enumerate(links):
                         idx = len(nodes)

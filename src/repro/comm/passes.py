@@ -1,0 +1,393 @@
+"""Graph-pass pipeline: pluggable chunk-interleaving schedulers.
+
+The paper's Algorithm 1 distributes chunks across paths in one fixed
+round-robin order; its CUDA-Graph formulation makes dispatch order a
+property of the *captured graph*. In this repo that property is the
+node-index order of the :class:`~repro.comm.graph.TransferGraph`, so a
+scheduler is a pure ``TransferGraph -> TransferGraph`` rewrite applied
+between :func:`repro.comm.graph.lower` and the emitter
+(:func:`repro.comm.engine.emit_graph`) — a *graph pass*.
+
+**The pass contract (DESIGN.md §2.2).** A pass may renumber node indices
+(the dispatch order, and with it the derived per-link serialization
+edges); it must NOT change anything else:
+
+* the node multiset is fixed — byte cover, hop chains, flows, chunking
+  are §4.5 invariants the pass inherits and must preserve,
+* the stored edge *set* (hop dataflow + window replay, identified by the
+  node content at each endpoint) is fixed; only endpoint indices are
+  remapped,
+* index order must remain a valid topological order (every stored edge
+  points forward), so the emitter's walk IS the schedule,
+* the scheduled graph must still pass
+  :meth:`~repro.comm.graph.TransferGraph.validate`, and its
+  :meth:`~repro.comm.graph.TransferGraph.digest` is recomputed from the
+  new node order — cache keys (``GroupKey``) therefore distinguish
+  schedules and can never cross-serve executables.
+
+:func:`apply_schedule` enforces all of this after every pass
+(:func:`check_pass`), so a buggy custom pass fails loudly at schedule
+time rather than corrupting a compiled program.
+
+Shipped schedulers (:data:`repro.comm.config.SCHEDULE_NAMES`):
+
+* ``round_robin`` — the paper's Alg. 1 order, i.e. today's lowering
+  emission (chunk waves interleaved across paths). Identity on a fresh
+  lowering: same nodes, same digest.
+* ``depth_first`` — drain each path's whole chunk chain before switching
+  to the next path (minimizes per-link switchover at the cost of late
+  path starts).
+* ``critical_path`` — greedy list scheduling under the §4.4 weighted
+  model (:func:`repro.core.pipelining.scheduled_time_s` semantics):
+  repeatedly dispatch the ready node that finishes earliest, ties to the
+  node with the most downstream work. Reorders serialization edges to
+  shorten the DAG's modeled critical path (remainder chunks really are
+  bigger, so order matters on staged paths).
+* ``auto`` — scores every candidate order with
+  :func:`~repro.core.pipelining.scheduled_time_s` and picks the winner
+  before compiling; ties (and any tie with the baseline) resolve to
+  ``round_robin``, so ``auto`` never selects a schedule the model scores
+  worse than ``round_robin``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Protocol, Sequence, runtime_checkable
+
+from repro.comm.config import SCHEDULE_NAMES
+from repro.comm.graph import DepEdge, TransferGraph
+from repro.core.topology import Topology
+
+
+@runtime_checkable
+class GraphPass(Protocol):
+    """Protocol for a transfer-graph pass: a named pure rewrite.
+
+    Implementations must honor the §2.2 pass contract (module docstring):
+    preserve the node multiset and edge set — the §4.5 invariants ride on
+    them — keep index order topologically valid, and return a graph whose
+    ``digest()`` reflects the new dispatch order. ``__call__`` must be
+    deterministic (same input graph → same output graph) or compiled-plan
+    cache keys would churn.
+    """
+
+    name: str
+
+    def __call__(self, graph: TransferGraph) -> TransferGraph:
+        ...
+
+
+def _node_id(node) -> tuple:
+    """Content identity of a node — what a pass may never change."""
+    return dataclasses.astuple(node)
+
+
+def reindex(graph: TransferGraph, order: Sequence[int]) -> TransferGraph:
+    """Rebuild ``graph`` with nodes renumbered into dispatch order
+    ``order`` (``order[k]`` = old index of the node dispatched k-th).
+
+    The §2.2 mechanical core every scheduler shares: nodes are permuted,
+    stored edges are endpoint-remapped and canonically sorted (edge
+    storage order is not semantic — ``digest()`` sorts it anyway), and
+    the result is returned unchanged (same object, same digest) when
+    ``order`` is the identity. Raises ``ValueError`` if ``order`` is not
+    a permutation or breaks topological validity (a stored edge would
+    point backward) — such an order is not a schedule of this DAG.
+    """
+    n = graph.num_nodes
+    if sorted(order) != list(range(n)):
+        raise ValueError("order is not a permutation of node indices")
+    if list(order) == list(range(n)):
+        return graph
+    old_to_new = {old: new for new, old in enumerate(order)}
+    nodes = tuple(graph.nodes[old] for old in order)
+    for e in graph.edges:
+        src, dst = old_to_new[e.src], old_to_new[e.dst]
+        if src >= dst:
+            raise ValueError(
+                f"schedule violates dependency {e.kind} edge "
+                f"{e.src}->{e.dst}: dispatch order must stay topological")
+    edges = tuple(sorted(
+        (DepEdge(old_to_new[e.src], old_to_new[e.dst], e.kind)
+         for e in graph.edges),
+        key=lambda e: (e.src, e.dst, e.kind)))
+    return TransferGraph(nodes, edges, graph.window, graph.num_messages,
+                         graph.topology_name)
+
+
+def check_pass(before: TransferGraph, after: TransferGraph) -> None:
+    """Assert the §2.2 pass contract between a pass's input and output.
+
+    Raises ``ValueError`` if the pass changed anything beyond dispatch
+    order: node multiset (byte cover / hop chains / chunking), the edge
+    set (by node content), graph metadata, or topological validity of the
+    index order. Also re-runs the §4.5 graph invariants
+    (:meth:`TransferGraph.validate`) on the output.
+    ``apply_schedule`` calls this after every pass; pass authors get it
+    for free in tests via the hypothesis property suite.
+    """
+    if (after.window != before.window
+            or after.num_messages != before.num_messages
+            or after.topology_name != before.topology_name):
+        raise ValueError("pass changed graph metadata "
+                         "(window/num_messages/topology)")
+    if sorted(map(_node_id, after.nodes)) != sorted(map(_node_id,
+                                                        before.nodes)):
+        raise ValueError(
+            "pass changed the node multiset — byte cover and hop chains "
+            "are fixed by the §2.2 contract; only dispatch order is free")
+    def edge_set(g: TransferGraph) -> set:
+        return {(_node_id(g.nodes[e.src]), _node_id(g.nodes[e.dst]), e.kind)
+                for e in g.edges}
+    if edge_set(after) != edge_set(before):
+        raise ValueError("pass changed the dependency-edge set — passes "
+                         "may only renumber edge endpoints")
+    for e in after.edges:
+        if e.src >= e.dst:
+            raise ValueError("pass broke topological index order "
+                             f"({e.kind} edge {e.src}->{e.dst})")
+    # §4.5 on the scheduled graph itself. Cross-flow exclusivity is a
+    # planner-level property (the shared fallback trades it away on
+    # purpose), so the scheduled graph is held to the same per-message
+    # standard the lowering was.
+    after.validate(cross_flow_exclusive=False)
+
+
+def _sorted_order(graph: TransferGraph, key) -> list[int]:
+    return sorted(range(graph.num_nodes),
+                  key=lambda i: key(graph.nodes[i]))
+
+
+class RoundRobinSchedule:
+    """The paper's Algorithm 1 dispatch order — chunk waves interleaved
+    across paths — which is exactly the lowering's emission order.
+
+    Identity on a fresh lowering (same graph object, same digest): this
+    pass exists so the ordering is *owned by the pipeline* rather than
+    baked into the emitter, and so other passes have a baseline to be
+    scored against. Preserves every §4.5 invariant trivially.
+    """
+
+    name = "round_robin"
+
+    def __call__(self, graph: TransferGraph) -> TransferGraph:
+        return reindex(graph, _sorted_order(
+            graph, lambda n: (n.window, n.msg_idx, n.chunk_idx,
+                              n.path_idx, n.hop_idx)))
+
+
+class DepthFirstSchedule:
+    """Drain each path's entire chunk chain before switching paths.
+
+    Minimizes per-link switchover (each directional link is serviced in
+    one contiguous burst per window round) at the cost of starting path
+    *k* only after all of path *k−1*'s copies have been issued — the
+    modeled issue chain prices that delay, which is why ``auto`` rarely
+    picks it on multi-path plans. Preserves the §4.5 invariants: only
+    node indices (and thus serialization-edge order) change.
+    """
+
+    name = "depth_first"
+
+    def __call__(self, graph: TransferGraph) -> TransferGraph:
+        return reindex(graph, _sorted_order(
+            graph, lambda n: (n.window, n.msg_idx, n.path_idx,
+                              n.chunk_idx, n.hop_idx)))
+
+
+class CriticalPathSchedule:
+    """Greedy list scheduling: dispatch the ready node that finishes
+    earliest under the §4.4 weighted model, ties to the most downstream
+    work (longest-remaining-chain first).
+
+    Reorders serialization edges — the only §2.2 freedom — to shorten
+    the scheduled DAG's modeled critical path
+    (:func:`repro.core.pipelining.scheduled_time_s`): e.g. a remainder
+    chunk on a staged path is dispatched where its extra bytes overlap
+    other paths' steady state instead of tailing the pipeline.
+    Construct with the :class:`~repro.core.topology.Topology` to weight
+    nodes by contended link bandwidth; without one, weights fall back to
+    raw chunk bytes (uniform links). Deterministic; preserves the node
+    multiset, edge set, and §4.5 invariants (enforced by ``check_pass``).
+    """
+
+    name = "critical_path"
+
+    def __init__(self, topology: Topology | None = None):
+        self.topology = topology
+
+    def _weights(self, graph: TransferGraph) -> tuple[list[float], float]:
+        """(per-node seconds, per-issue-slot seconds) — the §4.4 model.
+
+        With a topology this is exactly
+        :func:`repro.core.pipelining.graph_node_weights_s` plus the
+        compiled per-node launch cost, so the greedy optimizes the same
+        objective :func:`~repro.core.pipelining.scheduled_time_s` (the
+        ``auto`` arbiter) scores it on. Without one, weights degrade to
+        raw chunk bytes on uniform links and the issue term vanishes —
+        invariants are preserved either way, only the heuristic's
+        objective coarsens.
+        """
+        if self.topology is not None:
+            from repro.core.pipelining import (GRAPH_LAUNCH_PER_NODE_NS,
+                                               graph_node_weights_s)
+            return (graph_node_weights_s(graph, self.topology),
+                    GRAPH_LAUNCH_PER_NODE_NS / 1e9)
+        return [float(n.nbytes) for n in graph.nodes], 0.0
+
+    def __call__(self, graph: TransferGraph) -> TransferGraph:
+        n = graph.num_nodes
+        if n == 0:
+            return graph
+        weight, issue_s = self._weights(graph)
+        succs: dict[int, list[int]] = {}
+        indeg = [0] * n
+        for e in graph.edges:
+            succs.setdefault(e.src, []).append(e.dst)
+            indeg[e.dst] += 1
+        # downstream work along stored edges (each node has at most one
+        # hop successor and one window successor), for tie-breaking
+        down = list(weight)
+        for i in reversed(graph.topological_order()):
+            for j in succs.get(i, ()):
+                down[i] = max(down[i], weight[i] + down[j])
+        canonical = {i: (nd.window, nd.msg_idx, nd.chunk_idx, nd.path_idx,
+                         nd.hop_idx) for i, nd in enumerate(graph.nodes)}
+        slot_free: dict[tuple, float] = {}   # per-link serialization slot
+        finish: dict[int, float] = {}
+        preds: dict[int, list[int]] = {}
+        for e in graph.edges:
+            preds.setdefault(e.dst, []).append(e.src)
+        ready = {i for i in range(n) if indeg[i] == 0}
+        order: list[int] = []
+        while ready:
+            k = len(order)
+            best, best_key = None, None
+            for i in ready:
+                nd = graph.nodes[i]
+                slot = (nd.msg_idx, nd.path_idx, nd.window, nd.hop_idx)
+                start = max((finish[p] for p in preds.get(i, ())),
+                            default=0.0)
+                start = max(start, slot_free.get(slot, 0.0), k * issue_s)
+                key = (start + weight[i], -down[i], canonical[i])
+                if best_key is None or key < best_key:
+                    best, best_key = i, key
+            i = best
+            nd = graph.nodes[i]
+            slot = (nd.msg_idx, nd.path_idx, nd.window, nd.hop_idx)
+            start = max((finish[p] for p in preds.get(i, ())), default=0.0)
+            start = max(start, slot_free.get(slot, 0.0), k * issue_s)
+            finish[i] = slot_free[slot] = start + weight[i]
+            order.append(i)
+            ready.remove(i)
+            for j in succs.get(i, ()):
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    ready.add(j)
+        return reindex(graph, order)
+
+
+class AutoSchedule:
+    """Score every candidate dispatch order with the scheduled-DAG model
+    and pick the winner BEFORE compiling.
+
+    Candidates are the shipped concrete schedulers (``round_robin``
+    first); :func:`repro.core.pipelining.scheduled_time_s` arbitrates,
+    and a strict improvement is required to displace an earlier
+    candidate — so ``auto`` can never select a schedule the model scores
+    worse than ``round_robin``. Requires a
+    :class:`~repro.core.topology.Topology` (the model needs link
+    bandwidths). The §4.5 invariants hold because every candidate is a
+    contract-checked pass output.
+    """
+
+    name = "auto"
+
+    def __init__(self, topology: Topology):
+        self.topology = topology
+        self.candidates: tuple[GraphPass, ...] = (
+            RoundRobinSchedule(), DepthFirstSchedule(),
+            CriticalPathSchedule(topology))
+
+    def select(self, graph: TransferGraph
+               ) -> tuple[str, TransferGraph, dict[str, float]]:
+        """(winner name, scheduled graph, per-candidate modeled seconds)."""
+        from repro.core.pipelining import scheduled_time_s
+
+        scores: dict[str, float] = {}
+        best_name, best_graph, best_t = None, None, float("inf")
+        for cand in self.candidates:
+            scheduled = cand(graph)
+            check_pass(graph, scheduled)
+            t = scheduled_time_s(scheduled, self.topology)
+            scores[cand.name] = t
+            if t < best_t:                      # strict: ties keep earlier
+                best_name, best_graph, best_t = cand.name, scheduled, t
+        assert best_graph is not None
+        return best_name, best_graph, scores
+
+    def __call__(self, graph: TransferGraph) -> TransferGraph:
+        return self.select(graph)[1]
+
+
+def make_schedule(name: str, topology: Topology | None = None) -> GraphPass:
+    """Resolve a scheduler name from :data:`SCHEDULE_NAMES` to a pass.
+
+    ``topology`` feeds the model-weighted passes (``critical_path``
+    weights, ``auto`` scoring) and is required for ``auto``. The returned
+    object satisfies :class:`GraphPass` and the §2.2 contract.
+    """
+    if name == RoundRobinSchedule.name:
+        return RoundRobinSchedule()
+    if name == DepthFirstSchedule.name:
+        return DepthFirstSchedule()
+    if name == CriticalPathSchedule.name:
+        return CriticalPathSchedule(topology)
+    if name == AutoSchedule.name:
+        if topology is None:
+            raise ValueError("schedule 'auto' needs a topology to score "
+                             "candidate orders")
+        return AutoSchedule(topology)
+    raise ValueError(f"unknown schedule {name!r}; expected one of "
+                     f"{SCHEDULE_NAMES}")
+
+
+def apply_schedule(graph: TransferGraph,
+                   schedule: str | GraphPass = "round_robin",
+                   topology: Topology | None = None
+                   ) -> tuple[TransferGraph, str]:
+    """Apply one scheduler between ``lower()`` and the emitter.
+
+    The ONE entry point the engine, ``session.describe``, the dry-run,
+    and the benchmarks share: resolves ``schedule`` (name or pass
+    object), applies it, enforces the §2.2 contract (:func:`check_pass`)
+    so §4.5 invariants and digest semantics cannot be silently broken,
+    and returns ``(scheduled graph, concrete schedule name)`` — for
+    ``auto`` the name of the candidate the model actually picked.
+    """
+    sched = (make_schedule(schedule, topology)
+             if isinstance(schedule, str) else schedule)
+    if isinstance(sched, AutoSchedule):
+        name, scheduled, _ = sched.select(graph)   # candidates pre-checked
+        return scheduled, name
+    scheduled = sched(graph)
+    if scheduled is not graph:     # identity (e.g. default round_robin on
+        check_pass(graph, scheduled)  # a fresh lowering) is a provable no-op
+    return scheduled, sched.name
+
+
+def run_pipeline(graph: TransferGraph,
+                 passes: Iterable[str | GraphPass],
+                 topology: Topology | None = None) -> TransferGraph:
+    """Run a sequence of passes, contract-checked after each stage.
+
+    The general pass-pipeline hook (future passes — e.g. the host-staged
+    pricing rewrite on the ROADMAP — chain here ahead of a scheduler);
+    every stage is held to the §2.2 contract via :func:`apply_schedule`,
+    so invariants are re-validated and the final digest reflects the
+    composed schedule.
+    """
+    for p in passes:
+        graph, _ = apply_schedule(graph, p, topology)
+    return graph

@@ -20,6 +20,10 @@ training, serving, benchmarks, examples — drives communication through it:
   axis name, for use *inside* user ``shard_map`` programs,
 * ``session.plan(...)`` / ``session.tune(...)`` — planning and the offline
   tuner (paper §4.4),
+* every execution path runs the configured chunk-interleaving scheduler
+  (``CommConfig.schedule`` / ``CommSession(schedule="auto")`` / per-call
+  ``schedule=``) over the lowered transfer graph before compiling
+  (:mod:`repro.comm.passes`, DESIGN.md §2.2),
 * ``session.send_pytree(...)`` — P2P for arbitrary pytrees (e.g. serving
   KV-cache migration).
 
@@ -42,6 +46,7 @@ from repro.compat import shard_map
 from repro.comm.config import CommConfig
 from repro.comm.engine import MultiPathTransfer
 from repro.comm.graph import canonical_digest, lower
+from repro.comm.passes import GraphPass
 from repro.comm.plan import TransferPlan
 from repro.comm.planner import PathPlanner
 from repro.comm.policy import PathPolicy, make_policy
@@ -109,8 +114,14 @@ class CommSession:
                  mesh: jax.sharding.Mesh | None = None,
                  topology: Topology | None = None,
                  policy: PathPolicy | None = None,
-                 cache: TransferPlanCache | None = None):
+                 cache: TransferPlanCache | None = None,
+                 schedule: str | None = None):
         self.config = config if config is not None else CommConfig.from_env()
+        if schedule is not None:
+            # Convenience: CommSession(schedule="auto") — equivalent to
+            # replacing config.schedule (validated there against
+            # SCHEDULE_NAMES).
+            self.config = self.config.replace(schedule=schedule)
         self._mesh = mesh
         self.axis_name = (mesh.axis_names[0] if mesh is not None
                           else self.config.axis_name)
@@ -142,7 +153,8 @@ class CommSession:
             self._engine = MultiPathTransfer(self.mesh,
                                              topology=self.topology,
                                              planner=self.planner,
-                                             cache=self.cache)
+                                             cache=self.cache,
+                                             schedule=self.config.schedule)
         return self._engine
 
     @property
@@ -166,18 +178,23 @@ class CommSession:
     # -- point-to-point -----------------------------------------------------
     def send(self, x: jax.Array, src: int, dst: int, *,
              window: int | None = None, max_paths: int | None = None,
-             num_chunks: int | None = None, block: bool = True) -> jax.Array:
+             num_chunks: int | None = None,
+             schedule: str | GraphPass | None = None,
+             block: bool = True) -> jax.Array:
         """Send 1-D ``x`` from device ``src`` to ``dst``; returns the
-        received message. Compiled plans are cached (src, dst, size, config).
+        received message. Compiled plans are cached (src, dst, size,
+        config, dispatch schedule). ``schedule`` overrides the session's
+        chunk-interleaving scheduler for this call (DESIGN.md §2.2).
         """
         return self.engine.transfer(
             x, src, dst, window=self.config.window if window is None
             else window, max_paths=max_paths, num_chunks=num_chunks,
-            block=block)
+            schedule=schedule, block=block)
 
     def bidirectional(self, x: jax.Array, src: int, dst: int, *,
                       window: int | None = None, max_paths: int | None = None,
-                      num_chunks: int | None = None
+                      num_chunks: int | None = None,
+                      schedule: str | GraphPass | None = None
                       ) -> tuple[jax.Array, jax.Array]:
         """Simultaneous src→dst and dst→src of the same message (OMB BIBW).
 
@@ -189,13 +206,14 @@ class CommSession:
         fwd, rev = self.exchange(
             [(x, src, dst), (x, dst, src)],
             window=self.config.window if window is None else window,
-            max_paths=max_paths, num_chunks=num_chunks)
+            max_paths=max_paths, num_chunks=num_chunks, schedule=schedule)
         return fwd, rev
 
     def exchange(self, items, *, window: int | None = None,
                  max_paths: int | None = None,
                  num_chunks: int | None = None,
                  exclusive: bool = False,
+                 schedule: str | GraphPass | None = None,
                  block: bool = True) -> list[jax.Array]:
         """Execute a transfer group: ``items`` is a sequence of
         ``(x, src, dst)`` triples moved *concurrently*.
@@ -229,7 +247,7 @@ class CommSession:
                 [(src, dst) for _, _, src, dst in live],
                 window=self.config.window if window is None else window,
                 max_paths=max_paths, num_chunks=num_chunks,
-                exclusive=exclusive, block=block)
+                exclusive=exclusive, schedule=schedule, block=block)
             for (i, x, _, _), out in zip(live, outs):
                 results[i] = out.reshape(x.shape)
         return results  # type: ignore[return-value]
@@ -346,26 +364,63 @@ class CommSession:
 
     # -- introspection ------------------------------------------------------
     def describe(self, src: int, dst: int, nbytes: int, *,
-                 window: int | None = None, **plan_kwargs) -> dict:
+                 window: int | None = None,
+                 schedule: str | GraphPass | None = None,
+                 **plan_kwargs) -> dict:
         """Plan one message and report its transfer graph + model costs.
 
         Pure planning — no mesh, no compilation — so it works on
         planning-only sessions and is what the dry-run reporter and the
-        benchmarks consume. Returns the graph shape (copy nodes, dependency
-        edges, critical-path depth, canonical digest) and the analytic
-        model's costs, all derived from the SAME lowering the engine would
-        execute.
+        benchmarks consume. Returns the SCHEDULED graph's shape (copy
+        nodes, dependency edges, critical-path depth, canonical post-pass
+        digest — the cache-key ingredient) and the analytic model's
+        costs, all derived from the SAME lowering + scheduler pass the
+        engine would execute. The ``"schedule"`` section reports the
+        requested scheduler, the concrete order chosen (``auto`` resolves
+        to its winner), its modeled time, and the delta vs the
+        ``round_robin`` baseline (≤ 0 when the chosen order is modeled
+        faster); for ``auto`` it additionally carries the per-candidate
+        ``"candidates"`` scores its selection already computed.
         """
+        from repro.comm.passes import (AutoSchedule, apply_schedule,
+                                       make_schedule)
         from repro.core import pipelining as pl
 
         window = self.config.window if window is None else window
+        requested = self.config.schedule if schedule is None else schedule
         plan = self.plan(src, dst, nbytes, **plan_kwargs)
-        graph = lower(plan, window)
+        base_graph = lower(plan, window)
+        sched = (make_schedule(requested, self.topology)
+                 if isinstance(requested, str) else requested)
+        candidates = None
+        if isinstance(sched, AutoSchedule):
+            # Reuse the scores auto's selection computes anyway instead
+            # of re-evaluating the winner and the baseline.
+            chosen, graph, candidates = sched.select(base_graph)
+            scheduled_t = candidates[chosen]
+            baseline_t = candidates["round_robin"]
+        else:
+            graph, chosen = apply_schedule(base_graph, sched,
+                                           self.topology)
+            scheduled_t = pl.scheduled_time_s(graph, self.topology)
+            baseline_t = (scheduled_t if graph is base_graph else
+                          pl.scheduled_time_s(base_graph, self.topology))
         wire = pl.wire_time_s(plan, self.topology)
+        schedule_info = {
+            "requested": (requested if isinstance(requested, str)
+                          else requested.name),
+            "chosen": chosen,
+            "scheduled_time_s": scheduled_t,
+            "round_robin_time_s": baseline_t,
+            "delta_vs_round_robin_s": scheduled_t - baseline_t,
+        }
+        if candidates is not None:
+            schedule_info["candidates"] = candidates
         return {
             "src": src, "dst": dst, "nbytes": nbytes, "window": window,
             "topology": self.topology.name,
             "num_paths": plan.num_paths,
+            "schedule": schedule_info,
             "graph": {
                 "digest": graph.digest(),
                 "nodes": graph.num_nodes,
@@ -392,7 +447,11 @@ class CommSession:
         group (``exchange``, ``send_pytree``, ``bidirectional``) is ONE
         dispatch however many messages it carries. ``graph`` totals the
         copy nodes / dependency edges of every transfer graph this session
-        compiled (cache misses only)."""
+        compiled (cache misses only). ``schedule`` is the session's
+        default scheduler and ``schedules`` counts dispatch/compile
+        calls per concrete schedule resolved — ``auto`` counts as
+        whichever candidate it picked, and cache-hit launches count too
+        (unlike ``graph``, which totals cache misses only)."""
         eng = self._engine
         return {
             "cache": self.cache.stats(),
@@ -402,6 +461,8 @@ class CommSession:
                 "edges_compiled": eng.edges_compiled if eng else 0,
             },
             "policy": self.policy.name,
+            "schedule": self.config.schedule,
+            "schedules": dict(eng.schedule_counts) if eng else {},
             "topology": self.topology.name,
             "num_devices": self.topology.num_devices,
             "axis_name": self.axis_name,

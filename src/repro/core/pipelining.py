@@ -22,7 +22,11 @@ engine walks:
 * :func:`wire_time_s` / :func:`estimate_transfer_time_s` /
   :func:`estimate_group_time_s` evaluate the **critical path** of the DAG
   (hop edges + per-link serialization edges), and the launch-overhead
-  model prices per-node launch cost × graph node count.
+  model prices per-node launch cost × graph node count,
+* :func:`scheduled_time_s` is the schedule-*aware* variant: an exact
+  weighted longest path over a (possibly pass-reordered) graph, the
+  arbiter the ``auto`` scheduler in :mod:`repro.comm.passes` uses to
+  pick a dispatch order before compiling (DESIGN.md §2.2).
 
 Because this repo's execution substrate is XLA (no wall-clock TPU), the
 time model is calibrated-analytic; it captures exactly the effects the
@@ -337,6 +341,94 @@ def estimate_group_time_s(
             first_iteration=first_iteration) / 1e9
         makespan = max(makespan, dispatched + wire)
     return makespan
+
+
+def graph_node_weights_s(graph: "TransferGraph", topo: Topology
+                         ) -> list[float]:
+    """Per-node copy time in seconds: actual chunk bytes over the link's
+    contended bandwidth — THE §4.4 node-weight model.
+
+    Contention is derived from the graph itself: one share per (message,
+    path) using a directional link, host capacity split across
+    host-staged paths — the same counting :func:`_contention` derives
+    from plans. Shared by :func:`scheduled_time_s` (the arbiter) and the
+    ``critical_path`` scheduler in :mod:`repro.comm.passes`, so the
+    greedy pass optimizes exactly the objective the ``auto`` scorer
+    rates it on. Raises ``ValueError`` when a graph link is absent from
+    ``topo`` (the graph and topology must agree).
+    """
+    paths_on: dict[tuple[int, int], set] = defaultdict(set)
+    host_paths: set = set()
+    for node in graph.nodes:
+        paths_on[node.link].add((node.msg_idx, node.path_idx))
+        if HOST in node.link:
+            host_paths.add((node.msg_idx, node.path_idx))
+    weight = []
+    for node in graph.nodes:
+        link = topo.link(*node.link)
+        if link is None:
+            raise ValueError(f"graph link {node.link} not in topology "
+                             f"{topo.name}")
+        share = max(1, len(paths_on[node.link]))
+        if HOST in node.link and len(host_paths) > 1:
+            share = max(share, len(host_paths))
+        weight.append(node.nbytes / (link.bandwidth_gbps * 1e9 / share))
+    return weight
+
+
+def scheduled_time_s(graph: "TransferGraph", topo: Topology, *,
+                     compiled_plan: bool = True,
+                     first_iteration: bool = False) -> float:
+    """Modeled end-to-end time of a *scheduled* transfer graph (§2.2).
+
+    Unlike the closed-form :func:`wire_time_s` (which is schedule-blind —
+    it reduces the DAG to per-path chunk counts), this is an exact
+    weighted longest-path evaluation over the scheduled DAG, which is how
+    a chunk-interleaving pass becomes visible to the model:
+
+    * **node weight** — the node's actual chunk bytes over its link's
+      contended bandwidth (remainder chunks really are bigger, which is
+      what makes chunk *order* matter on staged paths),
+    * **edges** — stored hop + window edges, plus the derived per-link
+      serialization edges, which follow dispatch (node-index) order
+      (:meth:`TransferGraph.serialization_edges`),
+    * **issue chain** — node *i*'s copy cannot start before its launch
+      slot ``i × per-node launch cost`` (the paper's point that dispatch
+      order is a property of the captured graph: a depth-first order
+      delays the last path's first chunk by every earlier path's issue
+      slots, a round-robin order staggers them evenly).
+
+    Used by the ``auto`` scheduler and ``session.describe`` to score
+    candidate dispatch orders of the SAME lowering against each other;
+    absolute values are comparable to :func:`estimate_transfer_time_s`
+    but not identical (that closed form prices uniform chunk sizes).
+    """
+    n = graph.num_nodes
+    if n == 0:
+        return 0.0
+    weight = graph_node_weights_s(graph, topo)
+    preds: dict[int, list[int]] = defaultdict(list)
+    for e in graph.edges:
+        preds[e.dst].append(e.src)
+    for a, b in graph.serialization_edges():
+        preds[b].append(a)
+    per_node_ns = (GRAPH_LAUNCH_PER_NODE_NS if compiled_plan
+                   else LAUNCH_NS_PER_NODE)
+    finish = [0.0] * n
+    for idx in graph.topological_order():
+        start = idx * per_node_ns / 1e9          # serialized issue chain
+        for p in preds[idx]:
+            start = max(start, finish[p])
+        finish[idx] = start + weight[idx]
+    num_paths = len({(nd.msg_idx, nd.path_idx) for nd in graph.nodes})
+    if compiled_plan:
+        base = GRAPH_LAUNCH_BASE_NS
+        if first_iteration:
+            base += (GRAPH_INSTANTIATE_BASE_NS
+                     + n * GRAPH_INSTANTIATE_PER_NODE_NS)
+    else:
+        base = num_paths * SYNC_NS_PER_PATH
+    return max(finish) + base / 1e9
 
 
 def effective_bandwidth_gbps(plan: TransferPlan, topo: Topology, *,

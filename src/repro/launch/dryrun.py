@@ -165,14 +165,18 @@ def _comm_topologies():
 
 
 def run_comm_dryrun(out_path: str) -> list[dict]:
-    """Plan-only sweep: ``session.describe`` over topology × size × paths.
+    """Plan-only sweep: ``session.describe`` over topology × size × paths,
+    plus a schedule sweep over the shipped chunk-interleaving passes.
 
-    Every row is one transfer graph — node/edge counts, critical-path
-    depth, canonical digest, and the analytic model's costs. Appended to
-    ``out_path`` (replacing stale comm rows) next to the model-cell rows
-    so one JSON feeds ``repro.launch.report``.
+    Every ``comm_graph`` row is one transfer graph — node/edge counts,
+    critical-path depth, canonical digest, and the analytic model's
+    costs; every ``comm_schedule`` row is one (topology, size, scheduler)
+    cell with the scheduled graph's modeled time and its delta vs the
+    ``round_robin`` baseline (DESIGN.md §2.2). Appended to ``out_path``
+    (replacing stale comm rows) next to the model-cell rows so one JSON
+    feeds ``repro.launch.report``.
     """
-    from repro.comm import CommConfig, CommSession
+    from repro.comm import SCHEDULE_NAMES, CommConfig, CommSession
 
     MiB = 1 << 20
     rows = []
@@ -194,16 +198,37 @@ def run_comm_dryrun(out_path: str) -> list[dict]:
                       f"cp={d['graph']['critical_path_nodes']} "
                       f"bw={d['model']['effective_gbps']:.1f}GB/s",
                       flush=True)
+        for nbytes in (8 * MiB, 64 * MiB):
+            for sched in SCHEDULE_NAMES:
+                d = sess.describe(0, 1, nbytes, max_paths=3,
+                                  schedule=sched)
+                s = d["schedule"]
+                rows.append({
+                    "kind": "comm_schedule", "status": "ok",
+                    "topology": topo_name, "nbytes": nbytes,
+                    "schedule": sched, "chosen": s["chosen"],
+                    "nodes": d["graph"]["nodes"],
+                    "digest": d["graph"]["digest"],
+                    "scheduled_time_s": s["scheduled_time_s"],
+                    "delta_vs_round_robin_s":
+                        s["delta_vs_round_robin_s"],
+                })
+                print(f"SCHED {topo_name} {nbytes >> 20}MiB "
+                      f"{sched}->{s['chosen']} "
+                      f"t={s['scheduled_time_s'] * 1e6:.1f}us "
+                      f"d={s['delta_vs_round_robin_s'] * 1e9:.0f}ns",
+                      flush=True)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     results = []
     if os.path.exists(out_path):
         with open(out_path) as f:
             results = json.load(f)
-    results = [r for r in results if r.get("kind") != "comm_graph"]
+    results = [r for r in results
+               if r.get("kind") not in ("comm_graph", "comm_schedule")]
     results.extend(rows)
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1)
-    print(f"\ncomm dry-run complete: {len(rows)} transfer graphs")
+    print(f"\ncomm dry-run complete: {len(rows)} rows")
     return rows
 
 

@@ -1,8 +1,10 @@
 """Generate EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSON.
 
-Renders both row kinds the dry-run driver emits: model compilation cells
-and ``--comm`` transfer-graph rows (copy-node/edge counts, critical-path
-depth, modeled bandwidth — see ``session.describe``).
+Renders every row kind the dry-run driver emits: model compilation cells,
+``--comm`` transfer-graph rows (copy-node/edge counts, critical-path
+depth, modeled bandwidth — see ``session.describe``), and the
+``--comm`` schedule-sweep rows (modeled time per chunk-interleaving
+scheduler, DESIGN.md §2.2).
 
 Usage: PYTHONPATH=src python -m repro.launch.report \
            experiments/dryrun_results.json > experiments/roofline.md
@@ -61,23 +63,46 @@ def fmt_comm_table(rows: list[dict]) -> str:
     return "\n".join(out) + "\n"
 
 
+def fmt_schedule_table(rows: list[dict]) -> str:
+    """§Schedule sweep — modeled time per chunk-interleaving scheduler
+    (DESIGN.md §2.2); delta is vs the ``round_robin`` baseline order."""
+    out = [
+        "### Schedule sweep (`--comm` dry-run)\n",
+        "| topology | MiB | schedule | chosen | nodes | modeled µs | "
+        "Δ vs round_robin ns |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["topology"], r["nbytes"],
+                                         r["schedule"])):
+        out.append(
+            f"| {r['topology']} | {r['nbytes'] >> 20} | {r['schedule']} "
+            f"| {r['chosen']} | {r['nodes']} "
+            f"| {r['scheduled_time_s'] * 1e6:.1f} "
+            f"| {r['delta_vs_round_robin_s'] * 1e9:+.0f} |")
+    return "\n".join(out) + "\n"
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else \
         "experiments/dryrun_results.json"
     rows = json.load(open(path))
     comm = [r for r in rows if r.get("kind") == "comm_graph"]
-    rows = [r for r in rows if r.get("kind") != "comm_graph"]
+    sched = [r for r in rows if r.get("kind") == "comm_schedule"]
+    rows = [r for r in rows
+            if r.get("kind") not in ("comm_graph", "comm_schedule")]
     ok = [r for r in rows if r["status"] == "ok"]
     sk = [r for r in rows if r["status"] == "skipped"]
     print(f"Cells: {len(ok)} compiled, {len(sk)} skipped, "
           f"{len(rows) - len(ok) - len(sk)} errors; "
-          f"{len(comm)} transfer graphs.\n")
+          f"{len(comm)} transfer graphs; {len(sched)} schedule cells.\n")
     for mesh in ("single_pod_16x16", "multi_pod_2x16x16"):
         sub = [r for r in rows if r["mesh"] == mesh]
         if sub:
             print(fmt_table(sub, mesh))
     if comm:
         print(fmt_comm_table(comm))
+    if sched:
+        print(fmt_schedule_table(sched))
 
 
 if __name__ == "__main__":

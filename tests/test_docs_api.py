@@ -1,0 +1,111 @@
+"""docs/api.md is auto-checked: every public symbol of the pass-facing
+modules (``repro.comm.passes``, ``repro.comm.graph``) must
+
+* appear in the reference page,
+* carry a docstring that names its invariant obligations (the §2.2 /
+  §4.5 vocabulary — a symbol whose docs don't say what a pass may rely
+  on or must preserve is a contract gap),
+* and every public method/property of the public classes must be
+  documented at all.
+
+This is the satellite guard for the DESIGN §2.2 pass-author contract:
+the prose contract cannot silently drift from the code surface.
+"""
+
+import inspect
+import pathlib
+import re
+
+import pytest
+
+import repro.comm.graph as graph_mod
+import repro.comm.passes as passes_mod
+
+DOCS = pathlib.Path(__file__).resolve().parents[1] / "docs" / "api.md"
+
+#: A docstring "mentions its invariant obligations" when it uses the
+#: contract vocabulary: what §4.5/§2.2 property it preserves, validates,
+#: digests, or may rely on.
+_OBLIGATION = re.compile(
+    r"invariant|validate|digest|§4\.5|§2\.2|contract|preserve",
+    re.IGNORECASE)
+
+
+def _public_symbols(module):
+    out = []
+    for name, obj in vars(module).items():
+        if name.startswith("_"):
+            continue
+        # Any public callable counts — functools wrappers included
+        # (``lower`` is lru_cache-wrapped; functools.wraps preserves
+        # __module__ and __doc__, so the gate still applies to it).
+        if not (inspect.isclass(obj) or callable(obj)):
+            continue
+        if getattr(obj, "__module__", None) != module.__name__:
+            continue  # re-exports (e.g. typing.Protocol machinery)
+        out.append((name, obj))
+    assert out, f"no public symbols found in {module.__name__}"
+    return out
+
+
+def test_gate_covers_wrapped_entry_points():
+    """The main lowering entry point must not slip through the gate
+    because of its lru_cache wrapper (regression for the checker)."""
+    assert "lower" in dict(_public_symbols(graph_mod))
+    assert "apply_schedule" in dict(_public_symbols(passes_mod))
+
+
+@pytest.mark.parametrize("module", [graph_mod, passes_mod],
+                         ids=lambda m: m.__name__)
+def test_public_symbols_state_their_obligations(module):
+    missing, undocumented = [], []
+    for name, obj in _public_symbols(module):
+        doc = inspect.getdoc(obj)
+        if not doc:
+            undocumented.append(name)
+        elif not _OBLIGATION.search(doc):
+            missing.append(name)
+    assert not undocumented, (
+        f"{module.__name__}: public symbols without docstrings: "
+        f"{undocumented}")
+    assert not missing, (
+        f"{module.__name__}: docstrings that never mention their "
+        f"invariant obligations (§2.2 contract vocabulary): {missing}")
+
+
+@pytest.mark.parametrize("module", [graph_mod, passes_mod],
+                         ids=lambda m: m.__name__)
+def test_public_class_members_are_documented(module):
+    gaps = []
+    for cls_name, cls in _public_symbols(module):
+        if not inspect.isclass(cls):
+            continue
+        for name, member in vars(cls).items():
+            if name.startswith("_"):
+                continue
+            target = member.fget if isinstance(member, property) else (
+                getattr(member, "func", member))  # cached_property
+            if not callable(target):
+                continue  # plain class attributes (e.g. ``name = "..."``)
+            if not inspect.getdoc(target):
+                gaps.append(f"{cls_name}.{name}")
+    assert not gaps, (
+        f"{module.__name__}: public class members without docstrings: "
+        f"{gaps}")
+
+
+@pytest.mark.parametrize("module", [graph_mod, passes_mod],
+                         ids=lambda m: m.__name__)
+def test_reference_page_lists_every_symbol(module):
+    text = DOCS.read_text()
+    absent = [name for name, _ in _public_symbols(module)
+              if f"`{name}" not in text]
+    assert not absent, (
+        f"docs/api.md does not list {module.__name__} symbols: {absent}")
+
+
+def test_module_docstrings_carry_the_contract():
+    for module in (graph_mod, passes_mod):
+        doc = inspect.getdoc(module)
+        assert doc and _OBLIGATION.search(doc)
+    assert "§2.2" in inspect.getdoc(passes_mod)

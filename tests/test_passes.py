@@ -1,0 +1,308 @@
+"""Graph-pass pipeline: scheduler semantics, the §2.2 pass contract,
+post-pass cache keys, and the per-scheduler equal-graph acceptance.
+
+Acceptance criteria exercised here (ISSUE 4):
+
+* ``round_robin`` scheduled graph is node-for-node identical (same
+  digest, same object) to today's lowering,
+* ``depth_first`` and ``critical_path`` outputs pass every §4.5
+  invariant while digesting apart from the baseline,
+* ``auto`` never selects a schedule the model scores worse than
+  ``round_robin``,
+* ``GroupKey`` incorporates the POST-pass digest: two schedules of the
+  same plan get distinct cache entries and never cross-serve
+  executables,
+* traced ``ppermute`` count == scheduled ``graph.num_nodes`` for every
+  shipped scheduler.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (CommConfig, CommSession, PathPlanner,
+                        SCHEDULE_NAMES, TransferPlanCache)
+from repro.comm.graph import DepEdge, TransferGraph, lower
+from repro.comm.passes import (AutoSchedule, CriticalPathSchedule,
+                               DepthFirstSchedule, RoundRobinSchedule,
+                               apply_schedule, check_pass, make_schedule,
+                               reindex, run_pipeline)
+from repro.core import Topology, scheduled_time_s
+
+MiB = 1 << 20
+CONCRETE = ("round_robin", "depth_first", "critical_path")
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return Topology.full_mesh(8, with_host=False, name="mesh8")
+
+
+@pytest.fixture(scope="module")
+def planner(topo):
+    return PathPlanner(topo, multipath_threshold=256)
+
+
+@pytest.fixture(scope="module")
+def plan(planner):
+    # Multi-path, multi-chunk, uneven size: orders genuinely differ and
+    # the remainder chunk gives critical_path something to move.
+    return planner.plan(0, 1, 8 * MiB + 12_288, max_paths=3, num_chunks=4,
+                        granularity=4)
+
+
+# ------------------------- scheduler semantics ------------------------------
+
+def test_round_robin_is_todays_lowering(plan):
+    """ACCEPTANCE: round_robin == today's lowering, node-for-node."""
+    for window in (1, 3):
+        graph = lower(plan, window)
+        scheduled, chosen = apply_schedule(graph, "round_robin")
+        assert chosen == "round_robin"
+        assert scheduled is graph                  # identity, not a copy
+        assert scheduled.digest() == graph.digest()
+
+
+@pytest.mark.parametrize("name", ["depth_first", "critical_path"])
+def test_reordering_passes_preserve_invariants(plan, topo, name):
+    """ACCEPTANCE: depth_first / critical_path pass all §4.5 invariants
+    on the scheduled graph and keep the node multiset intact."""
+    graph = lower(plan, 2)
+    scheduled, _ = apply_schedule(graph, name, topo)
+    scheduled.validate({0: plan.nbytes})           # §4.5 on the output
+    assert scheduled.num_nodes == graph.num_nodes
+    assert scheduled.num_edges == graph.num_edges
+    assert (sorted(map(dataclasses.astuple, scheduled.nodes))
+            == sorted(map(dataclasses.astuple, graph.nodes)))
+    # index order is a valid topological order (the emitter's walk)
+    order = scheduled.topological_order()
+    assert order == sorted(order)
+
+
+def test_depth_first_drains_paths(plan):
+    graph, _ = apply_schedule(lower(plan), "depth_first")
+    seen_paths = [n.path_idx for n in graph.nodes]
+    # once we leave a path we never return to it (within one window/msg)
+    firsts = {p: seen_paths.index(p) for p in set(seen_paths)}
+    lasts = {p: len(seen_paths) - 1 - seen_paths[::-1].index(p)
+             for p in set(seen_paths)}
+    spans = sorted((firsts[p], lasts[p]) for p in firsts)
+    for (_, last_a), (first_b, _) in zip(spans, spans[1:]):
+        assert last_a < first_b
+
+
+def test_schedules_digest_apart(plan, topo):
+    graph = lower(plan)
+    digests = {apply_schedule(graph, n, topo)[0].digest()
+               for n in CONCRETE}
+    assert len(digests) == 3
+
+
+def test_auto_never_worse_than_round_robin(planner, topo):
+    """ACCEPTANCE: auto's pick is never modeled slower than round_robin."""
+    for nbytes in (256, 1 * MiB, 8 * MiB + 12_288, 64 * MiB):
+        for max_paths in (1, 2, 3):
+            p = planner.plan(0, 1, nbytes, max_paths=max_paths)
+            graph = lower(p)
+            auto = make_schedule("auto", topo)
+            name, scheduled, scores = auto.select(graph)
+            assert scores[name] == min(scores.values())
+            assert scores[name] <= scores["round_robin"]
+            assert scheduled_time_s(scheduled, topo) <= scheduled_time_s(
+                graph, topo)
+
+
+def test_auto_requires_topology():
+    with pytest.raises(ValueError, match="topology"):
+        make_schedule("auto")
+    with pytest.raises(ValueError, match="unknown schedule"):
+        make_schedule("zigzag")
+
+
+def test_group_scheduling(planner, topo):
+    group = planner.plan_group([(0, 1, 4 * MiB), (1, 0, 4 * MiB),
+                                (2, 3, 2 * MiB)])
+    graph = lower(group, 2)
+    for name in CONCRETE + ("auto",):
+        scheduled, _ = apply_schedule(graph, name, topo)
+        scheduled.validate({i: p.nbytes for i, p in enumerate(group.plans)},
+                           cross_flow_exclusive=False)
+        assert scheduled.num_nodes == graph.num_nodes
+
+
+def test_run_pipeline_composes(plan, topo):
+    graph = lower(plan)
+    out = run_pipeline(graph, ["depth_first", "round_robin"], topo)
+    # round_robin restores the canonical order whatever came before
+    assert out.digest() == graph.digest()
+    out2 = run_pipeline(graph, [DepthFirstSchedule()], topo)
+    assert out2.digest() == apply_schedule(graph, "depth_first")[0].digest()
+
+
+# --------------------------- the §2.2 contract ------------------------------
+
+def test_reindex_rejects_non_permutation(plan):
+    graph = lower(plan)
+    with pytest.raises(ValueError, match="permutation"):
+        reindex(graph, list(range(graph.num_nodes - 1)))
+
+
+def test_reindex_rejects_anti_topological_order(plan):
+    graph = lower(plan)
+    order = list(range(graph.num_nodes))[::-1]     # hop chains reversed
+    with pytest.raises(ValueError, match="topological"):
+        reindex(graph, order)
+
+
+def test_check_pass_catches_node_mutation(plan):
+    graph = lower(plan)
+    n0 = graph.nodes[0]
+    bad = TransferGraph(
+        (dataclasses.replace(n0, nbytes=n0.nbytes + 4),) + graph.nodes[1:],
+        graph.edges, graph.window, graph.num_messages, graph.topology_name)
+    with pytest.raises(ValueError, match="node multiset"):
+        check_pass(graph, bad)
+
+
+def test_check_pass_catches_dropped_edge(plan):
+    graph = lower(plan)
+    bad = TransferGraph(graph.nodes, graph.edges[1:], graph.window,
+                        graph.num_messages, graph.topology_name)
+    with pytest.raises(ValueError, match="edge set"):
+        check_pass(graph, bad)
+
+
+def test_check_pass_catches_backward_edge(plan):
+    graph = lower(plan)
+    e0 = graph.edges[0]
+    bad = TransferGraph(graph.nodes,
+                        (DepEdge(e0.dst, e0.src, e0.kind),)
+                        + graph.edges[1:], graph.window,
+                        graph.num_messages, graph.topology_name)
+    with pytest.raises(ValueError, match="edge set|topological"):
+        check_pass(graph, bad)
+
+
+def test_check_pass_accepts_shipped_passes(plan, topo):
+    graph = lower(plan, 2)
+    for sched in (RoundRobinSchedule(), DepthFirstSchedule(),
+                  CriticalPathSchedule(topo), AutoSchedule(topo)):
+        check_pass(graph, sched(graph))
+
+
+# ----------------- post-pass cache keys (GroupKey bugfix) -------------------
+
+def test_group_key_uses_post_pass_digest(topo):
+    """REGRESSION: two schedules of the same plan must get distinct cache
+    entries (post-pass digest, not the pre-pass lowering digest) and never
+    cross-serve executables."""
+    cache = TransferPlanCache(capacity=8)
+    sess = CommSession(CommConfig(multipath_threshold=64), topology=topo,
+                       cache=cache)
+    msg = jnp.asarray(np.random.RandomState(7).randn(3001), jnp.float32)
+    out_rr = sess.send(msg, 0, 5, max_paths=3, num_chunks=4,
+                       schedule="round_robin")
+    out_df = sess.send(msg, 0, 5, max_paths=3, num_chunks=4,
+                       schedule="depth_first")
+    np.testing.assert_array_equal(np.asarray(out_rr), np.asarray(msg))
+    np.testing.assert_array_equal(np.asarray(out_df), np.asarray(msg))
+    keys = cache.keys()
+    assert len(keys) == 2                          # no cross-serving
+    assert keys[0].digest != keys[1].digest
+    plan = sess.plan_for(0, 5, 3001, jnp.float32, max_paths=3,
+                         num_chunks=4)
+    pre_pass = lower(plan).digest()
+    df_graph, _ = apply_schedule(lower(plan), "depth_first")
+    assert pre_pass in {k.digest for k in keys}        # round_robin entry
+    assert df_graph.digest() in {k.digest for k in keys}
+    assert df_graph.digest() != pre_pass               # post-pass differs
+    # re-sending under each schedule hits its own entry
+    sess.send(msg, 0, 5, max_paths=3, num_chunks=4, schedule="round_robin")
+    sess.send(msg, 0, 5, max_paths=3, num_chunks=4, schedule="depth_first")
+    assert cache.stats()["misses"] == 2
+    assert cache.stats()["hits"] == 2
+    assert sess.stats()["schedules"] == {"round_robin": 2,
+                                         "depth_first": 2}
+
+
+def test_session_default_schedule_config(topo, monkeypatch):
+    monkeypatch.setenv("REPRO_MP_SCHEDULE", "depth_first")
+    assert CommConfig.from_env().schedule == "depth_first"
+    with pytest.raises(ValueError, match="unknown schedule"):
+        CommConfig(schedule="nope")
+    sess = CommSession(schedule="auto", topology=topo)
+    assert sess.config.schedule == "auto"
+    assert sess.stats()["schedule"] == "auto"
+    assert set(SCHEDULE_NAMES) == {"round_robin", "depth_first",
+                                   "critical_path", "auto"}
+
+
+def test_describe_reports_schedule(topo):
+    sess = CommSession(CommConfig(multipath_threshold=256), topology=topo)
+    d = sess.describe(0, 1, 8 * MiB + 12_288, max_paths=3, schedule="auto",
+                      granularity=4, num_chunks=4)
+    s = d["schedule"]
+    assert s["requested"] == "auto"
+    assert s["chosen"] in CONCRETE
+    assert s["scheduled_time_s"] <= s["round_robin_time_s"]
+    assert s["delta_vs_round_robin_s"] <= 0
+    plan = sess.plan(0, 1, 8 * MiB + 12_288, max_paths=3, granularity=4,
+                     num_chunks=4)
+    scheduled, _ = apply_schedule(lower(plan), s["chosen"], topo)
+    assert d["graph"]["digest"] == scheduled.digest()
+
+
+# ------------------- equal-graph acceptance per scheduler -------------------
+
+def _count_ppermutes(fn, *abstract_args):
+    def count(jaxpr):
+        total = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "ppermute":
+                total += 1
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                    if isinstance(sub, jax.core.ClosedJaxpr):
+                        total += count(sub.jaxpr)
+                    elif isinstance(sub, jax.core.Jaxpr):
+                        total += count(sub)
+        return total
+    return count(jax.make_jaxpr(fn)(*abstract_args).jaxpr)
+
+
+@pytest.mark.parametrize("name", CONCRETE + ("auto",))
+def test_equal_graph_per_scheduler(topo, name):
+    """ACCEPTANCE: traced ppermute count == scheduled graph.num_nodes for
+    every shipped scheduler — the executable is a view of the scheduled
+    graph, whatever the dispatch order."""
+    sess = CommSession(CommConfig(multipath_threshold=256), topology=topo)
+    eng = sess.engine
+    plan = eng.plan_for(0, 1, 4096, max_paths=3, num_chunks=4)
+    graph = eng._group_graph((plan,), 2, name)
+    fn = eng._build_group_fn(graph, (4,))
+    traced = _count_ppermutes(fn, jax.ShapeDtypeStruct(
+        (2, eng.num_devices, 4096), jnp.float32))
+    assert traced == graph.num_nodes == 2 * plan.num_nodes
+
+
+@pytest.mark.parametrize("name", CONCRETE)
+def test_executed_transfer_per_scheduler(topo, name):
+    """End-to-end: every scheduler's program still moves the bytes."""
+    sess = CommSession(CommConfig(multipath_threshold=64), topology=topo)
+    msg = jnp.asarray(np.random.RandomState(11).randn(1000), jnp.float32)
+    out = sess.send(msg, 0, 5, max_paths=3, num_chunks=3, schedule=name)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(msg))
+
+
+def test_exchange_with_schedule(topo):
+    sess = CommSession(CommConfig(multipath_threshold=64), topology=topo,
+                       schedule="critical_path")
+    a = jnp.arange(512, dtype=jnp.float32)
+    b = -jnp.arange(512, dtype=jnp.float32)
+    fwd, rev = sess.exchange([(a, 0, 1), (b, 1, 0)], num_chunks=2)
+    np.testing.assert_array_equal(np.asarray(fwd), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(rev), np.asarray(b))
+    assert sum(sess.stats()["schedules"].values()) == 1

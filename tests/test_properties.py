@@ -16,8 +16,11 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.comm import (CommConfig, CommSession, PathPlanner,  # noqa: E402
                         TransferPlanCache)
 from repro.comm.graph import lower  # noqa: E402
+from repro.comm.passes import apply_schedule, check_pass  # noqa: E402
 from repro.core import (Topology, build_schedule,  # noqa: E402
                         validate_group, validate_plan)
+
+_ALL_SCHEDULES = ("round_robin", "depth_first", "critical_path", "auto")
 
 MiB = 1 << 20
 
@@ -92,6 +95,77 @@ def test_lower_roundtrip_property(nbytes, max_paths, chunks, gran_pow,
                       if n.path_idx == p_idx and n.window == 0})
         assert got == sorted(pa.chunk_bounds())
     assert lower(plan, window).digest() == graph.digest()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    nbytes=st.integers(1, 128 * MiB),
+    max_paths=st.integers(1, 4),
+    chunks=st.one_of(st.none(), st.integers(1, 16)),
+    gran_pow=st.integers(0, 3),
+    host=st.booleans(),
+    src=st.integers(0, 3), dst=st.integers(0, 3),
+    window=st.integers(1, 3),
+)
+def test_pass_invariants_property(nbytes, max_paths, chunks, gran_pow,
+                                  host, src, dst, window):
+    """Every shipped scheduler pass preserves ``graph.validate()`` and
+    the exact ``chunk_bounds()`` round-trip on arbitrary plans — the
+    §2.2 contract property (byte cover and hop chains fixed, dispatch
+    order free), plus digest identity for the round_robin baseline."""
+    if src == dst:
+        return
+    gran = 2 ** gran_pow
+    nbytes = max(gran, nbytes // gran * gran)
+    topo = Topology.full_mesh(4)
+    planner = PathPlanner(topo)
+    plan = planner.plan(src, dst, nbytes, max_paths=max_paths,
+                        include_host=host, num_chunks=chunks,
+                        granularity=gran)
+    graph = lower(plan, window)
+    for name in _ALL_SCHEDULES:
+        scheduled, chosen = apply_schedule(graph, name, topo)
+        check_pass(graph, scheduled)            # full §2.2 contract
+        scheduled.validate({0: plan.nbytes})    # §4.5 with coverage totals
+        assert scheduled.num_nodes == graph.num_nodes
+        assert scheduled.num_edges == graph.num_edges
+        for p_idx, pa in enumerate(plan.paths):
+            got = sorted({(n.offset, n.nbytes) for n in scheduled.nodes
+                          if n.path_idx == p_idx and n.window == 0})
+            assert got == sorted(pa.chunk_bounds())
+        if name == "round_robin":
+            assert chosen == "round_robin"
+            assert scheduled.digest() == graph.digest()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    pairs=st.lists(st.tuples(st.integers(0, 7), st.integers(0, 7)).filter(
+        lambda p: p[0] != p[1]), min_size=1, max_size=4, unique=True),
+    sizes=st.lists(st.integers(64, 4 * MiB), min_size=4, max_size=4),
+    window=st.integers(1, 2),
+)
+def test_group_pass_invariants_property(pairs, sizes, window):
+    """The §2.2 pass contract holds on randomized fused GROUPS too: every
+    message's byte cover survives every scheduler, per-message §4.5
+    invariants re-validate, and node/edge counts are preserved."""
+    topo = Topology.full_mesh(8, with_host=False)
+    planner = PathPlanner(topo, multipath_threshold=256)
+    reqs = [(s, d, n) for (s, d), n in zip(pairs, sizes)]
+    group = planner.plan_group(reqs)
+    graph = lower(group, window)
+    totals = {i: p.nbytes for i, p in enumerate(group.plans)}
+    for name in _ALL_SCHEDULES:
+        scheduled, _ = apply_schedule(graph, name, topo)
+        check_pass(graph, scheduled)
+        scheduled.validate(totals, cross_flow_exclusive=False)
+        assert scheduled.num_nodes == graph.num_nodes
+        for m_idx, plan in enumerate(group.plans):
+            per_msg = sorted((n.offset, n.nbytes) for n in scheduled.nodes
+                             if n.msg_idx == m_idx and n.hop_idx == 0
+                             and n.window == 0)
+            assert per_msg == sorted(
+                b for pa in plan.paths for b in pa.chunk_bounds())
 
 
 _pairs8 = st.tuples(st.integers(0, 7), st.integers(0, 7)).filter(
