@@ -1,0 +1,171 @@
+"""Steady-state dispatch latency — cold vs warm-key vs fast path (§2.3).
+
+The paper's Fig. 13/14 story is "setup once, launch many": once a
+``cudaGraphExec_t`` exists, a launch is one ``cudaGraphLaunch``. This
+benchmark measures what OUR dispatch actually pays per call, as a
+function of transfer-graph node count:
+
+* **cold** — fresh session, first send: planner + lower + pass + digest
+  + trace/lower/compile + staging + launch (the one-time cost),
+* **warm-key** — ``fastpath=False``: the compiled program is served from
+  the plan cache but every dispatch still re-runs the
+  plan→lower→schedule→digest pipeline (the pre-§2.3 steady state),
+* **fast-path** — ``fastpath=True``: one epoch-checked dict lookup +
+  pooled staging + launch.
+
+``setup_*`` rows isolate the resolution stage (everything before
+staging/launch) so the acceptance ratio — fast-path setup ≥ 5x cheaper
+than the cold/warm setup — is measured directly, not inferred. A final
+row reports the group-dedup hit-rate delta from canonical message
+identity (permuted operand order collides on one entry; ROADMAP
+"graph-level cache dedup").
+"""
+
+import time
+
+from benchmarks import common
+from benchmarks.common import Row, timeit_us
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CommConfig, CommSession
+from repro.core import Topology
+
+NELEMS = 1 << 15     # 128 KiB f32 — multipath engages, compiles stay quick
+ITERS = 10
+
+
+def _session(fastpath: bool):
+    topo = Topology.full_mesh(4, with_host=False)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("dev",))
+    return CommSession(
+        CommConfig(multipath_threshold=64, fastpath=fastpath),
+        mesh=mesh, topology=topo)
+
+
+def _setup_us(sess, chunks: int, iters: int = ITERS) -> float:
+    """Mean time of the resolution stage only (no staging, no launch)."""
+    eng = sess.engine
+    specs = [(0, 1, NELEMS, jnp.float32)]
+    t0 = time.perf_counter_ns()
+    for _ in range(iters):
+        eng._resolve(specs, window=1, max_paths=3, num_chunks=chunks,
+                     exclusive=False, schedule=None, single=True)
+    return (time.perf_counter_ns() - t0) / iters / 1e3
+
+
+def _send_us(sess, msg, chunks: int) -> float:
+    return timeit_us(lambda: sess.send(msg, 0, 1, max_paths=3,
+                                       num_chunks=chunks),
+                     iters=ITERS, warmup=2)
+
+
+def _group_dedup_row() -> Row:
+    """Hit-rate delta from canonical message identity inside a group."""
+    sess = _session(fastpath=True)
+    msgs = [jnp.arange(4096, dtype=jnp.float32),
+            jnp.arange(2048, dtype=jnp.float32) * -1.0,
+            jnp.arange(1024, dtype=jnp.int32)]
+    pairs = [(0, 1), (1, 2), (2, 3)]
+    perms = [(0, 1, 2), (2, 0, 1), (1, 2, 0), (2, 1, 0)]
+    t0 = time.perf_counter_ns()
+    for perm in perms:
+        sess.exchange([(msgs[i], *pairs[i]) for i in perm])
+    us = (time.perf_counter_ns() - t0) / len(perms) / 1e3
+    fp = sess.stats()["fastpath"]
+    # Without canonicalization every permutation is its own miss/compile.
+    naive_misses = len(perms)
+    hit_rate = fp["hits"] / len(perms)
+    naive_rate = (len(perms) - naive_misses) / len(perms)
+    return Row("dispatch/group_dedup/hit_rate",
+               us, f"{fp['hits']}/{len(perms)}hits",
+               {"canonical_misses": fp["misses"],
+                "naive_misses": naive_misses,
+                "hit_rate": round(hit_rate, 3),
+                "hit_rate_delta_vs_order_keyed": round(
+                    hit_rate - naive_rate, 3),
+                "compiled_programs": sess.stats()["cache"]["size"]})
+
+
+def run() -> list[Row]:
+    rows = []
+    msg = jnp.arange(NELEMS, dtype=jnp.float32)
+    for chunks in common.DISPATCH_CHUNKS:
+        # -- cold: fresh session, first send end-to-end (incl. compile)
+        cold_sess = _session(fastpath=True)
+        t0 = time.perf_counter_ns()
+        setup_cold_us = _setup_us(cold_sess, chunks, iters=1)
+        jax.block_until_ready(cold_sess.send(msg, 0, 1, max_paths=3,
+                                             num_chunks=chunks))
+        cold_us = (time.perf_counter_ns() - t0) / 1e3
+        entry = next(iter(cold_sess.engine._fastpath._store.values()))[1]
+        nodes = entry.graph.num_nodes
+        counts = {"nodes": nodes, "edges": entry.graph.num_edges,
+                  "chunks_per_path": chunks}
+
+        # -- warm-key: plan-cache hits, full pipeline re-run per dispatch
+        warm_sess = _session(fastpath=False)
+        warm_us = _send_us(warm_sess, msg, chunks)
+        setup_warm_us = _setup_us(warm_sess, chunks)
+
+        # -- fast path: epoch-checked lookup + pooled staging + launch
+        fast_sess = _session(fastpath=True)
+        fast_us = _send_us(fast_sess, msg, chunks)
+        setup_fast_us = _setup_us(fast_sess, chunks)
+        fp = fast_sess.stats()["fastpath"]
+        staging_us = fp["staging_ns"] / 1e3 / max(
+            fast_sess.stats()["dispatches"], 1)
+
+        ratio_warm = setup_warm_us / max(setup_fast_us, 1e-9)
+        ratio_cold = setup_cold_us / max(setup_fast_us, 1e-9)
+        rows += [
+            Row(f"dispatch/nodes{nodes}/cold_first_send", cold_us,
+                "first_iter", counts),
+            Row(f"dispatch/nodes{nodes}/warm_key", warm_us,
+                "steady_state", counts),
+            Row(f"dispatch/nodes{nodes}/fastpath", fast_us,
+                "steady_state",
+                {**counts, "fastpath_hits": fp["hits"],
+                 "staging_dispatch_us_per_launch": round(staging_us, 2)}),
+            Row(f"dispatch/nodes{nodes}/setup_cold", setup_cold_us,
+                "plan+lower+pass+digest+instantiate", counts),
+            Row(f"dispatch/nodes{nodes}/setup_warm_key", setup_warm_us,
+                "plan+memo+digest", counts),
+            Row(f"dispatch/nodes{nodes}/setup_fastpath", setup_fast_us,
+                f"{ratio_warm:.0f}x_vs_warm",
+                {**counts,
+                 "setup_speedup_vs_warm_key": round(ratio_warm, 1),
+                 "setup_speedup_vs_cold": round(ratio_cold, 1)}),
+        ]
+    rows.append(_group_dedup_row())
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one chunk count only (CI smoke step)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    if args.smoke:
+        common.DISPATCH_CHUNKS[:] = common.DISPATCH_CHUNKS[:1]
+    rows = run()
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row.csv(), flush=True)
+    if args.json:
+        payload = [{"name": r.name, "us_per_call": round(r.us, 2),
+                    "derived": r.derived, **r.extra} for r in rows]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload)} rows to {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

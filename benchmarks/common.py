@@ -18,6 +18,9 @@ EXEC_SIZES = [1, 4, 16]                            # MiB actually executed
 #: Chunk-interleaving schedulers swept by bench_graph_overhead (the
 #: ``--schedule`` axis; ``run.py --schedule NAME`` narrows it in place).
 SCHEDULES = ["round_robin", "depth_first", "critical_path", "auto"]
+#: Per-path chunk counts swept by bench_dispatch (the node-count axis of
+#: the steady-state dispatch rows; --smoke shrinks it in place).
+DISPATCH_CHUNKS = [1, 4, 16]
 
 
 def timeit_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -26,16 +26,17 @@ def _apply_smoke() -> None:
     common.SIZES_PUT[:] = [1, 4]
     common.SIZES_OMB[:] = [1, 4]
     common.EXEC_SIZES[:] = [1]
+    common.DISPATCH_CHUNKS[:] = common.DISPATCH_CHUNKS[:1]
 
 
 def collect() -> list:
-    from benchmarks import (bench_collectives, bench_graph_overhead,
-                            bench_jacobi, bench_omb_bibw, bench_omb_bw,
-                            bench_put_bw)
+    from benchmarks import (bench_collectives, bench_dispatch,
+                            bench_graph_overhead, bench_jacobi,
+                            bench_omb_bibw, bench_omb_bw, bench_put_bw)
 
     rows = []
     for mod in (bench_put_bw, bench_omb_bw, bench_omb_bibw, bench_jacobi,
-                bench_graph_overhead, bench_collectives):
+                bench_graph_overhead, bench_dispatch, bench_collectives):
         rows.extend(mod.run())
     return rows
 

@@ -29,7 +29,7 @@ deprecated shims over this package.
 
 from repro.compat import make_mesh, shard_map  # noqa: F401
 from repro.comm.config import (  # noqa: F401
-    POLICY_NAMES, SCHEDULE_NAMES, CommConfig)
+    POLICY_NAMES, SCHEDULE_NAMES, VALIDATE_MODES, CommConfig)
 from repro.comm.plan import (  # noqa: F401
     PathAssignment, TransferGroup, TransferPlan, TransferRequest)
 from repro.comm.graph import (  # noqa: F401
@@ -43,7 +43,8 @@ from repro.comm.policy import (  # noqa: F401
     contention_scaled, make_policy)
 from repro.comm.planner import PathPlanner  # noqa: F401
 from repro.comm.cache import (  # noqa: F401
-    CompiledPlan, PlanLifecycle, TransferPlanCache, compile_plan)
+    CompiledPlan, FastPathCache, FastPathEntry, PlanLifecycle,
+    TransferPlanCache, compile_plan)
 from repro.comm.collectives import (  # noqa: F401
     bidir_ring_all_gather, bidir_ring_reduce_scatter, multipath_all_reduce,
     multipath_all_to_all, psum_via_multipath)

@@ -15,6 +15,12 @@ launch             dispatch of the compiled executable (cheap)
 
 Every stage is timed so the lifecycle benchmark (paper Fig. 13/14) can report
 first-iteration vs steady-state costs as a function of plan node count.
+
+Steady-state dispatch additionally fronts this cache with a
+:class:`FastPathCache` (DESIGN.md §2.3): entries memoize the *entire*
+plan→lower→schedule→digest pipeline keyed on the request signature and an
+explicit planner/topology epoch, so a repeat transfer is one dict lookup +
+one staging write + one executable launch.
 """
 
 from __future__ import annotations
@@ -31,7 +37,19 @@ from repro.comm.config import _env_int
 
 @dataclasses.dataclass
 class PlanLifecycle:
-    """Nanosecond timings of each lifecycle stage for one cached plan."""
+    """Nanosecond timings of each lifecycle stage for one cached plan.
+
+    The per-stage attribution the paper's Fig. 13/14 overhead analysis
+    needs (and ucTrace-style layered profiling motivates): build stages
+    are one-time, ``launches``/``total_launch_ns`` accumulate steady
+    state, ``staging_ns`` isolates the host-side *dispatch* of operand
+    staging (staging execution overlaps the launch via dataflow and is
+    accounted in the launch timings), and ``fastpath_hits`` counts
+    dispatches that skipped the whole plan→lower→digest pipeline.
+    Timings are measurements, not semantics — they carry no §4.5
+    invariant obligations and must never feed cache keys (digest-derived
+    keys only).
+    """
 
     trace_ns: int = 0        # python trace → jaxpr ("construction" part 1)
     lower_ns: int = 0        # jaxpr → StableHLO ("construction" part 2)
@@ -39,19 +57,38 @@ class PlanLifecycle:
     launches: int = 0
     total_launch_ns: int = 0
     num_nodes: int = 0       # copy-node count (chunks × hops)
+    #: Dispatches of this executable served by the FastPathCache — the
+    #: launches whose setup cost was one dict lookup.
+    fastpath_hits: int = 0
+    #: Cumulative nanoseconds spent dispatching operand staging (host-
+    #: side enqueue) across every launch of this executable.
+    staging_ns: int = 0
 
     @property
     def build_ns(self) -> int:
+        """One-time cost: trace + lower + compile (the paper's graph
+        creation/construction/instantiation, amortized over launches)."""
         return self.trace_ns + self.lower_ns + self.compile_ns
 
     @property
     def mean_launch_ns(self) -> float:
+        """Steady-state cost per launch (0.0 before the first launch)."""
         return self.total_launch_ns / self.launches if self.launches else 0.0
 
 
 @dataclasses.dataclass
 class CompiledPlan:
-    """An instantiated transfer graph: XLA executable + lifecycle stats."""
+    """An instantiated transfer graph: XLA executable + lifecycle stats.
+
+    The ``cudaGraphExec_t`` analogue. ``key`` must be digest-derived
+    (:class:`~repro.comm.engine.GroupKey` /
+    :class:`~repro.comm.session.CollectiveKey`) so the executable can
+    never outlive the graph identity it was compiled for; callers must
+    preserve the operand shapes/shardings the plan was compiled with —
+    and, when the plan was compiled with donation
+    (:func:`compile_plan` ``donate_argnums``), must not reuse operand
+    arrays after a launch consumed them.
+    """
 
     key: Hashable
     compiled: Any            # jax.stages.Compiled
@@ -78,7 +115,14 @@ class CompiledPlan:
 
 def compile_plan(key: Hashable, fn: Callable, abstract_args: tuple,
                  num_nodes: int = 0, **jit_kwargs) -> CompiledPlan:
-    """Run the full trace→lower→compile pipeline with per-stage timing."""
+    """Run the full trace→lower→compile pipeline with per-stage timing.
+
+    ``jit_kwargs`` pass straight through to ``jax.jit`` — in particular
+    ``donate_argnums``, which the engine uses so XLA reuses staging
+    buffers launch-to-launch (a donated executable's contract obligates
+    the caller never to reuse a consumed operand; the engine's pooled
+    staging preserves that by rebuilding operands every launch).
+    """
     life = PlanLifecycle(num_nodes=num_nodes)
     jitted = jax.jit(fn, **jit_kwargs)
     t0 = time.perf_counter_ns()
@@ -98,7 +142,10 @@ class TransferPlanCache:
     Capacity defaults to ``REPRO_PLAN_CACHE_SIZE`` (paper: tunable via
     environment variables). Eviction counts are exposed for the overhead
     analysis: an eviction forces a re-instantiation on the next use, the
-    dominant first-iteration cost.
+    dominant first-iteration cost. Keys must be digest-derived
+    (§2.2: schedules digest apart, so two dispatch orders of one plan can
+    never cross-serve executables); the cache itself never inspects
+    them.
     """
 
     def __init__(self, capacity: int | None = None):
@@ -118,6 +165,8 @@ class TransferPlanCache:
         return key in self._store
 
     def get(self, key: Hashable) -> CompiledPlan | None:
+        """Look up a compiled plan, counting the hit/miss and refreshing
+        LRU recency."""
         plan = self._store.get(key)
         if plan is None:
             self.misses += 1
@@ -127,6 +176,8 @@ class TransferPlanCache:
         return plan
 
     def put(self, key: Hashable, plan: CompiledPlan) -> None:
+        """Insert (or refresh) an entry, evicting the LRU tail past
+        capacity."""
         if key in self._store:
             self._store.move_to_end(key)
         self._store[key] = plan
@@ -148,9 +199,108 @@ class TransferPlanCache:
         return list(self._store)
 
     def stats(self) -> dict[str, int]:
+        """Hit/miss/eviction counters plus current size and capacity."""
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "size": len(self._store),
                 "capacity": self.capacity}
 
     def clear(self) -> None:
+        """Drop every entry (counters are kept; they are cumulative)."""
+        self._store.clear()
+
+
+@dataclasses.dataclass
+class FastPathEntry:
+    """One memoized resolution of the plan→lower→schedule→digest pipeline.
+
+    Everything steady-state dispatch needs without re-running any setup
+    stage: the resolved plans, the SCHEDULED transfer graph (kept so
+    ``REPRO_MP_VALIDATE=always`` can re-run ``graph.validate()`` on
+    hits), its post-pass digest, the digest-derived plan-cache key, the
+    compiled executable, and the concrete schedule name that was chosen.
+    The §4.5 invariants were checked when the entry was built; the epoch
+    stamp in :class:`FastPathCache` is what keeps that check valid —
+    served entries are byte-identical to what the slow path would
+    rebuild, or they are invalidated.
+    """
+
+    plans: tuple            # tuple[TransferPlan, ...]
+    graph: Any              # the scheduled TransferGraph
+    digest: str             # post-pass graph digest (cache-key ingredient)
+    key: Hashable           # the GroupKey the executable is cached under
+    compiled: CompiledPlan
+    schedule: str           # concrete scheduler name resolved at build
+
+
+class FastPathCache:
+    """Front cache for steady-state dispatch (DESIGN.md §2.3).
+
+    Maps a *request signature* — ``(mode, (src, dst, nelems, dtype)…,
+    window, schedule name, planner knobs, device count)`` — to a
+    :class:`FastPathEntry`, each stamped with the
+    :attr:`~repro.comm.planner.PathPlanner.epoch` in force when it was
+    built. Lookups compare the stamp against the live epoch: a mismatch
+    (any planner/topology mutation since) drops the entry and counts an
+    ``invalidation``, so a stale plan can never be served — the §4.5
+    validity of a served entry is exactly the validity of its epoch.
+    LRU-bounded like the plan cache; entries hold strong references to
+    their executables, so eviction order follows use order.
+    """
+
+    def __init__(self, capacity: int = 256):
+        if capacity <= 0:
+            raise ValueError("fast-path cache capacity must be positive")
+        self.capacity = capacity
+        self._store: OrderedDict[Hashable,
+                                 tuple[tuple, FastPathEntry]] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, signature: Hashable) -> bool:
+        return signature in self._store
+
+    def get(self, signature: Hashable, epoch: tuple) -> FastPathEntry | None:
+        """Return the entry for ``signature`` iff its epoch stamp matches
+        the live ``epoch``; a stale stamp is dropped and counted as an
+        invalidation (plus a miss — the caller re-plans)."""
+        rec = self._store.get(signature)
+        if rec is None:
+            self.misses += 1
+            return None
+        stamped, entry = rec
+        if stamped != epoch:
+            del self._store[signature]
+            self.invalidations += 1
+            self.misses += 1
+            return None
+        self._store.move_to_end(signature)
+        self.hits += 1
+        return entry
+
+    def put(self, signature: Hashable, epoch: tuple,
+            entry: FastPathEntry) -> None:
+        """Memoize a freshly-built resolution under its epoch stamp,
+        evicting the LRU tail past capacity."""
+        if signature in self._store:
+            self._store.move_to_end(signature)
+        self._store[signature] = (epoch, entry)
+        if len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.evictions += 1
+
+    def stats(self) -> dict[str, int]:
+        """Hit/miss/invalidation/eviction counters plus size and
+        capacity — surfaced as ``session.stats()["fastpath"]``."""
+        return {"hits": self.hits, "misses": self.misses,
+                "invalidations": self.invalidations,
+                "evictions": self.evictions, "size": len(self._store),
+                "capacity": self.capacity}
+
+    def clear(self) -> None:
+        """Drop every entry (counters are kept; they are cumulative)."""
         self._store.clear()

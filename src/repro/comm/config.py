@@ -21,6 +21,12 @@ Environment variables read by :meth:`from_env`:
 * ``REPRO_MP_SCHEDULE``    — chunk-interleaving scheduler applied to the
   lowered transfer graph (round_robin | depth_first | critical_path |
   auto; DESIGN.md §2.2)
+* ``REPRO_MP_FASTPATH``    — "1"/"0" steady-state dispatch fast path
+  (default on; DESIGN.md §2.3): repeat traffic skips planner, lowering,
+  scheduler pass, validation, and digest entirely
+* ``REPRO_MP_VALIDATE``    — "miss" (default) validates plans/graphs only
+  when the fast path misses; "always" re-validates on every dispatch,
+  fast-path hits included (the §4.5 safety escape hatch)
 * ``REPRO_PLAN_CACHE_SIZE``— compiled-plan LRU capacity (default 64)
 """
 
@@ -39,6 +45,12 @@ POLICY_NAMES = ("greedy", "round_robin", "tuner")
 #: lowering order (identity pass), ``auto`` model-scores every candidate
 #: order and picks the winner before compiling (DESIGN.md §2.2).
 SCHEDULE_NAMES = ("round_robin", "depth_first", "critical_path", "auto")
+
+#: Validation modes for compiled dispatch (DESIGN.md §4.5): ``miss``
+#: validates a plan/graph only when it is (re)built — the fast path trusts
+#: epoch-stamped entries — while ``always`` re-runs ``validate_plan`` and
+#: ``graph.validate()`` on every dispatch, fast-path hits included.
+VALIDATE_MODES = ("miss", "always")
 
 
 def _env_int(name: str, default: int) -> int:
@@ -72,6 +84,8 @@ class CommConfig:
     window: int = 1
     policy: str = "greedy"
     schedule: str = "round_robin"
+    fastpath: bool = True
+    validate: str = "miss"
     cache_capacity: int = 64
     axis_name: str = "dev"
 
@@ -98,6 +112,9 @@ class CommConfig:
         if self.schedule not in SCHEDULE_NAMES:
             raise ValueError(f"unknown schedule {self.schedule!r}; "
                              f"expected one of {SCHEDULE_NAMES}")
+        if self.validate not in VALIDATE_MODES:
+            raise ValueError(f"unknown validate mode {self.validate!r}; "
+                             f"expected one of {VALIDATE_MODES}")
         if not self.axis_name:
             raise ValueError("axis_name must be non-empty")
 
@@ -118,6 +135,8 @@ class CommConfig:
             window=_env_int("REPRO_MP_WINDOW", cls.window),
             policy=os.environ.get("REPRO_MP_POLICY", cls.policy),
             schedule=os.environ.get("REPRO_MP_SCHEDULE", cls.schedule),
+            fastpath=_env_bool("REPRO_MP_FASTPATH", cls.fastpath),
+            validate=os.environ.get("REPRO_MP_VALIDATE", cls.validate),
             cache_capacity=_env_int("REPRO_PLAN_CACHE_SIZE",
                                     cls.cache_capacity),
         )

@@ -21,6 +21,15 @@ paper's graph-per-message becomes one graph per traffic pattern (message
 fusion à la Choi et al.). Single sends are the 1-message special case of
 the same machinery.
 
+Steady state takes the **dispatch fast path** (DESIGN.md §2.3): the whole
+plan→lower→schedule→digest resolution is memoized per request signature
+in an epoch-stamped :class:`~repro.comm.cache.FastPathCache`, operand
+staging runs through pooled per-key staging programs, and repeat traffic
+is one dict lookup + one staging write + one launch — the paper's "setup
+once, launch many". Any planner/topology mutation bumps the epoch and
+forces a re-plan; ``REPRO_MP_FASTPATH=0`` disables the front cache and
+``REPRO_MP_VALIDATE=always`` re-validates even on hits.
+
 Correctness model (§4.5 of the paper → functional dataflow here): the
 graph's hop edges ARE the program's dataflow (hop *i+1* consumes hop *i*'s
 value), chunks write disjoint precomputed destination offsets, paths never
@@ -39,6 +48,9 @@ engine directly.
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
+from collections import OrderedDict
 from functools import lru_cache
 from typing import Sequence
 
@@ -46,8 +58,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.comm.cache import CompiledPlan, TransferPlanCache, compile_plan
+from repro.comm.cache import (CompiledPlan, FastPathCache, FastPathEntry,
+                              TransferPlanCache, compile_plan)
 from repro.compat import shard_map
+from repro.comm.config import VALIDATE_MODES, _env_bool
 from repro.comm.graph import TransferGraph, lower
 from repro.comm.passes import GraphPass, apply_schedule
 from repro.comm.plan import TransferGroup, TransferPlan, TransferRequest
@@ -69,7 +83,10 @@ class GroupKey:
     old hand-assembled key once dropped the reverse plan's signature; a
     digest of the whole graph cannot). ``entries`` adds the per-message
     element type/count, which the graph (byte-level) does not carry but
-    the traced program shape depends on.
+    the traced program shape depends on. The dispatch path canonicalizes
+    message order before planning (see :meth:`MultiPathTransfer
+    .transfer_group`), so structurally identical groups whose operands
+    were merely permuted collide on one entry.
     """
 
     digest: str
@@ -80,6 +97,11 @@ class GroupKey:
     #: different-sized meshes must not serve one mesh's executable to the
     #: other (the graph digest covers routes, not the device axis).
     num_devices: int = 0
+    #: True when the program was compiled with operand donation
+    #: (``donate_argnums``): a donated executable consumes its operands,
+    #: so it must never be served to an AOT caller that reuses arrays
+    #: across launches (``compiled_for*`` always compiles undonated).
+    donated: bool = False
 
 
 def plan_signature(plan: TransferPlan) -> tuple:
@@ -99,14 +121,19 @@ def group_signature(group: TransferGroup) -> tuple:
 
 @lru_cache(maxsize=256)
 def _scheduled_graph(graph: TransferGraph, schedule: str,
-                     topology: Topology) -> tuple[TransferGraph, str]:
+                     topology: Topology,
+                     topology_epoch: tuple) -> tuple[TransferGraph, str]:
     """Memoized schedule application for name-addressed schedulers.
 
     ``lower()`` memoizes the lowering, so steady-state launches replay
     the same graph object; without this cache every cache-hit dispatch
     would re-run the pass AND the full §2.2 contract check. Custom
     :class:`GraphPass` objects bypass the memo (their identity is not a
-    stable key).
+    stable key). ``topology_epoch`` is part of the key on purpose:
+    ``Topology`` hashes by identity, so without it a link mutation
+    (``add_link`` on an existing pair changes bandwidths in place) could
+    serve a model-weighted scheduler (``critical_path``/``auto``) a
+    dispatch order computed from stale link weights.
     """
     return apply_schedule(graph, schedule, topology)
 
@@ -197,7 +224,10 @@ class MultiPathTransfer:
                  topology: Topology | None = None,
                  planner: PathPlanner | None = None,
                  cache: TransferPlanCache | None = None,
-                 schedule: str | GraphPass = "round_robin"):
+                 schedule: str | GraphPass = "round_robin",
+                 fastpath: bool | None = None,
+                 validate: str | None = None,
+                 fastpath_cache: FastPathCache | None = None):
         if mesh is None:
             devs = jax.devices()
             mesh = jax.sharding.Mesh(devs, (AXIS,))
@@ -216,6 +246,44 @@ class MultiPathTransfer:
         #: to every lowering between ``lower()`` and the emitter; every
         #: public entry point takes a per-call ``schedule=`` override.
         self.schedule = schedule
+        #: Steady-state dispatch fast path (DESIGN.md §2.3): memoize the
+        #: whole plan→lower→schedule→digest resolution per request
+        #: signature so repeat traffic is one dict lookup + staging +
+        #: launch. ``REPRO_MP_FASTPATH=0`` (or ``fastpath=False``) turns
+        #: it off; every dispatch then re-runs the full pipeline.
+        self.fastpath = (_env_bool("REPRO_MP_FASTPATH", True)
+                         if fastpath is None else fastpath)
+        #: ``"miss"`` (default) validates plans/graphs only when they are
+        #: (re)built; ``"always"`` re-validates on every dispatch, fast-
+        #: path hits included (§4.5 safety escape hatch).
+        self.validate = (os.environ.get("REPRO_MP_VALIDATE", "miss")
+                         if validate is None else validate)
+        if self.validate not in VALIDATE_MODES:
+            raise ValueError(f"unknown validate mode {self.validate!r}; "
+                             f"expected one of {VALIDATE_MODES}")
+        self._fastpath = (fastpath_cache if fastpath_cache is not None
+                          else FastPathCache())
+        #: Pooled staging programs keyed on (window, nelems, dtype, src):
+        #: each one holds a zero operand template (device_put once) and a
+        #: compiled write of the message into the src row — per-launch
+        #: staging is ONE fused kernel instead of zeros + scatter +
+        #: resharding of a fresh (window, ndev, nelems) array. LRU-bounded
+        #: to the fast-path capacity: every entry pins a device-resident
+        #: template, so the pool must not grow without bound under
+        #: many-distinct-size traffic.
+        self._staging: OrderedDict[tuple, object] = OrderedDict()
+        #: Cumulative nanoseconds spent *dispatching* the staging kernels
+        #: across every launch (host-side enqueue; per-executable totals
+        #: in `PlanLifecycle.staging_ns`). Staging execution overlaps the
+        #: launch — the compiled program consumes the staged operands
+        #: through dataflow — so it lands in the launch timings, not here.
+        self.staging_ns = 0
+        # Operand donation lets XLA reuse staging buffers launch-to-launch
+        # (paper: graph replay over the same buffers). The CPU backend
+        # ignores donation (with a warning), so only enable it where it
+        # takes effect; donated programs are keyed apart (GroupKey.donated)
+        # from the undonated AOT handles `compiled_for*` returns.
+        self._donate = jax.default_backend() not in ("cpu",)
         #: Concrete schedule name → dispatch/compile calls resolved to it
         #: (``auto`` counts as the candidate it picked; cache hits and
         #: memoized pass applications included). Surfaced via
@@ -267,14 +335,15 @@ class MultiPathTransfer:
     # -- program construction -----------------------------------------------
     def _group_graph(self, plans: Sequence[TransferPlan], window: int,
                      schedule: str | GraphPass | None = None
-                     ) -> TransferGraph:
+                     ) -> tuple[TransferGraph, str]:
         """Lower the fused group and run the scheduler pass (§2.2).
 
         Returns the SCHEDULED graph — the one the program is emitted
         from AND the one ``_group_key`` digests, so the cache key always
         incorporates the post-pass dispatch order (two schedules of one
         plan get distinct entries and can never cross-serve
-        executables). The emitter owns no ordering of its own.
+        executables) — plus the concrete schedule name that was chosen.
+        The emitter owns no ordering of its own.
         """
         for p in plans:
             _check_executable(p)
@@ -282,12 +351,13 @@ class MultiPathTransfer:
                       window)
         sched = self.schedule if schedule is None else schedule
         if isinstance(sched, str):
-            graph, chosen = _scheduled_graph(graph, sched, self.topology)
-        else:
-            graph, chosen = apply_schedule(graph, sched, self.topology)
+            return _scheduled_graph(graph, sched, self.topology,
+                                    self.topology.epoch)
+        return apply_schedule(graph, sched, self.topology)
+
+    def _count_schedule(self, chosen: str) -> None:
         self.schedule_counts[chosen] = self.schedule_counts.get(chosen,
                                                                 0) + 1
-        return graph
 
     def _build_group_fn(self, graph: TransferGraph,
                         itemsizes: Sequence[int]):
@@ -311,35 +381,155 @@ class MultiPathTransfer:
         fn = self._build_group_fn(graph, itemsizes)
         self.nodes_compiled += graph.num_nodes
         self.edges_compiled += graph.num_edges
-        return compile_plan(key, fn, abstracts, num_nodes=graph.num_nodes)
+        jit_kwargs = {}
+        if key.donated:
+            # XLA reuses the staged operand buffers for the outputs
+            # launch-to-launch (the paper's graph replay over one buffer
+            # set); safe because the dispatch path rebuilds operands
+            # every launch and never touches them again.
+            jit_kwargs["donate_argnums"] = tuple(range(len(shapes)))
+        return compile_plan(key, fn, abstracts, num_nodes=graph.num_nodes,
+                            **jit_kwargs)
 
     def _group_key(self, graph: TransferGraph, plans: Sequence[TransferPlan],
-                   shapes: Sequence[tuple[int, object]],
-                   window: int) -> GroupKey:
+                   shapes: Sequence[tuple[int, object]], window: int,
+                   donated: bool = False) -> GroupKey:
         entries = tuple(
             (p.src, p.dst, nelems, str(jnp.dtype(dtype)))
             for p, (nelems, dtype) in zip(plans, shapes))
-        return GroupKey(graph.digest(), entries, window, self.num_devices)
+        return GroupKey(graph.digest(), entries, window, self.num_devices,
+                        donated)
 
-    def _launch_group(self, messages: Sequence[jax.Array],
-                      plans: Sequence[TransferPlan], *,
-                      window: int, block: bool,
-                      schedule: str | GraphPass | None = None
-                      ) -> list[jax.Array]:
-        """Compile (or fetch) the fused program and launch it ONCE."""
-        graph = self._group_graph(plans, window, schedule)
-        shapes = [(m.shape[0], m.dtype) for m in messages]
-        key = self._group_key(graph, plans, shapes, window)
-        compiled = self.cache.get_or_build(
-            key, lambda: self._compile_group(key, graph, shapes))
-        xs = []
-        for m, p in zip(messages, plans):
-            x = jnp.zeros((window, self.num_devices, m.shape[0]), m.dtype)
-            x = x.at[:, p.src].set(m)
-            xs.append(jax.device_put(x, self._sharding))
+    # -- steady-state dispatch (DESIGN.md §2.3) -----------------------------
+    def _request_signature(self, mode: str, specs: Sequence[tuple],
+                           window: int, schedule: str,
+                           max_paths: int | None, num_chunks: int | None,
+                           exclusive: bool) -> tuple:
+        """Request identity for the fast path: everything that determines
+        the resolved plans + program BESIDES planner/topology state
+        (which the epoch stamp covers). ``mode`` separates single-message
+        planning (``plan``) from joint group planning (``plan_group``) —
+        the two can legitimately resolve the same spec differently.
+        """
+        return (mode,
+                tuple((src, dst, nelems, str(jnp.dtype(dtype)))
+                      for src, dst, nelems, dtype in specs),
+                window, schedule, max_paths, num_chunks, exclusive,
+                self.num_devices)
+
+    def _stage_fn(self, window: int, nelems: int, dtype, src: int):
+        """Pooled staging program for one (window, nelems, dtype, src) key.
+
+        Holds a zero operand template — device_put across the mesh ONCE —
+        and a compiled write of the message into the src row, so per-
+        launch staging is one fused kernel producing the sharded
+        ``(window, ndev, nelems)`` operand instead of a fresh zero-fill +
+        scatter + resharding of the whole array (the old per-launch
+        O(window·ndev·nelems) host-side cost).
+        """
+        key = (window, nelems, str(jnp.dtype(dtype)), src)
+        fn = self._staging.get(key)
+        if fn is None:
+            zeros = jax.device_put(
+                jnp.zeros((window, self.num_devices, nelems), dtype),
+                self._sharding)
+
+            def stage(m, _zeros=zeros):
+                return _zeros.at[:, src].set(m)
+
+            fn = jax.jit(stage, out_shardings=self._sharding)
+            # Warm the staging executable once at pool-insertion time so
+            # steady-state `staging_ns` measures operand builds, not the
+            # one-time jit compile (that is first-dispatch setup cost).
+            jax.block_until_ready(fn(jnp.zeros((nelems,), dtype)))
+            self._staging[key] = fn
+            if len(self._staging) > self._fastpath.capacity:
+                self._staging.popitem(last=False)
+        else:
+            self._staging.move_to_end(key)
+        return fn
+
+    def _launch(self, entry: FastPathEntry, messages: Sequence[jax.Array],
+                *, block: bool) -> list[jax.Array]:
+        """Stage operands (pooled) and launch the compiled program ONCE."""
+        window = entry.graph.window
+        stagers = [self._stage_fn(window, m.shape[0], m.dtype, p.src)
+                   for m, p in zip(messages, entry.plans)]
+        t0 = time.perf_counter_ns()
+        xs = [stage(m) for stage, m in zip(stagers, messages)]
+        staging = time.perf_counter_ns() - t0
+        self.staging_ns += staging
+        compiled = entry.compiled
+        compiled.lifecycle.staging_ns += staging
         ys = compiled(*xs) if block else compiled.dispatch(*xs)
         self.dispatches += 1
-        return [y[0, p.dst] for y, p in zip(ys, plans)]
+        return [y[0, p.dst] for y, p in zip(ys, entry.plans)]
+
+    def _resolve(self, specs: Sequence[tuple], *, window: int,
+                 max_paths: int | None, num_chunks: int | None,
+                 exclusive: bool, schedule: str | GraphPass | None,
+                 single: bool) -> FastPathEntry:
+        """Resolve a request to a launchable :class:`FastPathEntry`.
+
+        Fast path (hit): one dict lookup against the epoch-stamped
+        :class:`FastPathCache` — planner, ``lower()``, scheduler pass,
+        validation, and digest are all skipped; the plan cache is still
+        consulted by stored key so LRU stats/recency stay coherent (and
+        an evicted executable is recompiled from the memoized graph
+        without re-planning). Slow path (miss): the full pipeline, then
+        the resolution is memoized under the current planner epoch.
+        Custom :class:`GraphPass` objects bypass the fast path — their
+        identity is not a stable signature.
+        """
+        sched = self.schedule if schedule is None else schedule
+        sched_name = sched if isinstance(sched, str) else None
+        use_fast = self.fastpath and sched_name is not None
+        shapes = [(nelems, jnp.dtype(dtype))
+                  for (_, _, nelems, dtype) in specs]
+        sig = epoch = None
+        if use_fast:
+            sig = self._request_signature(
+                "plan" if single else "plan_group", specs, window,
+                sched_name, max_paths, num_chunks, exclusive)
+            epoch = self.planner.epoch
+            entry = self._fastpath.get(sig, epoch)
+            if entry is not None:
+                compiled = self.cache.get(entry.key)
+                if compiled is None:   # evicted under us: recompile only
+                    compiled = self._compile_group(entry.key, entry.graph,
+                                                   shapes)
+                    self.cache.put(entry.key, compiled)
+                entry.compiled = compiled
+                if self.validate == "always":
+                    for p in entry.plans:
+                        validate_plan(p)
+                    entry.graph.validate(
+                        {i: p.nbytes for i, p in enumerate(entry.plans)},
+                        cross_flow_exclusive=False)
+                compiled.lifecycle.fastpath_hits += 1
+                self._count_schedule(entry.schedule)
+                return entry
+        if single:
+            (src, dst, nelems, dtype) = specs[0]
+            plans: tuple[TransferPlan, ...] = (self.plan_for(
+                src, dst, nelems, dtype, max_paths=max_paths,
+                num_chunks=num_chunks),)
+        else:
+            plans = self.plan_group_for(specs, max_paths=max_paths,
+                                        num_chunks=num_chunks,
+                                        exclusive=exclusive).plans
+        graph, chosen = self._group_graph(plans, window, sched)
+        self._count_schedule(chosen)
+        key = self._group_key(graph, plans, shapes, window,
+                              donated=self._donate)
+        compiled = self.cache.get_or_build(
+            key, lambda: self._compile_group(key, graph, shapes))
+        entry = FastPathEntry(plans=tuple(plans), graph=graph,
+                              digest=key.digest, key=key,
+                              compiled=compiled, schedule=chosen)
+        if use_fast:
+            self._fastpath.put(sig, epoch, entry)
+        return entry
 
     # -- public API ---------------------------------------------------------
     def transfer(self, message: jax.Array, src: int, dst: int, *,
@@ -360,10 +550,11 @@ class MultiPathTransfer:
         message = jnp.asarray(message)
         if message.ndim != 1:
             raise ValueError("message must be 1-D; reshape first")
-        plan = self.plan_for(src, dst, message.shape[0], message.dtype,
-                             max_paths=max_paths, num_chunks=num_chunks)
-        return self._launch_group([message], (plan,), window=window,
-                                  block=block, schedule=schedule)[0]
+        entry = self._resolve(
+            [(src, dst, message.shape[0], message.dtype)], window=window,
+            max_paths=max_paths, num_chunks=num_chunks, exclusive=False,
+            schedule=schedule, single=True)
+        return self._launch(entry, [message], block=block)[0]
 
     def transfer_group(self, messages: Sequence[jax.Array],
                        pairs: Sequence[tuple[int, int]], *,
@@ -380,6 +571,14 @@ class MultiPathTransfer:
         fused into one SPMD program, and cached under a :class:`GroupKey`
         derived from the graph digest. Returns the received messages,
         aligned with the inputs.
+
+        Message identity is canonicalized before planning: the group is
+        re-ordered by ``(src, dst, nelems, dtype)`` (stable), so
+        structurally identical groups whose messages arrive in a
+        different dispatch order resolve to the SAME plans, graph, cache
+        entry, and fast-path signature instead of compiling a permuted
+        twin (ROADMAP "graph-level cache dedup"). Results are returned in
+        the caller's order.
         """
         msgs = [jnp.asarray(m) for m in messages]
         if len(msgs) != len(pairs):
@@ -391,21 +590,32 @@ class MultiPathTransfer:
                 raise ValueError("messages must be 1-D; reshape first")
         specs = [(src, dst, m.shape[0], m.dtype)
                  for m, (src, dst) in zip(msgs, pairs)]
-        group = self.plan_group_for(specs, max_paths=max_paths,
-                                    num_chunks=num_chunks,
-                                    exclusive=exclusive)
-        return self._launch_group(msgs, group.plans, window=window,
-                                  block=block, schedule=schedule)
+        order = sorted(range(len(msgs)),
+                       key=lambda i: (specs[i][0], specs[i][1],
+                                      specs[i][2], str(specs[i][3])))
+        entry = self._resolve([specs[i] for i in order], window=window,
+                              max_paths=max_paths, num_chunks=num_chunks,
+                              exclusive=exclusive, schedule=schedule,
+                              single=False)
+        outs = self._launch(entry, [msgs[i] for i in order], block=block)
+        inverse = {i: k for k, i in enumerate(order)}
+        return [outs[inverse[i]] for i in range(len(msgs))]
 
     def compiled_for(self, src: int, dst: int, nelems: int, dtype=jnp.float32,
                      *, window: int = 1, max_paths: int | None = None,
                      num_chunks: int | None = None,
                      schedule: str | GraphPass | None = None,
                      ) -> tuple[CompiledPlan, TransferPlan]:
-        """AOT handle for benchmarks: returns (executable, plan)."""
+        """AOT handle for benchmarks: returns (executable, plan).
+
+        Always compiled WITHOUT operand donation (``GroupKey.donated`` is
+        False) — AOT callers time repeated launches over the same operand
+        arrays, which a donated executable would consume.
+        """
         plan = self.plan_for(src, dst, nelems, dtype, max_paths=max_paths,
                              num_chunks=num_chunks)
-        graph = self._group_graph((plan,), window, schedule)
+        graph, chosen = self._group_graph((plan,), window, schedule)
+        self._count_schedule(chosen)
         shapes = ((nelems, jnp.dtype(dtype)),)
         key = self._group_key(graph, (plan,), shapes, window)
         compiled = self.cache.get_or_build(
@@ -419,14 +629,36 @@ class MultiPathTransfer:
                            schedule: str | GraphPass | None = None,
                            ) -> tuple[CompiledPlan, TransferGroup]:
         """AOT handle for a fused group; ``specs`` as in
-        :meth:`plan_group_for`. Returns (executable, group)."""
+        :meth:`plan_group_for`. Returns (executable, group). Specs are
+        taken in the caller's order (no canonicalization — the executable
+        expects operands aligned with ``group.plans``) and the program is
+        compiled without donation, like :meth:`compiled_for`."""
         group = self.plan_group_for(specs, max_paths=max_paths,
                                     num_chunks=num_chunks,
                                     exclusive=exclusive)
-        graph = self._group_graph(group.plans, window, schedule)
+        graph, chosen = self._group_graph(group.plans, window, schedule)
+        self._count_schedule(chosen)
         shapes = [(nelems, jnp.dtype(dtype))
                   for (_, _, nelems, dtype) in specs]
         key = self._group_key(graph, group.plans, shapes, window)
         compiled = self.cache.get_or_build(
             key, lambda: self._compile_group(key, graph, shapes))
         return compiled, group
+
+    # -- introspection ------------------------------------------------------
+    def stats(self) -> dict:
+        """Engine-level accounting: launches, plan-cache counters, fast-
+        path counters (hits / misses / epoch invalidations), cumulative
+        staging time, compiled graph totals, and per-schedule resolution
+        counts. ``CommSession.stats()`` re-exports these sections."""
+        return {
+            "dispatches": self.dispatches,
+            "cache": self.cache.stats(),
+            "fastpath": {"enabled": self.fastpath,
+                         "validate": self.validate,
+                         "staging_ns": self.staging_ns,
+                         **self._fastpath.stats()},
+            "graph": {"nodes_compiled": self.nodes_compiled,
+                      "edges_compiled": self.edges_compiled},
+            "schedules": dict(self.schedule_counts),
+        }

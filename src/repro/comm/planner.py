@@ -28,12 +28,28 @@ from repro.comm.plan import (PathAssignment, TransferGroup, TransferPlan,
 from repro.comm.policy import (GreedyBandwidthPolicy, PathPolicy,
                                contention_scaled, make_policy)
 from repro.core.topology import HOST, Route, Topology
+from repro.core.topology import _UID_SOURCE
 
 _GREEDY = GreedyBandwidthPolicy()
 
+#: Planner attributes whose reassignment changes what :meth:`PathPlanner.plan`
+#: would return for an identical request — each bump invalidates every
+#: fast-path entry stamped with an older epoch.
+_EPOCH_ATTRS = frozenset({
+    "topology", "config", "max_paths", "chunk_bytes", "max_chunks",
+    "include_host", "multipath_threshold", "policy"})
+
 
 class PathPlanner:
-    """Selects routes and builds :class:`TransferPlan` objects."""
+    """Selects routes and builds :class:`TransferPlan` objects.
+
+    Mutating any planning input after construction (``max_paths``,
+    ``policy``, ``topology``, …) bumps the planner's :attr:`epoch`, the
+    plan-validity token the dispatch fast path
+    (:class:`repro.comm.cache.FastPathCache`) stamps its entries with —
+    so a policy change always forces a re-plan instead of serving a stale
+    executable.
+    """
 
     def __init__(self, topology: Topology, *,
                  max_paths: int | None = None,
@@ -43,6 +59,8 @@ class PathPlanner:
                  multipath_threshold: int | None = None,
                  policy: PathPolicy | None = None,
                  config: CommConfig | None = None):
+        self._uid = next(_UID_SOURCE)
+        self._epoch = 0
         if config is None:
             config = CommConfig.from_env()
         self.topology = topology
@@ -62,6 +80,27 @@ class PathPlanner:
             else multipath_threshold)
         self.policy = policy if policy is not None else make_policy(
             config.policy)
+        self._track_mutations = True
+
+    def __setattr__(self, name: str, value) -> None:
+        object.__setattr__(self, name, value)
+        if name in _EPOCH_ATTRS and getattr(self, "_track_mutations", False):
+            self._epoch += 1
+
+    @property
+    def epoch(self) -> tuple[int, ...]:
+        """Plan-validity token: ``(planner uid, planner mutations,
+        topology uid, topology mutations)``.
+
+        Changes whenever a planning input is reassigned on this planner or
+        the topology's link set mutates
+        (:meth:`repro.core.topology.Topology.bump_epoch`) — the dispatch
+        fast path compares it on every lookup, so a stale plan can never
+        be served. Mutating the *internals* of an attached policy object
+        is not observable; swap the ``policy`` attribute (or call
+        ``topology.bump_epoch()``) to invalidate explicitly.
+        """
+        return (self._uid, self._epoch, *self.topology.epoch)
 
     # -- route enumeration --------------------------------------------------
     def enumerate_routes(self, src: int, dst: int,

@@ -24,6 +24,12 @@ training, serving, benchmarks, examples — drives communication through it:
   (``CommConfig.schedule`` / ``CommSession(schedule="auto")`` / per-call
   ``schedule=``) over the lowered transfer graph before compiling
   (:mod:`repro.comm.passes`, DESIGN.md §2.2),
+* repeat traffic takes the steady-state dispatch fast path (DESIGN.md
+  §2.3, ``CommConfig.fastpath`` / ``REPRO_MP_FASTPATH``): the whole
+  plan→lower→schedule→digest resolution is served from an epoch-stamped
+  :class:`~repro.comm.cache.FastPathCache`, so a repeat send is one dict
+  lookup + one staging write + one launch (``session.stats()["fastpath"]``
+  reports hits / misses / epoch invalidations),
 * ``session.send_pytree(...)`` — P2P for arbitrary pytrees (e.g. serving
   KV-cache migration).
 
@@ -154,7 +160,9 @@ class CommSession:
                                              topology=self.topology,
                                              planner=self.planner,
                                              cache=self.cache,
-                                             schedule=self.config.schedule)
+                                             schedule=self.config.schedule,
+                                             fastpath=self.config.fastpath,
+                                             validate=self.config.validate)
         return self._engine
 
     @property
@@ -421,6 +429,14 @@ class CommSession:
             "topology": self.topology.name,
             "num_paths": plan.num_paths,
             "schedule": schedule_info,
+            # Steady-state dispatch (§2.3): whether repeat traffic for
+            # this request would skip the pipeline just replayed above,
+            # and the epoch stamp such an entry would be keyed under.
+            "fastpath": {
+                "enabled": self.config.fastpath,
+                "validate": self.config.validate,
+                "epoch": list(self.planner.epoch),
+            },
             "graph": {
                 "digest": graph.digest(),
                 "nodes": graph.num_nodes,
@@ -451,11 +467,26 @@ class CommSession:
         default scheduler and ``schedules`` counts dispatch/compile
         calls per concrete schedule resolved — ``auto`` counts as
         whichever candidate it picked, and cache-hit launches count too
-        (unlike ``graph``, which totals cache misses only)."""
+        (unlike ``graph``, which totals cache misses only). ``fastpath``
+        is the steady-state dispatch front cache (DESIGN.md §2.3):
+        hits / misses / epoch ``invalidations`` plus ``staging_ns``, the
+        cumulative host-side staging-dispatch time (staging *execution*
+        overlaps the launch and lands in the launch timings)."""
         eng = self._engine
+        if eng is not None:
+            fastpath = eng.stats()["fastpath"]
+        else:
+            # Same schema (and real default capacity) as the live engine
+            # section, derived from an empty cache rather than spelled
+            # out by hand.
+            from repro.comm.cache import FastPathCache
+            fastpath = {"enabled": self.config.fastpath,
+                        "validate": self.config.validate,
+                        "staging_ns": 0, **FastPathCache().stats()}
         return {
             "cache": self.cache.stats(),
             "dispatches": eng.dispatches if eng is not None else 0,
+            "fastpath": fastpath,
             "graph": {
                 "nodes_compiled": eng.nodes_compiled if eng else 0,
                 "edges_compiled": eng.edges_compiled if eng else 0,

@@ -19,6 +19,11 @@ from typing import Iterable, Mapping
 
 HOST = -1  # sentinel device id for the host (PCIe-staged) node
 
+#: Process-wide source of topology/planner instance ids. Epoch tokens pair
+#: a uid with a mutation counter so tokens from two different instances can
+#: never collide (an ``id()``-based token could be reused after GC).
+_UID_SOURCE = itertools.count()
+
 #: TPU v5e calibration constants (per chip) used by the roofline model too.
 ICI_LINK_GBPS = 50.0
 HBM_GBPS = 819.0
@@ -79,16 +84,55 @@ class Topology:
         self.num_devices = int(num_devices)
         self.name = name
         self.grid_shape = grid_shape
+        self._uid = next(_UID_SOURCE)
+        self._epoch = 0
         self._links: dict[tuple[int, int], Link] = {}
         for link in links:
-            key = (link.src, link.dst)
-            if key in self._links:
-                # Multiple sublinks between a pair (e.g. 2 NVLinks on Beluga)
-                # aggregate into one logical link with summed bandwidth.
-                old = self._links[key]
-                link = Link(link.src, link.dst, old.kind,
-                            old.bandwidth_gbps + link.bandwidth_gbps)
-            self._links[key] = link
+            self._register(link)
+
+    def _register(self, link: Link) -> None:
+        key = (link.src, link.dst)
+        if key in self._links:
+            # Multiple sublinks between a pair (e.g. 2 NVLinks on Beluga)
+            # aggregate into one logical link with summed bandwidth.
+            old = self._links[key]
+            link = Link(link.src, link.dst, old.kind,
+                        old.bandwidth_gbps + link.bandwidth_gbps)
+        self._links[key] = link
+
+    # -- mutation & epoch --------------------------------------------------
+    @property
+    def epoch(self) -> tuple[int, int]:
+        """Plan-validity token ``(uid, mutations)`` for this topology.
+
+        Cached plans and compiled fast-path entries
+        (:class:`repro.comm.cache.FastPathCache`) are stamped with the
+        epoch in force when they were built; any link mutation
+        (:meth:`add_link`, :meth:`remove_link`, :meth:`bump_epoch`)
+        changes the token, so stale routes can never be served.
+        """
+        return (self._uid, self._epoch)
+
+    def bump_epoch(self) -> None:
+        """Invalidate every plan derived from this topology.
+
+        Call after mutating link state out-of-band (e.g. poking
+        ``_links`` directly); :meth:`add_link` / :meth:`remove_link` call
+        it for you.
+        """
+        self._epoch += 1
+
+    def add_link(self, link: Link) -> None:
+        """Register a directional link after construction (aggregating
+        sublinks like the constructor does) and bump the plan epoch."""
+        self._register(link)
+        self.bump_epoch()
+
+    def remove_link(self, src: int, dst: int) -> None:
+        """Drop the directional link ``src -> dst`` (e.g. a failed NVLink)
+        and bump the plan epoch; raises ``KeyError`` if absent."""
+        del self._links[(src, dst)]
+        self.bump_epoch()
 
     # -- queries ----------------------------------------------------------
     @property

@@ -1,5 +1,6 @@
 """docs/api.md is auto-checked: every public symbol of the pass-facing
-modules (``repro.comm.passes``, ``repro.comm.graph``) must
+modules (``repro.comm.passes``, ``repro.comm.graph``) and the cache layer
+(``repro.comm.cache`` — plan cache, lifecycle, dispatch fast path) must
 
 * appear in the reference page,
 * carry a docstring that names its invariant obligations (the §2.2 /
@@ -18,6 +19,7 @@ import re
 
 import pytest
 
+import repro.comm.cache as cache_mod
 import repro.comm.graph as graph_mod
 import repro.comm.passes as passes_mod
 
@@ -55,7 +57,7 @@ def test_gate_covers_wrapped_entry_points():
     assert "apply_schedule" in dict(_public_symbols(passes_mod))
 
 
-@pytest.mark.parametrize("module", [graph_mod, passes_mod],
+@pytest.mark.parametrize("module", [graph_mod, passes_mod, cache_mod],
                          ids=lambda m: m.__name__)
 def test_public_symbols_state_their_obligations(module):
     missing, undocumented = [], []
@@ -73,7 +75,7 @@ def test_public_symbols_state_their_obligations(module):
         f"invariant obligations (§2.2 contract vocabulary): {missing}")
 
 
-@pytest.mark.parametrize("module", [graph_mod, passes_mod],
+@pytest.mark.parametrize("module", [graph_mod, passes_mod, cache_mod],
                          ids=lambda m: m.__name__)
 def test_public_class_members_are_documented(module):
     gaps = []
@@ -94,7 +96,7 @@ def test_public_class_members_are_documented(module):
         f"{gaps}")
 
 
-@pytest.mark.parametrize("module", [graph_mod, passes_mod],
+@pytest.mark.parametrize("module", [graph_mod, passes_mod, cache_mod],
                          ids=lambda m: m.__name__)
 def test_reference_page_lists_every_symbol(module):
     text = DOCS.read_text()
@@ -105,7 +107,7 @@ def test_reference_page_lists_every_symbol(module):
 
 
 def test_module_docstrings_carry_the_contract():
-    for module in (graph_mod, passes_mod):
+    for module in (graph_mod, passes_mod, cache_mod):
         doc = inspect.getdoc(module)
         assert doc and _OBLIGATION.search(doc)
     assert "§2.2" in inspect.getdoc(passes_mod)

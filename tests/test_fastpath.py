@@ -1,0 +1,415 @@
+"""Steady-state dispatch fast path (DESIGN.md §2.3).
+
+Covers the FastPathCache front cache: repeat traffic must skip the
+planner / lowering / scheduler pass / validation / digest entirely, any
+planner or topology mutation must bump the epoch and force a re-plan (no
+stale executable served), `REPRO_MP_VALIDATE=always` must re-validate on
+hits, message identity must be canonical inside a group (permuted operand
+order collides on one entry), and fast-path results must be numerically
+identical to the slow path on bridge and full-mesh topologies.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.comm.engine as engine_mod
+import repro.comm.graph as graph_mod
+from repro.comm import CommConfig, CommSession, FastPathCache, make_policy
+from repro.comm.cache import FastPathEntry
+from repro.core import Link, PathPlanner, Topology
+
+MiB = 1 << 20
+
+
+@pytest.fixture()
+def topo():
+    return Topology.full_mesh(8, with_host=False, name="mesh8")
+
+
+@pytest.fixture()
+def session(topo):
+    return CommSession(CommConfig(multipath_threshold=256), topology=topo)
+
+
+def _bridge_topology():
+    """3 devices where 0→1 has one executable route (direct); the other
+    routes stage through the host and are not admitted."""
+    from repro.core.topology import HOST
+    gb = 25.0
+    links = []
+    for a, b in ((0, 1), (0, 2)):
+        links += [Link(a, b, "nvlink", gb), Link(b, a, "nvlink", gb)]
+    links += [Link(2, HOST, "pcie", 12.0), Link(HOST, 2, "pcie", 12.0),
+              Link(HOST, 1, "pcie", 12.0), Link(1, HOST, "pcie", 12.0)]
+    return Topology(3, links, name="bridge3")
+
+
+def _count_plan_calls(sess):
+    """Wrap the planner's plan/plan_group with call counters."""
+    counts = {"plan": 0, "plan_group": 0}
+    orig_plan, orig_group = sess.planner.plan, sess.planner.plan_group
+
+    def plan(*a, **k):
+        counts["plan"] += 1
+        return orig_plan(*a, **k)
+
+    def plan_group(*a, **k):
+        counts["plan_group"] += 1
+        return orig_group(*a, **k)
+
+    # Neither name is an _EPOCH_ATTRS member, so instrumenting does not
+    # itself invalidate the fast path.
+    sess.planner.plan = plan
+    sess.planner.plan_group = plan_group
+    return counts
+
+
+# ------------------------------ fast path ----------------------------------
+
+def test_repeat_send_skips_planner_entirely(session):
+    counts = _count_plan_calls(session)
+    msg = jnp.arange(4096, dtype=jnp.float32)
+    out1 = session.send(msg, 0, 1)
+    assert counts["plan"] == 1
+    out2 = session.send(msg * 2, 0, 1)
+    out3 = session.send(msg - 1, 0, 1)
+    assert counts["plan"] == 1               # hits never re-plan
+    fp = session.stats()["fastpath"]
+    assert fp["enabled"] and fp["hits"] == 2 and fp["misses"] == 1
+    assert fp["invalidations"] == 0
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(msg))
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(msg * 2))
+    np.testing.assert_array_equal(np.asarray(out3), np.asarray(msg - 1))
+
+
+def test_fastpath_hit_still_counts_plan_cache_and_schedules(session):
+    """The front cache must not make the plan-cache stats or the schedule
+    counters lie: a hit still registers a plan-cache hit (recency
+    refreshed) and counts under its concrete schedule name."""
+    msg = jnp.arange(512, dtype=jnp.float32)
+    session.send(msg, 3, 4)
+    h0 = session.stats()["cache"]["hits"]
+    session.send(msg, 3, 4)
+    s = session.stats()
+    assert s["cache"]["hits"] == h0 + 1
+    assert s["schedules"]["round_robin"] == 2
+    # per-executable attribution (PlanLifecycle)
+    entry = next(iter(session.engine._fastpath._store.values()))[1]
+    assert entry.compiled.lifecycle.fastpath_hits == 1
+    assert entry.compiled.lifecycle.staging_ns > 0
+
+
+def test_fastpath_distinguishes_request_knobs(session):
+    msg = jnp.arange(2048, dtype=jnp.float32)
+    session.send(msg, 0, 1)
+    session.send(msg, 0, 1, window=2)               # window in signature
+    session.send(msg, 0, 1, schedule="depth_first")  # schedule in signature
+    session.send(msg, 0, 1, max_paths=2)            # planner knob override
+    fp = session.stats()["fastpath"]
+    assert fp["misses"] == 4 and fp["hits"] == 0
+    # each variant now hits its own entry
+    session.send(msg, 0, 1, window=2)
+    session.send(msg, 0, 1, schedule="depth_first")
+    assert session.stats()["fastpath"]["hits"] == 2
+
+
+def test_single_and_group_mode_do_not_collide(session):
+    """plan() and plan_group() may resolve one spec differently — the
+    request signature separates the modes."""
+    msg = jnp.arange(1024, dtype=jnp.float32)
+    session.send(msg, 0, 1)
+    session.exchange([(msg, 0, 1)])
+    fp = session.stats()["fastpath"]
+    assert fp["misses"] == 2 and fp["size"] == 2
+
+
+def test_staging_pool_reused_across_launches(session):
+    msg = jnp.arange(4096, dtype=jnp.float32)
+    for i in range(4):
+        session.send(msg + i, 0, 1)
+    eng = session.engine
+    assert len(eng._staging) == 1            # ONE pooled staging program
+    assert eng.staging_ns > 0
+    assert session.stats()["fastpath"]["staging_ns"] == eng.staging_ns
+
+
+def test_fastpath_disabled_replans_every_dispatch(topo):
+    sess = CommSession(CommConfig(multipath_threshold=256, fastpath=False),
+                       topology=topo)
+    counts = _count_plan_calls(sess)
+    msg = jnp.arange(1024, dtype=jnp.float32)
+    sess.send(msg, 0, 1)
+    sess.send(msg, 0, 1)
+    assert counts["plan"] == 2               # slow path every time
+    fp = sess.stats()["fastpath"]
+    assert not fp["enabled"]
+    assert fp["hits"] == 0 and fp["misses"] == 0 and fp["size"] == 0
+    assert sess.stats()["cache"]["hits"] == 1   # compiled program reused
+
+
+# ------------------------- epoch invalidation -------------------------------
+
+def test_planner_mutation_bumps_epoch_and_replans(session):
+    counts = _count_plan_calls(session)
+    msg = jnp.arange(1 * MiB // 4, dtype=jnp.float32)
+    session.send(msg, 0, 1)
+    assert counts["plan"] == 1
+    epoch0 = session.planner.epoch
+    session.planner.max_paths = 2
+    assert session.planner.epoch != epoch0
+    session.send(msg, 0, 1)
+    assert counts["plan"] == 2               # stale entry NOT served
+    fp = session.stats()["fastpath"]
+    assert fp["invalidations"] == 1
+    # the re-planned entry honors the new knob
+    entry = next(iter(session.engine._fastpath._store.values()))[1]
+    assert all(p.num_paths <= 2 for p in entry.plans)
+
+
+def test_policy_swap_invalidates(session):
+    msg = jnp.arange(2048, dtype=jnp.float32)
+    session.send(msg, 0, 1)
+    session.planner.policy = make_policy("round_robin")
+    out = session.send(msg, 0, 1)
+    assert session.stats()["fastpath"]["invalidations"] == 1
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(msg))
+
+
+def test_topology_mutation_invalidates(topo):
+    sess = CommSession(CommConfig(multipath_threshold=64), topology=topo)
+    counts = _count_plan_calls(sess)
+    msg = jnp.arange(64 * 1024, dtype=jnp.float32)
+    sess.send(msg, 0, 1)                     # multipath: stages via peers
+    entry0 = next(iter(sess.engine._fastpath._store.values()))[1]
+    assert any((0, 2) in p.directional_links() for p in entry0.plans)
+    topo.remove_link(0, 2)
+    topo.remove_link(2, 0)
+    out = sess.send(msg, 0, 1)
+    assert counts["plan"] == 2
+    assert sess.stats()["fastpath"]["invalidations"] == 1
+    entry1 = next(iter(sess.engine._fastpath._store.values()))[1]
+    assert all((0, 2) not in p.directional_links() for p in entry1.plans)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(msg))
+
+
+def test_topology_add_link_invalidates(topo):
+    sess = CommSession(CommConfig(multipath_threshold=64), topology=topo)
+    msg = jnp.arange(32 * 1024, dtype=jnp.float32)
+    sess.send(msg, 0, 1)
+    topo.add_link(Link(0, 1, "nvlink", 25.0))    # aggregate more bandwidth
+    sess.send(msg, 0, 1)
+    assert sess.stats()["fastpath"]["invalidations"] == 1
+
+
+def test_group_invalidation_replans_jointly(session):
+    counts = _count_plan_calls(session)
+    a = jnp.arange(1024, dtype=jnp.float32)
+    b = jnp.arange(1024, dtype=jnp.float32) * -1
+    session.exchange([(a, 0, 1), (b, 1, 0)])
+    session.exchange([(a, 0, 1), (b, 1, 0)])
+    assert counts["plan_group"] == 1
+    session.planner.max_paths = 3
+    fwd, rev = session.exchange([(a, 0, 1), (b, 1, 0)])
+    assert counts["plan_group"] == 2
+    assert session.stats()["fastpath"]["invalidations"] == 1
+    np.testing.assert_array_equal(np.asarray(fwd), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(rev), np.asarray(b))
+
+
+# ----------------------- canonical message identity -------------------------
+
+def test_permuted_group_collides_on_one_entry(session):
+    """ROADMAP graph-level cache dedup: operand order is not message
+    identity — a permuted re-issue of the same traffic pattern must hit
+    the same compiled program AND the fast path."""
+    a = jnp.arange(1000, dtype=jnp.float32)
+    b = jnp.arange(500, dtype=jnp.int32)
+    o1 = session.exchange([(a, 0, 1), (b, 2, 3)])
+    o2 = session.exchange([(b, 2, 3), (a, 0, 1)])   # permuted
+    s = session.stats()
+    assert s["cache"]["size"] == 1                   # ONE compiled program
+    assert s["fastpath"]["misses"] == 1 and s["fastpath"]["hits"] == 1
+    np.testing.assert_array_equal(np.asarray(o1[0]), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(o1[1]), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(o2[0]), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(o2[1]), np.asarray(a))
+
+
+def test_canonicalization_keeps_duplicate_specs_aligned(session):
+    """Messages with identical (src, dst, nelems, dtype) are
+    interchangeable in the program; results must still align with the
+    caller's operands."""
+    m0 = jnp.arange(256, dtype=jnp.float32)
+    m1 = m0 * -5.0
+    o0, o1 = session.exchange([(m0, 0, 7), (m1, 0, 7)])
+    np.testing.assert_array_equal(np.asarray(o0), np.asarray(m0))
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(m1))
+
+
+# --------------------------- validate modes ---------------------------------
+
+def _count_validate_calls(monkeypatch):
+    calls = {"n": 0}
+    orig = engine_mod.validate_plan
+
+    def spy(plan):
+        calls["n"] += 1
+        return orig(plan)
+
+    monkeypatch.setattr(engine_mod, "validate_plan", spy)
+    return calls
+
+
+def test_validate_miss_only_by_default(session, monkeypatch):
+    calls = _count_validate_calls(monkeypatch)
+    msg = jnp.arange(512, dtype=jnp.float32)
+    session.send(msg, 0, 1)
+    n_miss = calls["n"]
+    assert n_miss >= 1                       # validated when built
+    session.send(msg, 0, 1)
+    assert calls["n"] == n_miss              # hits trust the epoch stamp
+
+
+def test_validate_always_revalidates_on_hits(topo, monkeypatch):
+    sess = CommSession(CommConfig(multipath_threshold=256,
+                                  validate="always"), topology=topo)
+    calls = _count_validate_calls(monkeypatch)
+    msg = jnp.arange(512, dtype=jnp.float32)
+    sess.send(msg, 0, 1)
+    n_miss = calls["n"]
+    out = sess.send(msg, 0, 1)
+    assert calls["n"] == n_miss + 1          # one plan re-validated on hit
+    assert sess.stats()["fastpath"]["hits"] == 1
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(msg))
+
+
+def test_validate_env_and_config_checked(monkeypatch):
+    monkeypatch.setenv("REPRO_MP_VALIDATE", "always")
+    monkeypatch.setenv("REPRO_MP_FASTPATH", "0")
+    cfg = CommConfig.from_env()
+    assert cfg.validate == "always" and cfg.fastpath is False
+    with pytest.raises(ValueError, match="unknown validate mode"):
+        CommConfig(validate="sometimes")
+
+
+# ------------------------ numerics: fast == slow ----------------------------
+
+@pytest.mark.parametrize("make_topo", [
+    lambda: Topology.full_mesh(8, with_host=False, name="mesh8"),
+    _bridge_topology,
+], ids=["full_mesh", "bridge"])
+def test_fastpath_matches_slowpath_numerics(make_topo):
+    fast = CommSession(CommConfig(multipath_threshold=64, fastpath=True),
+                       topology=make_topo())
+    slow = CommSession(CommConfig(multipath_threshold=64, fastpath=False),
+                       topology=make_topo())
+    rng = np.random.RandomState(0)
+    msg = jnp.asarray(rng.randn(3001), jnp.float32)
+    for _ in range(2):   # second round exercises the hit path
+        got_fast = fast.send(msg, 0, 1)
+        got_slow = slow.send(msg, 0, 1)
+        np.testing.assert_array_equal(np.asarray(got_fast),
+                                      np.asarray(got_slow))
+        np.testing.assert_array_equal(np.asarray(got_fast), np.asarray(msg))
+    ex_fast = fast.exchange([(msg, 0, 1), (msg * 2, 1, 0)])
+    ex_slow = slow.exchange([(msg, 0, 1), (msg * 2, 1, 0)])
+    for f, s in zip(ex_fast, ex_slow):
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(s))
+    assert fast.stats()["fastpath"]["hits"] >= 1
+    assert slow.stats()["fastpath"]["hits"] == 0
+
+
+# ------------------------- digest memoization -------------------------------
+
+def test_graph_digest_computed_once_per_instance(session, monkeypatch):
+    """Satellite regression: ``digest()`` used to re-hash the whole graph
+    on every ``_group_key`` call; it must be computed once per (frozen)
+    instance."""
+    plan = session.plan_for(0, 1, 3331, jnp.float32, max_paths=3,
+                            num_chunks=3)
+    graph = graph_mod.lower(plan)
+    calls = {"n": 0}
+    orig = graph_mod.canonical_digest
+
+    def spy(payload):
+        calls["n"] += 1
+        return orig(payload)
+
+    monkeypatch.setattr(graph_mod, "canonical_digest", spy)
+    d1 = graph.digest()
+    d2 = graph.digest()
+    d3 = graph.digest()
+    assert d1 == d2 == d3
+    assert calls["n"] <= 1   # 0 if another test already digested this memo
+
+
+def test_fastpath_cache_unit():
+    cache = FastPathCache(capacity=2)
+    e = FastPathEntry(plans=(), graph=None, digest="d", key="k",
+                      compiled=None, schedule="round_robin")
+    cache.put("sig1", (0,), e)
+    assert cache.get("sig1", (0,)) is e
+    assert cache.get("sig1", (1,)) is None           # epoch mismatch
+    assert cache.stats()["invalidations"] == 1
+    assert "sig1" not in cache                        # stale entry dropped
+    cache.put("sig1", (1,), e)
+    cache.put("sig2", (1,), e)
+    cache.put("sig3", (1,), e)                        # evicts LRU sig1
+    assert cache.stats()["evictions"] == 1
+    assert len(cache) == 2
+    with pytest.raises(ValueError, match="positive"):
+        FastPathCache(capacity=0)
+
+
+def test_engine_stats_shape(session):
+    session.send(jnp.arange(64, dtype=jnp.float32), 0, 1)
+    s = session.engine.stats()
+    assert set(s) == {"dispatches", "cache", "fastpath", "graph",
+                      "schedules"}
+    assert {"enabled", "validate", "staging_ns", "hits", "misses",
+            "invalidations", "evictions", "size",
+            "capacity"} <= set(s["fastpath"])
+
+
+def test_session_stats_fastpath_without_engine(topo):
+    sess = CommSession(CommConfig(), topology=topo)
+    fp = sess.stats()["fastpath"]              # engine never materialized
+    assert fp["enabled"] and fp["hits"] == 0 and fp["invalidations"] == 0
+
+
+def test_staging_pool_is_bounded(session):
+    """Each pooled staging program pins a device-resident zero template;
+    the pool must evict LRU entries past the fast-path capacity instead
+    of growing with every distinct message size."""
+    eng = session.engine
+    eng._fastpath.capacity = 4      # shrink the shared bound for the test
+    for nelems in range(64, 64 + 8):
+        session.send(jnp.arange(nelems, dtype=jnp.float32), 0, 1)
+    assert len(eng._staging) == 4
+
+
+def test_weighted_schedule_recomputed_after_topology_mutation(topo):
+    """The schedule memo must not serve a model-weighted dispatch order
+    computed from pre-mutation link bandwidths (Topology hashes by
+    identity, so the epoch has to be part of the memo key)."""
+    from repro.comm.engine import _scheduled_graph
+
+    sess = CommSession(CommConfig(multipath_threshold=64,
+                                  schedule="critical_path"), topology=topo)
+    msg = jnp.arange(32 * 1024, dtype=jnp.float32)
+    sess.send(msg, 0, 1)
+    before = _scheduled_graph.cache_info().misses
+    topo.add_link(Link(0, 1, "nvlink", 400.0))   # reweight the direct link
+    sess.send(msg, 0, 1)
+    assert _scheduled_graph.cache_info().misses > before
+
+
+def test_planner_epoch_tracks_topology(topo):
+    planner = PathPlanner(topo)
+    e0 = planner.epoch
+    topo.bump_epoch()
+    assert planner.epoch != e0
+    e1 = planner.epoch
+    planner.include_host = True
+    assert planner.epoch != e1

@@ -281,7 +281,7 @@ def test_equal_graph_per_scheduler(topo, name):
     sess = CommSession(CommConfig(multipath_threshold=256), topology=topo)
     eng = sess.engine
     plan = eng.plan_for(0, 1, 4096, max_paths=3, num_chunks=4)
-    graph = eng._group_graph((plan,), 2, name)
+    graph, _ = eng._group_graph((plan,), 2, name)
     fn = eng._build_group_fn(graph, (4,))
     traced = _count_ppermutes(fn, jax.ShapeDtypeStruct(
         (2, eng.num_devices, 4096), jnp.float32))

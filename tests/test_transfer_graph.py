@@ -265,7 +265,7 @@ def test_equal_graph_invariant_single(topo, window):
     sess = CommSession(CommConfig(multipath_threshold=256), topology=topo)
     eng = sess.engine
     plan = eng.plan_for(0, 1, 4096, max_paths=3, num_chunks=4)
-    graph = eng._group_graph((plan,), window)
+    graph, _ = eng._group_graph((plan,), window)
     fn = eng._build_group_fn(graph, (4,))
     traced = _count_ppermutes(fn, jax.ShapeDtypeStruct(
         (window, eng.num_devices, 4096), jnp.float32))
@@ -279,7 +279,7 @@ def test_equal_graph_invariant_group(topo):
     group = eng.plan_group_for([(0, 1, 1024, jnp.float32),
                                 (1, 0, 2048, jnp.float32),
                                 (2, 3, 512, jnp.int32)])
-    graph = eng._group_graph(group.plans, 1)
+    graph, _ = eng._group_graph(group.plans, 1)
     fn = eng._build_group_fn(graph, (4, 4, 4))
     abstracts = [jax.ShapeDtypeStruct((1, eng.num_devices, n), dt)
                  for n, dt in ((1024, jnp.float32), (2048, jnp.float32),
@@ -295,7 +295,7 @@ def test_compiled_lifecycle_reports_graph_nodes(topo):
     assert compiled.lifecycle.num_nodes == lower(plan).num_nodes
     assert isinstance(compiled.key, GroupKey)
     assert compiled.key.digest == sess.engine._group_graph(
-        (plan,), 1).digest()
+        (plan,), 1)[0].digest()
     s = sess.stats()
     assert s["graph"]["nodes_compiled"] == lower(plan).num_nodes
     assert s["graph"]["edges_compiled"] == lower(plan).num_edges
