@@ -1,0 +1,175 @@
+"""Calibration accuracy — cold §4.4 constants vs fitted profile (§4.4c).
+
+The analytical model (DESIGN.md §4.4) ships with constants measured on
+the paper's DGX A100; on any other machine — including this CPU test
+backend — its absolute predictions are off, even if the *ordering* of
+candidate plans is usually right. The measured-feedback loop (§4.4c)
+closes that gap: run real traffic with ``REPRO_MP_TELEMETRY`` on, fit a
+:class:`CalibrationProfile`, and re-score.
+
+Rows, per (route signature, chunks-per-path, schedule):
+
+* ``calibration/.../model_err_cold``   — mean relative error of the
+  constant-driven model against measured dispatch time,
+* ``calibration/.../model_err_fitted`` — same samples re-scored through
+  the fitted profile; the derived column reports the improvement ratio
+  (acceptance: fitted is strictly closer than the constants).
+
+Plus two overhead rows gating the "near-zero cost when off" claim:
+
+* ``calibration/telemetry_off/setup_fastpath`` — steady-state resolution
+  cost with telemetry disabled; directly comparable with
+  ``dispatch/nodesN/setup_fastpath`` from :mod:`bench_dispatch` (CI
+  asserts they agree within noise),
+* ``calibration/telemetry_on/setup_fastpath`` — the same with the
+  recorder enabled (the price of a sample per dispatch).
+
+``--profile-out PATH`` writes the fitted profile JSON (the CI bench-smoke
+step uploads it alongside the ``BENCH_*.json`` artifact).
+"""
+
+import time
+
+from benchmarks import common
+from benchmarks.common import Row
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CommConfig, CommSession, modeled_vs_measured
+from repro.core import Topology
+
+NELEMS = 1 << 15     # 128 KiB f32 — multipath engages, compiles stay quick
+SENDS_PER_CONFIG = 8
+#: Schedules exercised by the calibration sweep — one identity pass and
+#: one model-driven pass, so fitted terms are scored on both kinds.
+CALIBRATION_SCHEDULES = ["round_robin", "critical_path"]
+
+
+def _session(telemetry: bool):
+    topo = Topology.full_mesh(4, with_host=False)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("dev",))
+    return CommSession(
+        CommConfig(multipath_threshold=64, fastpath=True,
+                   telemetry=telemetry),
+        mesh=mesh, topology=topo)
+
+
+def _setup_us(sess, chunks: int, iters: int = 10) -> float:
+    """Mean resolution-stage cost (mirrors bench_dispatch._setup_us)."""
+    eng = sess.engine
+    specs = [(0, 1, NELEMS, jnp.float32)]
+    t0 = time.perf_counter_ns()
+    for _ in range(iters):
+        eng._resolve(specs, window=1, max_paths=3, num_chunks=chunks,
+                     exclusive=False, schedule=None, single=True)
+    return (time.perf_counter_ns() - t0) / iters / 1e3
+
+
+def _drive(sess) -> None:
+    """Dispatch every (chunks, schedule) config enough times to fit."""
+    msg = jnp.arange(NELEMS, dtype=jnp.float32)
+    for chunks in common.DISPATCH_CHUNKS:
+        for sched in CALIBRATION_SCHEDULES:
+            for _ in range(SENDS_PER_CONFIG):
+                jax.block_until_ready(
+                    sess.send(msg, 0, 1, max_paths=3, num_chunks=chunks,
+                              schedule=sched))
+
+
+def _error_rows(sess, profile) -> list[Row]:
+    """Per-signature modeled-vs-measured rows, cold and fitted."""
+    rows = []
+    by_sig: dict[tuple, list] = {}
+    for s in sess.telemetry.samples():
+        by_sig.setdefault((s.schedule, s.num_paths, s.routes), []).append(s)
+    for (sched, npaths, _routes), group in sorted(
+            by_sig.items(), key=lambda kv: (kv[0][0] or "", kv[0][1])):
+        chunks = group[0].routes[0][0][2] if group[0].routes else 0
+        res = modeled_vs_measured(group, sess.topology, profile=profile)
+        cold = res["constant"]["mean_rel_err"]
+        fit = res["fitted"]["mean_rel_err"]
+        name = f"calibration/{sched}/paths{npaths}/chunks{chunks}"
+        improve = cold / max(fit, 1e-9)
+        extra = {"schedule": sched, "num_paths": npaths,
+                 "chunks_per_path": chunks, "samples": res["num_samples"],
+                 "mean_rel_err_cold": round(cold, 4),
+                 "mean_rel_err_fitted": round(fit, 4),
+                 "improvement_x": round(improve, 2)}
+        rows.append(Row(f"{name}/model_err_cold", cold * 1e2,
+                        "pct_rel_err", extra))
+        rows.append(Row(f"{name}/model_err_fitted", fit * 1e2,
+                        f"{improve:.1f}x_closer", extra))
+    return rows
+
+
+def run(profile_out: str | None = None) -> list[Row]:
+    rows = []
+
+    # -- fit a profile from real traffic, score cold vs fitted
+    sess = _session(telemetry=True)
+    _drive(sess)
+    profile = sess.calibrate(min_samples=2, warmup=1)
+    rows += _error_rows(sess, profile)
+    agg = modeled_vs_measured(sess.telemetry.samples(), sess.topology,
+                              profile=profile)
+    rows.append(Row(
+        "calibration/all/model_err_fitted",
+        agg["fitted"]["mean_rel_err"] * 1e2,
+        f"vs_cold_{agg['constant']['mean_rel_err'] * 1e2:.0f}pct",
+        {"samples": agg["num_samples"],
+         "mean_rel_err_cold": round(agg["constant"]["mean_rel_err"], 4),
+         "mean_rel_err_fitted": round(agg["fitted"]["mean_rel_err"], 4),
+         "fitted_links": len(profile.link_bandwidth_gbps),
+         "topology_digest": profile.topology_digest}))
+    if profile_out:
+        import json
+        with open(profile_out, "w") as f:
+            json.dump(profile.to_payload(), f, indent=2, sort_keys=True)
+        print(f"# wrote calibration profile to {profile_out}", flush=True)
+
+    # -- telemetry overhead: off must match bench_dispatch's fast path
+    msg = jnp.arange(NELEMS, dtype=jnp.float32)
+    chunks = common.DISPATCH_CHUNKS[0]
+    for label, telemetry in (("telemetry_off", False), ("telemetry_on",
+                                                        True)):
+        osess = _session(telemetry=telemetry)
+        jax.block_until_ready(osess.send(msg, 0, 1, max_paths=3,
+                                         num_chunks=chunks))
+        setup = _setup_us(osess, chunks)
+        rows.append(Row(f"calibration/{label}/setup_fastpath", setup,
+                        "steady_state",
+                        {"chunks_per_path": chunks,
+                         "telemetry": telemetry}))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one chunk count only (CI smoke step)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as a JSON artifact")
+    ap.add_argument("--profile-out", metavar="PATH", default=None,
+                    help="write the fitted CalibrationProfile JSON here")
+    args = ap.parse_args()
+    if args.smoke:
+        common.DISPATCH_CHUNKS[:] = common.DISPATCH_CHUNKS[:1]
+    rows = run(profile_out=args.profile_out)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row.csv(), flush=True)
+    if args.json:
+        payload = [{"name": r.name, "us_per_call": round(r.us, 2),
+                    "derived": r.derived, **r.extra} for r in rows]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload)} rows to {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

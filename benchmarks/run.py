@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV:
 * bench_omb_bibw       → paper Fig. 9/10 (OMB bidirectional BW + groups)
 * bench_jacobi         → paper Fig. 12  (Jacobi solver speedup + halo group)
 * bench_graph_overhead → paper Fig. 13/14 (plan lifecycle costs)
+* bench_calibration    → DESIGN.md §4.4c (model error, cold vs fitted)
 * bench_collectives    → paper §6 future work (multipath collectives)
 
 ``--smoke`` shrinks every size sweep to its smallest point (CI's tier-1
@@ -30,13 +31,15 @@ def _apply_smoke() -> None:
 
 
 def collect() -> list:
-    from benchmarks import (bench_collectives, bench_dispatch,
-                            bench_graph_overhead, bench_jacobi,
-                            bench_omb_bibw, bench_omb_bw, bench_put_bw)
+    from benchmarks import (bench_calibration, bench_collectives,
+                            bench_dispatch, bench_graph_overhead,
+                            bench_jacobi, bench_omb_bibw, bench_omb_bw,
+                            bench_put_bw)
 
     rows = []
     for mod in (bench_put_bw, bench_omb_bw, bench_omb_bibw, bench_jacobi,
-                bench_graph_overhead, bench_dispatch, bench_collectives):
+                bench_graph_overhead, bench_dispatch, bench_calibration,
+                bench_collectives):
         rows.extend(mod.run())
     return rows
 

@@ -10,6 +10,8 @@ caching. Layering (DESIGN.md §1):
 * :mod:`repro.comm.policy`      — pluggable :class:`PathPolicy` strategies
 * :mod:`repro.comm.planner`     — route enumeration + plan construction
 * :mod:`repro.comm.cache`       — compiled-plan LRU (CUDA-Graph analogue)
+* :mod:`repro.comm.telemetry`   — per-dispatch stage-timing recorder (§4.4c)
+* :mod:`repro.comm.calibration` — measured-feedback model fitting (§4.4c)
 * :mod:`repro.comm.collectives` — bidirectional-ring collectives
 * :mod:`repro.comm.engine`      — executable transfer engine (shard_map)
 * :mod:`repro.comm.session`     — :class:`CommSession` facade
@@ -45,6 +47,11 @@ from repro.comm.planner import PathPlanner  # noqa: F401
 from repro.comm.cache import (  # noqa: F401
     CompiledPlan, FastPathCache, FastPathEntry, PlanLifecycle,
     TransferPlanCache, compile_plan)
+from repro.comm.telemetry import (  # noqa: F401
+    DispatchSample, StageTimings, TimelineRecorder)
+from repro.comm.calibration import (  # noqa: F401
+    PROFILE_VERSION, CalibrationFitter, CalibrationProfile,
+    modeled_sample_time_s, modeled_vs_measured)
 from repro.comm.collectives import (  # noqa: F401
     bidir_ring_all_gather, bidir_ring_reduce_scatter, multipath_all_reduce,
     multipath_all_to_all, psum_via_multipath)

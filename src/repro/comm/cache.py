@@ -75,6 +75,18 @@ class PlanLifecycle:
         """Steady-state cost per launch (0.0 before the first launch)."""
         return self.total_launch_ns / self.launches if self.launches else 0.0
 
+    def reset_window(self) -> None:
+        """Zero the *per-window* accumulators (launches,
+        ``total_launch_ns``, ``staging_ns``, ``fastpath_hits``) so
+        long-running sessions can report rates instead of lifetime sums
+        — the ``stats(reset=True)`` windowed-counter contract. The
+        one-time build timings (trace/lower/compile) are preserved:
+        they are identity facts of the executable, not a window."""
+        self.launches = 0
+        self.total_launch_ns = 0
+        self.staging_ns = 0
+        self.fastpath_hits = 0
+
 
 @dataclasses.dataclass
 class CompiledPlan:
@@ -111,6 +123,23 @@ class CompiledPlan:
         self.lifecycle.launches += 1
         self.lifecycle.total_launch_ns += time.perf_counter_ns() - t0
         return out
+
+    def timed_call(self, *args) -> tuple[Any, int, int]:
+        """Blocking launch that splits the wall time into ``(out,
+        launch_ns, execute_ns)`` for telemetry attribution (§4.4c):
+        launch is dispatch-until-control-returns, execute is the
+        ``block_until_ready`` tail. Lifecycle accounting is preserved
+        identically to ``__call__`` (one launch, total = launch +
+        execute), so the two entry points are interchangeable for every
+        stats invariant."""
+        t0 = time.perf_counter_ns()
+        out = self.compiled(*args)
+        t1 = time.perf_counter_ns()
+        jax.block_until_ready(out)
+        t2 = time.perf_counter_ns()
+        self.lifecycle.launches += 1
+        self.lifecycle.total_launch_ns += t2 - t0
+        return out, t1 - t0, t2 - t1
 
 
 def compile_plan(key: Hashable, fn: Callable, abstract_args: tuple,
@@ -198,14 +227,26 @@ class TransferPlanCache:
         """Current keys, least-recently-used first (eviction order)."""
         return list(self._store)
 
-    def stats(self) -> dict[str, int]:
-        """Hit/miss/eviction counters plus current size and capacity."""
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "size": len(self._store),
-                "capacity": self.capacity}
+    def stats(self, reset: bool = False) -> dict[str, int]:
+        """Hit/miss/eviction counters plus current size and capacity.
+
+        ``reset=True`` returns the snapshot then zeroes the counters and
+        every cached plan's windowed lifecycle accumulators
+        (:meth:`PlanLifecycle.reset_window`) — the windowed-stats
+        contract for long-running sessions. Entries themselves are
+        preserved: resetting a window must never force a rebuild."""
+        out = {"hits": self.hits, "misses": self.misses,
+               "evictions": self.evictions, "size": len(self._store),
+               "capacity": self.capacity}
+        if reset:
+            self.hits = self.misses = self.evictions = 0
+            for plan in self._store.values():
+                plan.lifecycle.reset_window()
+        return out
 
     def clear(self) -> None:
-        """Drop every entry (counters are kept; they are cumulative)."""
+        """Drop every entry (counters are kept; they are cumulative —
+        use ``stats(reset=True)`` for windowed counters)."""
         self._store.clear()
 
 
@@ -293,14 +334,22 @@ class FastPathCache:
             self._store.popitem(last=False)
             self.evictions += 1
 
-    def stats(self) -> dict[str, int]:
+    def stats(self, reset: bool = False) -> dict[str, int]:
         """Hit/miss/invalidation/eviction counters plus size and
-        capacity — surfaced as ``session.stats()["fastpath"]``."""
-        return {"hits": self.hits, "misses": self.misses,
-                "invalidations": self.invalidations,
-                "evictions": self.evictions, "size": len(self._store),
-                "capacity": self.capacity}
+        capacity — surfaced as ``session.stats()["fastpath"]``.
+        ``reset=True`` snapshots then zeroes the counters (windowed
+        semantics; entries and their epoch stamps are preserved, so the
+        §4.5 staleness check is unaffected)."""
+        out = {"hits": self.hits, "misses": self.misses,
+               "invalidations": self.invalidations,
+               "evictions": self.evictions, "size": len(self._store),
+               "capacity": self.capacity}
+        if reset:
+            self.hits = self.misses = 0
+            self.invalidations = self.evictions = 0
+        return out
 
     def clear(self) -> None:
-        """Drop every entry (counters are kept; they are cumulative)."""
+        """Drop every entry (counters are kept; they are cumulative —
+        use ``stats(reset=True)`` for windowed counters)."""
         self._store.clear()

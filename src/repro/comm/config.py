@@ -28,6 +28,12 @@ Environment variables read by :meth:`from_env`:
   when the fast path misses; "always" re-validates on every dispatch,
   fast-path hits included (the §4.5 safety escape hatch)
 * ``REPRO_PLAN_CACHE_SIZE``— compiled-plan LRU capacity (default 64)
+* ``REPRO_MP_TELEMETRY``   — "1"/"0" per-dispatch stage-timing telemetry
+  (default off; DESIGN.md §4.4c — off costs one boolean per dispatch)
+* ``REPRO_MP_TELEMETRY_CAPACITY`` — telemetry ring-buffer size (2048)
+* ``REPRO_MP_PROFILE_DIR`` — calibration-profile directory; when set, the
+  session loads the profile matching its topology digest on init and
+  ``session.calibrate(persist=True)`` writes there
 """
 
 from __future__ import annotations
@@ -88,6 +94,9 @@ class CommConfig:
     validate: str = "miss"
     cache_capacity: int = 64
     axis_name: str = "dev"
+    telemetry: bool = False
+    telemetry_capacity: int = 2048
+    profile_dir: str = ""
 
     def __post_init__(self) -> None:
         if self.max_paths < 1:
@@ -117,6 +126,9 @@ class CommConfig:
                              f"expected one of {VALIDATE_MODES}")
         if not self.axis_name:
             raise ValueError("axis_name must be non-empty")
+        if self.telemetry_capacity < 1:
+            raise ValueError("telemetry_capacity must be >= 1, got "
+                             f"{self.telemetry_capacity}")
 
     @classmethod
     def from_env(cls, **overrides) -> "CommConfig":
@@ -139,6 +151,11 @@ class CommConfig:
             validate=os.environ.get("REPRO_MP_VALIDATE", cls.validate),
             cache_capacity=_env_int("REPRO_PLAN_CACHE_SIZE",
                                     cls.cache_capacity),
+            telemetry=_env_bool("REPRO_MP_TELEMETRY", cls.telemetry),
+            telemetry_capacity=_env_int("REPRO_MP_TELEMETRY_CAPACITY",
+                                        cls.telemetry_capacity),
+            profile_dir=os.environ.get("REPRO_MP_PROFILE_DIR",
+                                       cls.profile_dir),
         )
         values.update(overrides)
         return cls(**values)

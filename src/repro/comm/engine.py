@@ -66,6 +66,8 @@ from repro.comm.graph import TransferGraph, lower
 from repro.comm.passes import GraphPass, apply_schedule
 from repro.comm.plan import TransferGroup, TransferPlan, TransferRequest
 from repro.comm.planner import PathPlanner
+from repro.comm.telemetry import (DispatchSample, StageTimings,
+                                  TimelineRecorder)
 from repro.core.pipelining import validate_plan
 from repro.core.topology import HOST, Topology
 
@@ -227,7 +229,8 @@ class MultiPathTransfer:
                  schedule: str | GraphPass = "round_robin",
                  fastpath: bool | None = None,
                  validate: str | None = None,
-                 fastpath_cache: FastPathCache | None = None):
+                 fastpath_cache: FastPathCache | None = None,
+                 telemetry: TimelineRecorder | None = None):
         if mesh is None:
             devs = jax.devices()
             mesh = jax.sharding.Mesh(devs, (AXIS,))
@@ -263,6 +266,15 @@ class MultiPathTransfer:
                              f"expected one of {VALIDATE_MODES}")
         self._fastpath = (fastpath_cache if fastpath_cache is not None
                           else FastPathCache())
+        #: Optional dispatch-timeline recorder (DESIGN §4.4c). ``None``
+        #: or a disabled recorder keeps the dispatch path at one boolean
+        #: check — the zero-overhead-off telemetry contract.
+        self.telemetry = telemetry
+        # Per-dispatch telemetry carried from _resolve to _launch (the
+        # two halves of one dispatch; the engine is not thread-safe and
+        # never was — same invariant as the staging pool).
+        self._pending_stages: StageTimings | None = None
+        self._pending_hit = False
         #: Pooled staging programs keyed on (window, nelems, dtype, src):
         #: each one holds a zero operand template (device_put once) and a
         #: compiled write of the message into the src row — per-launch
@@ -334,7 +346,8 @@ class MultiPathTransfer:
 
     # -- program construction -----------------------------------------------
     def _group_graph(self, plans: Sequence[TransferPlan], window: int,
-                     schedule: str | GraphPass | None = None
+                     schedule: str | GraphPass | None = None,
+                     stages: StageTimings | None = None
                      ) -> tuple[TransferGraph, str]:
         """Lower the fused group and run the scheduler pass (§2.2).
 
@@ -343,17 +356,25 @@ class MultiPathTransfer:
         incorporates the post-pass dispatch order (two schedules of one
         plan get distinct entries and can never cross-serve
         executables) — plus the concrete schedule name that was chosen.
-        The emitter owns no ordering of its own.
+        The emitter owns no ordering of its own. ``stages`` (telemetry
+        only) receives the lower/schedule wall-time attribution.
         """
         for p in plans:
             _check_executable(p)
+        t0 = time.perf_counter_ns()
         graph = lower(TransferGroup(tuple(plans), self.topology.name),
                       window)
+        t1 = time.perf_counter_ns()
         sched = self.schedule if schedule is None else schedule
         if isinstance(sched, str):
-            return _scheduled_graph(graph, sched, self.topology,
-                                    self.topology.epoch)
-        return apply_schedule(graph, sched, self.topology)
+            out = _scheduled_graph(graph, sched, self.topology,
+                                   self.topology.epoch)
+        else:
+            out = apply_schedule(graph, sched, self.topology)
+        if stages is not None:
+            stages.lower_ns = t1 - t0
+            stages.schedule_ns = time.perf_counter_ns() - t1
+        return out
 
     def _count_schedule(self, chosen: str) -> None:
         self.schedule_counts[chosen] = self.schedule_counts.get(chosen,
@@ -451,7 +472,16 @@ class MultiPathTransfer:
 
     def _launch(self, entry: FastPathEntry, messages: Sequence[jax.Array],
                 *, block: bool) -> list[jax.Array]:
-        """Stage operands (pooled) and launch the compiled program ONCE."""
+        """Stage operands (pooled) and launch the compiled program ONCE.
+
+        When telemetry is enabled the launch is split into dispatch vs
+        execute (``CompiledPlan.timed_call``) and the finished
+        :class:`~repro.comm.telemetry.StageTimings` is recorded as one
+        :class:`~repro.comm.telemetry.DispatchSample`; lifecycle
+        accounting is identical either way.
+        """
+        stages, hit = self._pending_stages, self._pending_hit
+        self._pending_stages, self._pending_hit = None, False
         window = entry.graph.window
         stagers = [self._stage_fn(window, m.shape[0], m.dtype, p.src)
                    for m, p in zip(messages, entry.plans)]
@@ -461,7 +491,27 @@ class MultiPathTransfer:
         self.staging_ns += staging
         compiled = entry.compiled
         compiled.lifecycle.staging_ns += staging
-        ys = compiled(*xs) if block else compiled.dispatch(*xs)
+        if stages is None:
+            ys = compiled(*xs) if block else compiled.dispatch(*xs)
+        else:
+            stages.staging_ns = staging
+            if block:
+                ys, stages.launch_ns, stages.execute_ns = (
+                    compiled.timed_call(*xs))
+            else:
+                t1 = time.perf_counter_ns()
+                ys = compiled.dispatch(*xs)
+                stages.launch_ns = time.perf_counter_ns() - t1
+            routes = tuple(
+                tuple((pa.route.directional_links(), pa.nbytes,
+                       pa.num_chunks) for pa in p.paths)
+                for p in entry.plans)
+            self.telemetry.record(DispatchSample(
+                routes=routes,
+                nbytes=sum(p.nbytes for p in entry.plans),
+                num_nodes=entry.graph.num_nodes, window=window,
+                schedule=entry.schedule, stages=stages,
+                fastpath_hit=hit))
         self.dispatches += 1
         return [y[0, p.dst] for y, p in zip(ys, entry.plans)]
 
@@ -484,6 +534,10 @@ class MultiPathTransfer:
         sched = self.schedule if schedule is None else schedule
         sched_name = sched if isinstance(sched, str) else None
         use_fast = self.fastpath and sched_name is not None
+        tel = self.telemetry
+        stages = (StageTimings() if tel is not None and tel.enabled
+                  else None)
+        self._pending_stages, self._pending_hit = stages, False
         shapes = [(nelems, jnp.dtype(dtype))
                   for (_, _, nelems, dtype) in specs]
         sig = epoch = None
@@ -499,6 +553,8 @@ class MultiPathTransfer:
                     compiled = self._compile_group(entry.key, entry.graph,
                                                    shapes)
                     self.cache.put(entry.key, compiled)
+                    if stages is not None:
+                        stages.compile_ns = compiled.lifecycle.build_ns
                 entry.compiled = compiled
                 if self.validate == "always":
                     for p in entry.plans:
@@ -508,7 +564,9 @@ class MultiPathTransfer:
                         cross_flow_exclusive=False)
                 compiled.lifecycle.fastpath_hits += 1
                 self._count_schedule(entry.schedule)
+                self._pending_hit = True
                 return entry
+        t0 = time.perf_counter_ns()
         if single:
             (src, dst, nelems, dtype) = specs[0]
             plans: tuple[TransferPlan, ...] = (self.plan_for(
@@ -518,12 +576,23 @@ class MultiPathTransfer:
             plans = self.plan_group_for(specs, max_paths=max_paths,
                                         num_chunks=num_chunks,
                                         exclusive=exclusive).plans
-        graph, chosen = self._group_graph(plans, window, sched)
+        if stages is not None:
+            stages.plan_ns = time.perf_counter_ns() - t0
+        graph, chosen = self._group_graph(plans, window, sched,
+                                          stages=stages)
         self._count_schedule(chosen)
         key = self._group_key(graph, plans, shapes, window,
                               donated=self._donate)
-        compiled = self.cache.get_or_build(
-            key, lambda: self._compile_group(key, graph, shapes))
+        built: list[CompiledPlan] = []
+
+        def _builder() -> CompiledPlan:
+            c = self._compile_group(key, graph, shapes)
+            built.append(c)
+            return c
+
+        compiled = self.cache.get_or_build(key, _builder)
+        if stages is not None and built:
+            stages.compile_ns = compiled.lifecycle.build_ns
         entry = FastPathEntry(plans=tuple(plans), graph=graph,
                               digest=key.digest, key=key,
                               compiled=compiled, schedule=chosen)
@@ -646,19 +715,36 @@ class MultiPathTransfer:
         return compiled, group
 
     # -- introspection ------------------------------------------------------
-    def stats(self) -> dict:
+    def stats(self, reset: bool = False) -> dict:
         """Engine-level accounting: launches, plan-cache counters, fast-
         path counters (hits / misses / epoch invalidations), cumulative
         staging time, compiled graph totals, and per-schedule resolution
-        counts. ``CommSession.stats()`` re-exports these sections."""
-        return {
+        counts. ``CommSession.stats()`` re-exports these sections.
+
+        ``reset=True`` returns the snapshot then zeroes every windowed
+        counter (engine counters, both caches' counters, cached plans'
+        windowed lifecycles) so long-running sessions can report
+        per-window rates instead of lifetime sums. Telemetry samples are
+        NOT dropped — they feed calibration and are cleared explicitly
+        via the recorder (``session.telemetry.clear()``).
+        """
+        out = {
             "dispatches": self.dispatches,
-            "cache": self.cache.stats(),
+            "cache": self.cache.stats(reset=reset),
             "fastpath": {"enabled": self.fastpath,
                          "validate": self.validate,
                          "staging_ns": self.staging_ns,
-                         **self._fastpath.stats()},
+                         **self._fastpath.stats(reset=reset)},
             "graph": {"nodes_compiled": self.nodes_compiled,
                       "edges_compiled": self.edges_compiled},
             "schedules": dict(self.schedule_counts),
         }
+        if self.telemetry is not None:
+            out["telemetry"] = self.telemetry.stats()
+        if reset:
+            self.dispatches = 0
+            self.staging_ns = 0
+            self.nodes_compiled = 0
+            self.edges_compiled = 0
+            self.schedule_counts = {}
+        return out

@@ -224,16 +224,21 @@ class CriticalPathSchedule:
         :func:`repro.core.pipelining.graph_node_weights_s` plus the
         compiled per-node launch cost, so the greedy optimizes the same
         objective :func:`~repro.core.pipelining.scheduled_time_s` (the
-        ``auto`` arbiter) scores it on. Without one, weights degrade to
-        raw chunk bytes on uniform links and the issue term vanishes —
-        invariants are preserved either way, only the heuristic's
-        objective coarsens.
+        ``auto`` arbiter) scores it on — and when the topology carries a
+        live calibration profile (DESIGN §4.4c) both terms are the
+        *fitted* ones: bandwidths via the topology's calibrated link
+        overlay, the issue slot via
+        :func:`~repro.core.pipelining.launch_model_for`. Without a
+        topology, weights degrade to raw chunk bytes on uniform links
+        and the issue term vanishes — invariants are preserved either
+        way, only the heuristic's objective coarsens.
         """
         if self.topology is not None:
-            from repro.core.pipelining import (GRAPH_LAUNCH_PER_NODE_NS,
-                                               graph_node_weights_s)
+            from repro.core.pipelining import (graph_node_weights_s,
+                                               launch_model_for)
+            launch = launch_model_for(self.topology)
             return (graph_node_weights_s(graph, self.topology),
-                    GRAPH_LAUNCH_PER_NODE_NS / 1e9)
+                    launch.graph_launch_per_node_ns / 1e9)
         return [float(n.nbytes) for n in graph.nodes], 0.0
 
     def __call__(self, graph: TransferGraph) -> TransferGraph:

@@ -16,6 +16,16 @@ Configuration comes from a :class:`~repro.comm.config.CommConfig`
 (constructor keyword arguments override individual fields); the legacy
 ``REPRO_MP_*`` environment variables are honored through
 ``CommConfig.from_env()``, which is the default when no config is given.
+
+Measured feedback (DESIGN §4.4c): every bandwidth the planner reads —
+route enumeration via :meth:`Topology.link`, policy shares via
+``Route.bottleneck_gbps``, and the §4.4 arbitration of candidate path
+counts / exclusive-vs-shared groups via ``estimate_transfer_time_s`` /
+``estimate_group_time_s`` — flows through the topology's calibrated link
+overlay when a :class:`~repro.comm.calibration.CalibrationProfile` is
+attached, so the contention derate prices fitted terms, not nominal
+constants. Attaching a profile bumps the topology epoch, which bumps the
+planner :attr:`PathPlanner.epoch`, so no pre-calibration plan survives.
 """
 
 from __future__ import annotations

@@ -40,6 +40,7 @@ the legacy ``MultiPathTransfer``/``PathPlanner`` wiring.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +49,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.comm import collectives as coll
 from repro import compat
 from repro.comm.cache import CompiledPlan, TransferPlanCache, compile_plan
+from repro.comm.calibration import (CalibrationFitter, CalibrationProfile,
+                                    modeled_vs_measured)
 from repro.compat import shard_map
 from repro.comm.config import CommConfig
 from repro.comm.engine import MultiPathTransfer
@@ -56,6 +59,7 @@ from repro.comm.passes import GraphPass
 from repro.comm.plan import TransferPlan
 from repro.comm.planner import PathPlanner
 from repro.comm.policy import PathPolicy, make_policy
+from repro.comm.telemetry import TimelineRecorder
 from repro.core.topology import Topology
 
 
@@ -142,7 +146,30 @@ class CommSession:
         self.cache = cache if cache is not None else TransferPlanCache(
             self.config.cache_capacity)
         self.collectives = BoundCollectives(self.axis_name)
+        #: Dispatch-timeline recorder (DESIGN §4.4c). ``config.telemetry``
+        #: force-enables it; otherwise ``REPRO_MP_TELEMETRY`` decides
+        #: (default off — one boolean per dispatch).
+        self.telemetry = TimelineRecorder(
+            capacity=self.config.telemetry_capacity,
+            enabled=True if self.config.telemetry else None)
         self._engine: MultiPathTransfer | None = None
+        if self.config.profile_dir:
+            self._load_calibration(self.config.profile_dir)
+
+    def _load_calibration(self, profiles_dir: str) -> None:
+        """Load-on-init: attach the persisted calibration profile whose
+        digest matches this session's topology, if one exists. A corrupt
+        or version-mismatched file degrades to a warning (the session
+        runs on nominal constants) rather than failing construction."""
+        try:
+            profile = CalibrationProfile.load_for(self.topology,
+                                                  profiles_dir)
+        except (ValueError, OSError) as exc:
+            warnings.warn(f"ignoring calibration profile in "
+                          f"{profiles_dir!r}: {exc}", stacklevel=3)
+            return
+        if profile is not None:
+            self.topology.set_calibration(profile)
 
     # -- lazy resources -----------------------------------------------------
     @property
@@ -162,7 +189,8 @@ class CommSession:
                                              cache=self.cache,
                                              schedule=self.config.schedule,
                                              fastpath=self.config.fastpath,
-                                             validate=self.config.validate)
+                                             validate=self.config.validate,
+                                             telemetry=self.telemetry)
         return self._engine
 
     @property
@@ -370,6 +398,46 @@ class CommSession:
             "psum", x, self.collectives.psum,
             P(*([None] * nd)), P(*([None] * nd)), num_nodes=4 * (n - 1))
 
+    # -- calibration (DESIGN §4.4c) -----------------------------------------
+    def calibrate(self, *, fitter: CalibrationFitter | None = None,
+                  attach: bool = True, persist: bool | str = False,
+                  **fit_kwargs) -> CalibrationProfile:
+        """Fit a :class:`CalibrationProfile` from the session's recorded
+        telemetry samples and (by default) attach it to the topology.
+
+        Attaching goes through
+        :meth:`~repro.core.topology.Topology.set_calibration`, so the
+        plan epoch bumps and every subsequent estimate, ``auto``
+        arbitration, and planner derate consumes the fitted terms.
+        ``persist=True`` saves under ``config.profile_dir`` (a string
+        persists under that directory instead); ``fit_kwargs`` forward to
+        :class:`CalibrationFitter` (min_samples / warmup / decay /
+        max_ratio — the robustness gates). Raises ``ValueError`` when no
+        samples were recorded (enable ``REPRO_MP_TELEMETRY`` and run
+        traffic first).
+        """
+        samples = self.telemetry.samples()
+        if not samples:
+            raise ValueError(
+                "no telemetry samples recorded — enable REPRO_MP_TELEMETRY "
+                "(or CommConfig.telemetry) and dispatch traffic before "
+                "calibrating")
+        if fitter is None:
+            fitter = CalibrationFitter(self.topology, **fit_kwargs)
+        elif fit_kwargs:
+            raise ValueError("pass fit_kwargs or a fitter, not both")
+        profile = fitter.fit(samples)
+        if attach:
+            self.topology.set_calibration(profile)
+        if persist:
+            out_dir = (persist if isinstance(persist, str)
+                       else self.config.profile_dir)
+            if not out_dir:
+                raise ValueError("persist=True needs config.profile_dir "
+                                 "(or pass persist=<dir>)")
+            profile.save(out_dir)
+        return profile
+
     # -- introspection ------------------------------------------------------
     def describe(self, src: int, dst: int, nbytes: int, *,
                  window: int | None = None,
@@ -449,15 +517,33 @@ class CommSession:
                 "time_first_iter_s": pl.estimate_transfer_time_s(
                     plan, self.topology, first_iteration=True),
                 "launch_overhead_ns": pl.launch_overhead_ns(
-                    plan, compiled_plan=True),
+                    plan, compiled_plan=True, topo=self.topology),
                 "launch_overhead_nograph_ns": pl.launch_overhead_ns(
-                    plan, compiled_plan=False),
+                    plan, compiled_plan=False, topo=self.topology),
                 "effective_gbps": pl.effective_bandwidth_gbps(
                     plan, self.topology),
             },
+            # Measured feedback (§4.4c): which terms the model sections
+            # above actually consumed, plus modeled-vs-measured residuals
+            # over the recorded samples so drift is visible.
+            "calibration": self._calibration_info(),
         }
 
-    def stats(self) -> dict:
+    def _calibration_info(self) -> dict:
+        """The ``describe()['calibration']`` section: live-profile
+        summary and modeled-vs-measured residuals (constant vs fitted)
+        over the telemetry ring — the §4.4c drift-visibility contract."""
+        profile = self.topology.calibration
+        info: dict = {"active": profile is not None}
+        if profile is not None:
+            info["profile"] = profile.summary()
+        samples = self.telemetry.samples()
+        if samples:
+            info["residuals"] = modeled_vs_measured(
+                samples, self.topology, profile)
+        return info
+
+    def stats(self, reset: bool = False) -> dict:
         """One-stop accounting: cache hits/misses, launches, policy,
         topology. ``dispatches`` counts compiled-program launches — a fused
         group (``exchange``, ``send_pytree``, ``bidirectional``) is ONE
@@ -471,32 +557,44 @@ class CommSession:
         is the steady-state dispatch front cache (DESIGN.md §2.3):
         hits / misses / epoch ``invalidations`` plus ``staging_ns``, the
         cumulative host-side staging-dispatch time (staging *execution*
-        overlaps the launch and lands in the launch timings)."""
+        overlaps the launch and lands in the launch timings).
+
+        ``reset=True`` returns the snapshot then zeroes every windowed
+        counter (engine dispatches/staging, both caches, cached plans'
+        windowed lifecycles) — rates instead of lifetime sums for
+        long-running serving sessions. Telemetry samples survive a reset
+        (they feed :meth:`calibrate`); drop them via
+        ``session.telemetry.clear()``.
+        """
         eng = self._engine
         if eng is not None:
-            fastpath = eng.stats()["fastpath"]
+            es = eng.stats(reset=reset)
         else:
             # Same schema (and real default capacity) as the live engine
-            # section, derived from an empty cache rather than spelled
+            # sections, derived from an empty cache rather than spelled
             # out by hand.
             from repro.comm.cache import FastPathCache
-            fastpath = {"enabled": self.config.fastpath,
-                        "validate": self.config.validate,
-                        "staging_ns": 0, **FastPathCache().stats()}
+            es = {"dispatches": 0,
+                  "cache": self.cache.stats(reset=reset),
+                  "fastpath": {"enabled": self.config.fastpath,
+                               "validate": self.config.validate,
+                               "staging_ns": 0, **FastPathCache().stats()},
+                  "graph": {"nodes_compiled": 0, "edges_compiled": 0},
+                  "schedules": {}}
         return {
-            "cache": self.cache.stats(),
-            "dispatches": eng.dispatches if eng is not None else 0,
-            "fastpath": fastpath,
-            "graph": {
-                "nodes_compiled": eng.nodes_compiled if eng else 0,
-                "edges_compiled": eng.edges_compiled if eng else 0,
-            },
+            "cache": es["cache"],
+            "dispatches": es["dispatches"],
+            "fastpath": es["fastpath"],
+            "graph": es["graph"],
             "policy": self.policy.name,
             "schedule": self.config.schedule,
-            "schedules": dict(eng.schedule_counts) if eng else {},
+            "schedules": es["schedules"],
             "topology": self.topology.name,
             "num_devices": self.topology.num_devices,
             "axis_name": self.axis_name,
+            "telemetry": self.telemetry.stats(),
+            "calibration": {
+                "active": self.topology.calibration is not None},
         }
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid

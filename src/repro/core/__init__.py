@@ -28,10 +28,11 @@ import warnings
 
 from repro.core.topology import HOST, Link, Route, Topology  # noqa: F401
 from repro.core.pipelining import (  # noqa: F401
-    ChunkTask, build_schedule, effective_bandwidth_gbps,
-    estimate_group_time_s, estimate_transfer_time_s,
-    group_launch_overhead_ns, launch_overhead_ns, scheduled_time_s,
-    validate_group, validate_plan, windowed_bandwidth_gbps, wire_time_s)
+    ChunkTask, DEFAULT_LAUNCH_MODEL, LaunchModel, build_schedule,
+    effective_bandwidth_gbps, estimate_group_time_s,
+    estimate_transfer_time_s, group_launch_overhead_ns, launch_model_for,
+    launch_overhead_ns, scheduled_time_s, validate_group, validate_plan,
+    windowed_bandwidth_gbps, wire_time_s)
 
 # Legacy re-exports: these classes moved to repro.comm (PEP 562 lazy
 # attributes — resolving them eagerly here would recreate the
@@ -68,7 +69,8 @@ class _LegacyTransferKey:
 
 __all__ = [  # noqa: F822 - lazy names resolved via __getattr__
     "HOST", "Link", "Route", "Topology",
-    "ChunkTask", "build_schedule", "effective_bandwidth_gbps",
+    "ChunkTask", "DEFAULT_LAUNCH_MODEL", "LaunchModel", "launch_model_for",
+    "build_schedule", "effective_bandwidth_gbps",
     "estimate_group_time_s", "estimate_transfer_time_s",
     "group_launch_overhead_ns", "launch_overhead_ns", "scheduled_time_s",
     "validate_group", "validate_plan", "windowed_bandwidth_gbps",

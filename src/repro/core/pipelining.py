@@ -75,6 +75,62 @@ GRAPH_INSTANTIATE_PER_NODE_NS = 85_000
 SYNC_NS_PER_PATH = 2_000            # event record + stream-wait per path
 
 
+@dataclasses.dataclass(frozen=True)
+class LaunchModel:
+    """The §4.4 launch-overhead terms as one swappable value.
+
+    Defaults are the module's nominal constants; a fitted instance comes
+    from :class:`repro.comm.calibration.CalibrationProfile` and reaches
+    every estimator through :func:`launch_model_for` (DESIGN §4.4c) —
+    the model never reads the bare constants once a profile is live.
+    """
+
+    launch_ns_per_node: float = LAUNCH_NS_PER_NODE
+    graph_launch_base_ns: float = GRAPH_LAUNCH_BASE_NS
+    graph_launch_per_node_ns: float = GRAPH_LAUNCH_PER_NODE_NS
+    graph_instantiate_base_ns: float = GRAPH_INSTANTIATE_BASE_NS
+    graph_instantiate_per_node_ns: float = GRAPH_INSTANTIATE_PER_NODE_NS
+    sync_ns_per_path: float = SYNC_NS_PER_PATH
+
+
+#: The nominal (uncalibrated) launch model — exactly the constants above.
+DEFAULT_LAUNCH_MODEL = LaunchModel()
+
+
+def launch_model_for(topo: Topology | None) -> LaunchModel:
+    """Resolve the launch model in force for ``topo``.
+
+    Returns the fitted :class:`LaunchModel` of the topology's live
+    calibration profile when one is attached (and carries launch terms),
+    else :data:`DEFAULT_LAUNCH_MODEL`. Accepts ``None`` so legacy
+    call sites that never knew about calibration keep their exact
+    constant-based behaviour.
+    """
+    prof = getattr(topo, "calibration", None)
+    fitted = getattr(prof, "launch", None)
+    return fitted if fitted is not None else DEFAULT_LAUNCH_MODEL
+
+
+def _calibrated_bw(bw: dict[tuple[int, int], float],
+                   topo: Topology | None) -> dict[tuple[int, int], float]:
+    """Overlay fitted per-link bandwidths onto a plan-embedded map.
+
+    Plans embed the nominal ``Link`` objects that existed when they were
+    planned; when ``topo`` carries a live calibration profile the model
+    must price measured bandwidths instead, so each entry is re-read
+    through :meth:`Topology.link` (which serves the calibrated shadow).
+    No-op without a profile.
+    """
+    if getattr(topo, "calibration", None) is None:
+        return bw
+    out = dict(bw)
+    for key in out:
+        link = topo.link(*key)
+        if link is not None:
+            out[key] = link.bandwidth_gbps
+    return out
+
+
 def _lower(obj, window: int = 1) -> "TransferGraph":
     # Local import: repro.core must stay importable without repro.comm
     # (the comm package itself imports core.topology).
@@ -150,45 +206,54 @@ def validate_group(group: "TransferGroup | Sequence[TransferPlan]") -> None:
 
 def _launch_overhead_from_counts(num_nodes: int, num_paths: int, *,
                                  compiled_plan: bool,
-                                 first_iteration: bool = False) -> float:
+                                 first_iteration: bool = False,
+                                 launch: LaunchModel = DEFAULT_LAUNCH_MODEL
+                                 ) -> float:
     if not compiled_plan:
-        return (num_nodes * LAUNCH_NS_PER_NODE
-                + num_paths * SYNC_NS_PER_PATH)
-    cost = GRAPH_LAUNCH_BASE_NS + num_nodes * GRAPH_LAUNCH_PER_NODE_NS
+        return (num_nodes * launch.launch_ns_per_node
+                + num_paths * launch.sync_ns_per_path)
+    cost = (launch.graph_launch_base_ns
+            + num_nodes * launch.graph_launch_per_node_ns)
     if first_iteration:
-        cost += (GRAPH_INSTANTIATE_BASE_NS
-                 + num_nodes * GRAPH_INSTANTIATE_PER_NODE_NS)
+        cost += (launch.graph_instantiate_base_ns
+                 + num_nodes * launch.graph_instantiate_per_node_ns)
     return float(cost)
 
 
 def launch_overhead_ns(plan: TransferPlan, *, compiled_plan: bool,
-                       first_iteration: bool = False) -> float:
+                       first_iteration: bool = False,
+                       topo: Topology | None = None) -> float:
     """CPU-side overhead for dispatching the plan once (paper §5.5):
-    per-node launch cost × graph node count."""
+    per-node launch cost × graph node count. Pass ``topo`` to price the
+    fitted :class:`LaunchModel` of its live calibration profile."""
     return _launch_overhead_from_counts(
         _lower(plan).num_nodes, len(plan.paths),
-        compiled_plan=compiled_plan, first_iteration=first_iteration)
+        compiled_plan=compiled_plan, first_iteration=first_iteration,
+        launch=launch_model_for(topo))
 
 
 def group_launch_overhead_ns(plans: Sequence[TransferPlan], *,
                              compiled_plan: bool,
                              first_iteration: bool = False,
-                             fused: bool = True) -> float:
+                             fused: bool = True,
+                             topo: Topology | None = None) -> float:
     """CPU-side overhead for a transfer group.
 
     ``fused=True`` models the group as ONE graph launch (the fused SPMD
     program the engine compiles): a single base launch cost amortized over
     the fused graph's node count, and one instantiation on the first
     iteration. ``fused=False`` models the legacy dispatch loop — one
-    launch (and one first-iteration instantiation) per message.
+    launch (and one first-iteration instantiation) per message. ``topo``
+    selects the fitted launch model as in :func:`launch_overhead_ns`.
     """
     if fused:
         return _launch_overhead_from_counts(
             _lower(_as_group(plans)).num_nodes,
             sum(len(p.paths) for p in plans),
-            compiled_plan=compiled_plan, first_iteration=first_iteration)
+            compiled_plan=compiled_plan, first_iteration=first_iteration,
+            launch=launch_model_for(topo))
     return sum(launch_overhead_ns(p, compiled_plan=compiled_plan,
-                                  first_iteration=first_iteration)
+                                  first_iteration=first_iteration, topo=topo)
                for p in plans)
 
 
@@ -282,8 +347,9 @@ def wire_time_s(plan: TransferPlan, topo: Topology, *,
     """
     all_plans = (plan, *concurrent_plans)
     contention, host_flows = _contention(all_plans)
-    times = _graph_message_times_s(_lower(plan), _bandwidth_map(all_plans),
-                                   contention, host_flows)
+    times = _graph_message_times_s(
+        _lower(plan), _calibrated_bw(_bandwidth_map(all_plans), topo),
+        contention, host_flows)
     return times[0]
 
 
@@ -299,7 +365,7 @@ def estimate_transfer_time_s(
     """
     return wire_time_s(plan, topo, concurrent_plans=concurrent_plans) + (
         launch_overhead_ns(plan, compiled_plan=compiled_plan,
-                           first_iteration=first_iteration) / 1e9)
+                           first_iteration=first_iteration, topo=topo) / 1e9)
 
 
 def estimate_group_time_s(
@@ -327,18 +393,19 @@ def estimate_group_time_s(
     if not plans:
         return 0.0
     contention, host_flows = _contention(plans)
-    times = _graph_message_times_s(_lower(g), _bandwidth_map(plans),
-                                   contention, host_flows)
+    times = _graph_message_times_s(
+        _lower(g), _calibrated_bw(_bandwidth_map(plans), topo),
+        contention, host_flows)
     wires = [times[i] for i in range(len(plans))]
     if fused:
         return max(wires) + group_launch_overhead_ns(
             plans, compiled_plan=compiled_plan,
-            first_iteration=first_iteration, fused=True) / 1e9
+            first_iteration=first_iteration, fused=True, topo=topo) / 1e9
     makespan, dispatched = 0.0, 0.0
     for plan, wire in zip(plans, wires):
         dispatched += launch_overhead_ns(
             plan, compiled_plan=compiled_plan,
-            first_iteration=first_iteration) / 1e9
+            first_iteration=first_iteration, topo=topo) / 1e9
         makespan = max(makespan, dispatched + wire)
     return makespan
 
@@ -407,13 +474,14 @@ def scheduled_time_s(graph: "TransferGraph", topo: Topology, *,
     if n == 0:
         return 0.0
     weight = graph_node_weights_s(graph, topo)
+    launch = launch_model_for(topo)
     preds: dict[int, list[int]] = defaultdict(list)
     for e in graph.edges:
         preds[e.dst].append(e.src)
     for a, b in graph.serialization_edges():
         preds[b].append(a)
-    per_node_ns = (GRAPH_LAUNCH_PER_NODE_NS if compiled_plan
-                   else LAUNCH_NS_PER_NODE)
+    per_node_ns = (launch.graph_launch_per_node_ns if compiled_plan
+                   else launch.launch_ns_per_node)
     finish = [0.0] * n
     for idx in graph.topological_order():
         start = idx * per_node_ns / 1e9          # serialized issue chain
@@ -422,12 +490,12 @@ def scheduled_time_s(graph: "TransferGraph", topo: Topology, *,
         finish[idx] = start + weight[idx]
     num_paths = len({(nd.msg_idx, nd.path_idx) for nd in graph.nodes})
     if compiled_plan:
-        base = GRAPH_LAUNCH_BASE_NS
+        base = launch.graph_launch_base_ns
         if first_iteration:
-            base += (GRAPH_INSTANTIATE_BASE_NS
-                     + n * GRAPH_INSTANTIATE_PER_NODE_NS)
+            base += (launch.graph_instantiate_base_ns
+                     + n * launch.graph_instantiate_per_node_ns)
     else:
-        base = num_paths * SYNC_NS_PER_PATH
+        base = num_paths * launch.sync_ns_per_path
     return max(finish) + base / 1e9
 
 
@@ -450,7 +518,8 @@ def windowed_bandwidth_gbps(plan: TransferPlan, topo: Topology, *,
     time; without, per-node launches serialize on the CPU.
     """
     wire = wire_time_s(plan, topo)
-    launch = launch_overhead_ns(plan, compiled_plan=compiled_plan) / 1e9
+    launch = launch_overhead_ns(plan, compiled_plan=compiled_plan,
+                                topo=topo) / 1e9
     # CPU dispatch pipeline: total = first launch + max(wire, launch)*(W-1)
     # + wire of the last message's tail.
     total = launch + window * wire if launch <= wire else (

@@ -14,8 +14,9 @@ representable.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
-from typing import Iterable, Mapping
+from typing import Any, Iterable, Mapping
 
 HOST = -1  # sentinel device id for the host (PCIe-staged) node
 
@@ -87,6 +88,11 @@ class Topology:
         self._uid = next(_UID_SOURCE)
         self._epoch = 0
         self._links: dict[tuple[int, int], Link] = {}
+        #: Measured-feedback overlay (DESIGN §4.4c): a calibration profile
+        #: attached via :meth:`set_calibration` plus the per-link ``Link``
+        #: shadows :meth:`link` serves while it is live.
+        self._calibration: Any | None = None
+        self._calibrated_links: dict[tuple[int, int], Link] = {}
         for link in links:
             self._register(link)
 
@@ -118,9 +124,16 @@ class Topology:
 
         Call after mutating link state out-of-band (e.g. poking
         ``_links`` directly); :meth:`add_link` / :meth:`remove_link` call
-        it for you.
+        it for you. If a calibration profile is attached and the
+        structural :meth:`digest` no longer matches it (links were added
+        or removed), the profile is dropped — fitted terms for a topology
+        that no longer exists must never survive a mutation.
         """
         self._epoch += 1
+        if (self._calibration is not None
+                and self._calibration.topology_digest != self.digest()):
+            self._calibration = None
+            self._calibrated_links = {}
 
     def add_link(self, link: Link) -> None:
         """Register a directional link after construction (aggregating
@@ -134,13 +147,75 @@ class Topology:
         del self._links[(src, dst)]
         self.bump_epoch()
 
+    # -- calibration (measured-feedback overlay, DESIGN §4.4c) -------------
+    def digest(self) -> str:
+        """Structural identity of this topology: a stable hash over the
+        *nominal* link set ``(num_devices, sorted (src, dst, kind, bw))``.
+
+        Calibration profiles are keyed by this digest so fitted terms can
+        never be applied to a different machine shape. Deliberately
+        ignores the calibrated overlay — attaching a profile does not
+        change what machine this is.
+        """
+        payload = (self.num_devices,
+                   tuple(sorted((k[0], k[1], ln.kind,
+                                 round(ln.bandwidth_gbps, 6))
+                                for k, ln in self._links.items())))
+        return hashlib.sha256(repr(payload).encode()).hexdigest()[:32]
+
+    @property
+    def calibration(self) -> Any | None:
+        """The live calibration profile, or ``None`` when the model runs
+        on nominal constants. Set via :meth:`set_calibration`."""
+        return self._calibration
+
+    def set_calibration(self, profile: Any | None) -> None:
+        """Attach (or with ``None`` detach) a calibration profile.
+
+        ``profile`` duck-types :class:`repro.comm.calibration.\
+        CalibrationProfile`: it must carry ``topology_digest``,
+        ``link_bandwidth_gbps`` (``(src, dst) -> GB/s``) and ``launch``.
+        Raises ``ValueError`` if the profile's digest does not match this
+        topology's :meth:`digest` (fitted terms from another machine
+        shape are refused, never silently misapplied). Attaching bumps
+        the plan epoch: every cached plan and fast-path entry priced on
+        the previous terms is invalidated.
+        """
+        if profile is not None:
+            if profile.topology_digest != self.digest():
+                raise ValueError(
+                    f"calibration profile digest "
+                    f"{profile.topology_digest!r} does not match topology "
+                    f"{self.name!r} digest {self.digest()!r}")
+            shadows = {}
+            for key, bw in profile.link_bandwidth_gbps.items():
+                nominal = self._links.get(tuple(key))
+                if nominal is not None and bw > 0:
+                    shadows[tuple(key)] = Link(
+                        nominal.src, nominal.dst, nominal.kind, float(bw))
+            self._calibration = profile
+            self._calibrated_links = shadows
+        else:
+            self._calibration = None
+            self._calibrated_links = {}
+        self._epoch += 1  # not bump_epoch(): digest unchanged, keep profile
+
     # -- queries ----------------------------------------------------------
     @property
     def links(self) -> Mapping[tuple[int, int], Link]:
         return self._links
 
     def link(self, src: int, dst: int) -> Link | None:
-        return self._links.get((src, dst))
+        """The directional link ``src -> dst`` (or ``None``). When a
+        calibration profile is live, returns the fitted-bandwidth shadow
+        of the nominal link — every model evaluation that reads
+        bandwidths through here consumes measured terms automatically."""
+        key = (src, dst)
+        if self._calibrated_links:
+            hit = self._calibrated_links.get(key)
+            if hit is not None:
+                return hit
+        return self._links.get(key)
 
     def has_link(self, src: int, dst: int) -> bool:
         return (src, dst) in self._links

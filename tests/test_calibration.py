@@ -1,0 +1,310 @@
+"""Measured-feedback calibration: profile persistence, fitter gating,
+and fitted-term consumption by the model / ``auto`` / planner
+(DESIGN.md §4.4c).
+
+Acceptance criteria exercised here (ISSUE 6):
+
+* ``CalibrationProfile`` round-trips through its versioned JSON payload
+  and refuses payloads with a mismatched version,
+* profiles are keyed by topology digest: ``load_for`` and
+  ``Topology.set_calibration`` both refuse a digest mismatch, and a
+  structural topology mutation (``remove_link``) drops an attached
+  profile,
+* the fitter is warmup-robust and sample-gated: too few samples fit
+  nothing,
+* a session that records real traffic fits a profile whose modeled
+  times are STRICTLY closer to measured than the cold §4.4 constants,
+* attaching a skewed synthetic profile flips ``auto``'s arbitration —
+  proof the scheduler scores through fitted terms, not the constants.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (CommConfig, CommSession, PathPlanner,
+                        PROFILE_VERSION, CalibrationFitter,
+                        CalibrationProfile, modeled_sample_time_s,
+                        modeled_vs_measured)
+from repro.comm.graph import lower
+from repro.comm.passes import make_schedule
+from repro.comm.telemetry import DispatchSample, StageTimings
+from repro.core import Topology, estimate_transfer_time_s
+from repro.core.pipelining import DEFAULT_LAUNCH_MODEL, LaunchModel
+
+MiB = 1 << 20
+
+
+@pytest.fixture()
+def topo():
+    return Topology.full_mesh(4, with_host=False, name="m4")
+
+
+def _profile(topo, bw=None, launch=None):
+    return CalibrationProfile(
+        topology_digest=topo.digest(),
+        link_bandwidth_gbps=bw or {}, launch=launch,
+        link_samples={k: 5 for k in (bw or {})}, launch_samples=5)
+
+
+def _sample(routes, *, window=1, schedule="round_robin", launch_ns=20_000,
+            execute_ns=100_000, compile_ns=0, num_nodes=4):
+    stages = StageTimings(launch_ns=launch_ns, execute_ns=execute_ns,
+                          compile_ns=compile_ns)
+    nbytes = sum(r[1] for plan in routes for r in plan)
+    return DispatchSample(routes=routes, nbytes=nbytes,
+                          num_nodes=num_nodes, window=window,
+                          schedule=schedule, stages=stages,
+                          fastpath_hit=compile_ns == 0)
+
+
+def _direct_routes(nbytes=4 * MiB, chunks=4):
+    return (((((0, 1),), nbytes, chunks),),)
+
+
+# ------------------------- profile persistence ------------------------------
+
+def test_profile_payload_round_trip(topo):
+    launch = dataclasses.replace(DEFAULT_LAUNCH_MODEL,
+                                 graph_launch_base_ns=12345)
+    prof = _profile(topo, bw={(0, 1): 17.5, (2, 3): 40.0}, launch=launch)
+    clone = CalibrationProfile.from_payload(prof.to_payload())
+    assert clone.topology_digest == prof.topology_digest
+    assert clone.link_bandwidth_gbps == prof.link_bandwidth_gbps
+    assert clone.launch == prof.launch
+    assert clone.version == PROFILE_VERSION
+    assert clone.link_samples == prof.link_samples
+
+
+def test_profile_version_mismatch_rejected(topo):
+    payload = _profile(topo).to_payload()
+    payload["version"] = PROFILE_VERSION + 1
+    with pytest.raises(ValueError, match="version"):
+        CalibrationProfile.from_payload(payload)
+
+
+def test_profile_save_load_for(tmp_path, topo):
+    prof = _profile(topo, bw={(0, 1): 21.0})
+    path = prof.save(tmp_path)
+    assert os.path.basename(path) == prof.filename()
+    loaded = CalibrationProfile.load_for(topo, tmp_path)
+    assert loaded is not None
+    assert loaded.link_bandwidth_gbps == {(0, 1): 21.0}
+    # no profile on disk for a different topology → None, not an error
+    other = Topology.full_mesh(8, with_host=False)
+    assert CalibrationProfile.load_for(other, tmp_path) is None
+
+
+def test_load_for_refuses_digest_mismatch(tmp_path, topo):
+    """A profile file renamed to another topology's slot must not load."""
+    other = Topology.full_mesh(8, with_host=False)
+    payload = _profile(other).to_payload()
+    target = tmp_path / CalibrationProfile(
+        topology_digest=topo.digest()).filename()
+    target.write_text(json.dumps(payload))
+    with pytest.raises(ValueError, match="digest"):
+        CalibrationProfile.load_for(topo, tmp_path)
+
+
+def test_set_calibration_refuses_digest_mismatch(topo):
+    other = Topology.full_mesh(8, with_host=False)
+    with pytest.raises(ValueError, match="digest"):
+        topo.set_calibration(_profile(other))
+
+
+def test_structural_mutation_drops_profile(topo):
+    prof = _profile(topo, bw={(0, 1): 9.0})
+    topo.set_calibration(prof)
+    assert topo.calibration is prof
+    assert topo.link(0, 1).bandwidth_gbps == 9.0   # calibrated shadow
+    topo.remove_link(2, 3)                         # digest changes
+    assert topo.calibration is None
+    assert topo.link(0, 1).bandwidth_gbps != 9.0   # back to nominal
+
+
+def test_detach_restores_nominal(topo):
+    nominal = topo.link(0, 1).bandwidth_gbps
+    topo.set_calibration(_profile(topo, bw={(0, 1): 3.0}))
+    epoch = topo.epoch
+    assert topo.link(0, 1).bandwidth_gbps == 3.0
+    topo.set_calibration(None)
+    assert topo.link(0, 1).bandwidth_gbps == nominal
+    assert topo.epoch != epoch                     # caches must re-key
+
+
+# ------------------------- fitter gating ------------------------------------
+
+def test_fitter_min_sample_gate(topo):
+    fitter = CalibrationFitter(topo, min_samples=5, warmup=1)
+    samples = [_sample(_direct_routes()) for _ in range(3)]
+    prof = fitter.fit(samples)
+    # 3 samples - 1 warmup = 2 < min_samples: nothing is trusted
+    assert prof.link_bandwidth_gbps == {}
+    assert prof.launch is None
+    assert prof.topology_digest == topo.digest()
+
+
+def test_fitter_drops_warmup(topo):
+    # warmup sample is wildly slow (compile/jit noise); the fit must not
+    # let it drag the bandwidth estimate down
+    warm = _sample(_direct_routes(), execute_ns=500_000_000)
+    rest = [_sample(_direct_routes()) for _ in range(6)]
+    fitted = CalibrationFitter(topo, min_samples=3, warmup=1).fit(
+        [warm] + rest)
+    with_warm = CalibrationFitter(topo, min_samples=3, warmup=0).fit(
+        [warm] + rest)
+    key = (0, 1)
+    assert fitted.link_bandwidth_gbps[key] > \
+        with_warm.link_bandwidth_gbps[key]
+
+
+def test_fitter_validation(topo):
+    with pytest.raises(ValueError, match="min_samples"):
+        CalibrationFitter(topo, min_samples=0)
+    with pytest.raises(ValueError, match="warmup"):
+        CalibrationFitter(topo, warmup=-1)
+    with pytest.raises(ValueError, match="decay"):
+        CalibrationFitter(topo, decay=1.5)
+    with pytest.raises(ValueError, match="max_ratio"):
+        CalibrationFitter(topo, max_ratio=0.5)
+
+
+def test_fitted_profile_strictly_closer_on_synthetic_slowdown(topo):
+    """The machine is 10x slower than the constants assume; the fitted
+    profile must model measured times strictly better."""
+    nominal = topo.link(0, 1).bandwidth_gbps
+    true_bw = nominal / 10
+    nbytes = 4 * MiB
+    wire_ns = nbytes / (true_bw * 1e9) * 1e9
+    samples = [_sample(_direct_routes(nbytes), launch_ns=30_000,
+                       execute_ns=int(wire_ns)) for _ in range(8)]
+    prof = CalibrationFitter(topo, min_samples=3, warmup=1).fit(samples)
+    assert prof.link_bandwidth_gbps[(0, 1)] < nominal
+    res = modeled_vs_measured(samples, topo, profile=prof)
+    assert res["fitted"]["mean_rel_err"] < res["constant"]["mean_rel_err"]
+    # and per-sample: the fitted model lands near the measured time
+    fitted_t = modeled_sample_time_s(samples[-1], topo, profile=prof)
+    cold_t = modeled_sample_time_s(samples[-1], topo)
+    measured = samples[-1].measured_s
+    assert abs(fitted_t - measured) < abs(cold_t - measured)
+
+
+# ------------------------- fitted-term consumption --------------------------
+
+def _skewed_profile(topo):
+    """Direct link 25x slower than nominal + µs-scale per-node launch:
+    under these terms front-loading the direct path (critical_path) is a
+    strict loss and round_robin wins."""
+    bw = {k: 50.0 for k in topo.links}
+    bw[(0, 1)] = 2.0
+    launch = dataclasses.replace(DEFAULT_LAUNCH_MODEL,
+                                 graph_launch_per_node_ns=100_000)
+    return _profile(topo, bw=bw, launch=launch)
+
+
+def test_auto_arbitration_flips_on_fitted_terms(topo):
+    """ACCEPTANCE: auto's pick provably consumes the fitted terms."""
+    planner = PathPlanner(topo, multipath_threshold=256)
+    plan = planner.plan(0, 1, 8 * MiB + 12_288, max_paths=3, num_chunks=4,
+                       granularity=4)
+    graph = lower(plan)
+    auto = make_schedule("auto", topo)
+    cold_name, _, cold_scores = auto.select(graph)
+    assert cold_name == "critical_path"
+
+    topo.set_calibration(_skewed_profile(topo))
+    fit_name, _, fit_scores = auto.select(graph)
+    assert fit_name == "round_robin"               # the flip
+    assert fit_scores[fit_name] < fit_scores["critical_path"]
+    assert fit_scores != cold_scores
+
+
+def test_estimates_consume_fitted_bandwidth(topo):
+    planner = PathPlanner(topo, multipath_threshold=256)
+    plan = planner.plan(0, 1, 8 * MiB, max_paths=3)
+    cold = estimate_transfer_time_s(plan, topo)
+    topo.set_calibration(_skewed_profile(topo))
+    fitted = estimate_transfer_time_s(plan, topo)
+    assert fitted > cold                           # slower fitted links
+
+
+def test_launch_model_for_prefers_fitted(topo):
+    from repro.core import launch_model_for
+
+    assert launch_model_for(topo) is DEFAULT_LAUNCH_MODEL
+    custom = dataclasses.replace(DEFAULT_LAUNCH_MODEL,
+                                 graph_launch_base_ns=1)
+    topo.set_calibration(_profile(topo, launch=custom))
+    assert launch_model_for(topo) == custom
+    assert isinstance(launch_model_for(topo), LaunchModel)
+
+
+# ------------------------- session integration ------------------------------
+
+def _session(**cfg):
+    topo = Topology.full_mesh(4, with_host=False)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("dev",))
+    return CommSession(CommConfig(multipath_threshold=64, **cfg),
+                       mesh=mesh, topology=topo)
+
+
+def test_session_calibrate_requires_samples():
+    sess = _session()
+    with pytest.raises(ValueError, match="telemetry"):
+        sess.calibrate()
+
+
+def test_session_calibrate_end_to_end(tmp_path):
+    """Real CPU traffic → fitted profile → strictly closer model, auto
+    arbitration live on fitted terms, residuals in describe()."""
+    sess = _session(telemetry=True)
+    msg = jnp.arange(1 << 14, dtype=jnp.float32)
+    for _ in range(6):
+        jax.block_until_ready(sess.send(msg, 0, 1, max_paths=3,
+                                        num_chunks=2))
+    prof = sess.calibrate(min_samples=2, warmup=1,
+                          persist=str(tmp_path))
+    assert sess.topology.calibration is prof
+    assert sess.stats()["calibration"]["active"] is True
+    res = modeled_vs_measured(sess.telemetry.samples(), sess.topology,
+                              profile=prof)
+    assert (res["fitted"]["mean_rel_err"]
+            < res["constant"]["mean_rel_err"])     # THE acceptance bar
+    info = sess.describe(0, 1, msg.nbytes)["calibration"]
+    assert info["active"] is True
+    assert info["residuals"]["fitted"]["mean_rel_err"] == pytest.approx(
+        res["fitted"]["mean_rel_err"])
+    # persisted profile loads back for an identically-shaped topology
+    reloaded = CalibrationProfile.load_for(sess.topology, str(tmp_path))
+    assert reloaded is not None
+    assert reloaded.link_bandwidth_gbps == prof.link_bandwidth_gbps
+
+
+def test_session_loads_profile_on_init(tmp_path):
+    topo = Topology.full_mesh(4, with_host=False)
+    _profile_for = CalibrationProfile(
+        topology_digest=topo.digest(),
+        link_bandwidth_gbps={(0, 1): 4.0}, launch=None,
+        link_samples={(0, 1): 9}, launch_samples=0)
+    _profile_for.save(str(tmp_path))
+    sess = _session(profile_dir=str(tmp_path))
+    assert sess.topology.calibration is not None
+    assert sess.topology.link(0, 1).bandwidth_gbps == 4.0
+    assert sess.stats()["calibration"]["active"] is True
+
+
+def test_session_warns_and_runs_on_corrupt_profile(tmp_path):
+    topo = Topology.full_mesh(4, with_host=False)
+    bad = tmp_path / CalibrationProfile(
+        topology_digest=topo.digest()).filename()
+    bad.write_text("{not json")
+    with pytest.warns(UserWarning, match="calibration"):
+        sess = _session(profile_dir=str(tmp_path))
+    assert sess.topology.calibration is None       # degraded, not dead
+    jax.block_until_ready(
+        sess.send(jnp.arange(256, dtype=jnp.float32), 0, 1))

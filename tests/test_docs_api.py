@@ -1,6 +1,8 @@
 """docs/api.md is auto-checked: every public symbol of the pass-facing
-modules (``repro.comm.passes``, ``repro.comm.graph``) and the cache layer
-(``repro.comm.cache`` — plan cache, lifecycle, dispatch fast path) must
+modules (``repro.comm.passes``, ``repro.comm.graph``), the cache layer
+(``repro.comm.cache`` — plan cache, lifecycle, dispatch fast path), and
+the measured-feedback layer (``repro.comm.telemetry``,
+``repro.comm.calibration`` — §4.4c) must
 
 * appear in the reference page,
 * carry a docstring that names its invariant obligations (the §2.2 /
@@ -20,8 +22,12 @@ import re
 import pytest
 
 import repro.comm.cache as cache_mod
+import repro.comm.calibration as calibration_mod
 import repro.comm.graph as graph_mod
 import repro.comm.passes as passes_mod
+import repro.comm.telemetry as telemetry_mod
+
+GATED = [graph_mod, passes_mod, cache_mod, telemetry_mod, calibration_mod]
 
 DOCS = pathlib.Path(__file__).resolve().parents[1] / "docs" / "api.md"
 
@@ -57,7 +63,7 @@ def test_gate_covers_wrapped_entry_points():
     assert "apply_schedule" in dict(_public_symbols(passes_mod))
 
 
-@pytest.mark.parametrize("module", [graph_mod, passes_mod, cache_mod],
+@pytest.mark.parametrize("module", GATED,
                          ids=lambda m: m.__name__)
 def test_public_symbols_state_their_obligations(module):
     missing, undocumented = [], []
@@ -75,7 +81,7 @@ def test_public_symbols_state_their_obligations(module):
         f"invariant obligations (§2.2 contract vocabulary): {missing}")
 
 
-@pytest.mark.parametrize("module", [graph_mod, passes_mod, cache_mod],
+@pytest.mark.parametrize("module", GATED,
                          ids=lambda m: m.__name__)
 def test_public_class_members_are_documented(module):
     gaps = []
@@ -96,7 +102,7 @@ def test_public_class_members_are_documented(module):
         f"{gaps}")
 
 
-@pytest.mark.parametrize("module", [graph_mod, passes_mod, cache_mod],
+@pytest.mark.parametrize("module", GATED,
                          ids=lambda m: m.__name__)
 def test_reference_page_lists_every_symbol(module):
     text = DOCS.read_text()
@@ -107,7 +113,7 @@ def test_reference_page_lists_every_symbol(module):
 
 
 def test_module_docstrings_carry_the_contract():
-    for module in (graph_mod, passes_mod, cache_mod):
+    for module in GATED:
         doc = inspect.getdoc(module)
         assert doc and _OBLIGATION.search(doc)
     assert "§2.2" in inspect.getdoc(passes_mod)

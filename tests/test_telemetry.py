@@ -1,0 +1,196 @@
+"""Dispatch telemetry: recorder semantics, stage attribution, and the
+windowed-stats satellite (DESIGN.md §4.4c).
+
+Acceptance criteria exercised here (ISSUE 6):
+
+* ``TimelineRecorder`` is off by default, toggles via
+  ``REPRO_MP_TELEMETRY``, and ``record`` is a no-op while disabled,
+* the ring buffer retains the newest ``capacity`` samples and counts
+  drops — unbounded runs cannot grow memory,
+* a telemetry-enabled session attributes wall time per dispatch stage:
+  slow-path samples carry plan/lower/schedule/compile time, fast-path
+  hits carry zeros there (the §2.3 fast path skips those stages),
+* ``stats(reset=True)`` rewinds the measurement window — lifecycle
+  launch/staging counters, cache hit/miss counters — without touching
+  build timings or recorded telemetry samples.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig, CommSession
+from repro.comm.telemetry import (DEFAULT_CAPACITY, STAGES, TELEMETRY_ENV,
+                                  DispatchSample, StageTimings,
+                                  TimelineRecorder)
+from repro.core import Topology
+
+
+def _sample(i: int = 0, **stage_ns) -> DispatchSample:
+    stages = StageTimings(**stage_ns)
+    route = ((((0, 1),), 1024 + i, 2),)
+    return DispatchSample(routes=(route,), nbytes=1024 + i, num_nodes=2,
+                          window=1, schedule="round_robin", stages=stages,
+                          fastpath_hit=False)
+
+
+def _session(**cfg):
+    topo = Topology.full_mesh(4, with_host=False)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("dev",))
+    return CommSession(CommConfig(multipath_threshold=64, **cfg),
+                       mesh=mesh, topology=topo)
+
+
+# ------------------------- recorder semantics -------------------------------
+
+def test_recorder_disabled_by_default(monkeypatch):
+    monkeypatch.delenv(TELEMETRY_ENV, raising=False)
+    rec = TimelineRecorder()
+    assert not rec.enabled
+    rec.record(_sample())
+    assert len(rec) == 0 and rec.samples() == ()
+    assert rec.stats() == {"enabled": False,
+                           "capacity": DEFAULT_CAPACITY,
+                           "retained": 0, "recorded": 0, "dropped": 0}
+
+
+@pytest.mark.parametrize("value,expect", [
+    ("1", True), ("on", True), ("0", False), ("false", False), ("", False)])
+def test_recorder_env_toggle(monkeypatch, value, expect):
+    monkeypatch.setenv(TELEMETRY_ENV, value)
+    assert TimelineRecorder().enabled is expect
+    # explicit argument always wins over the environment
+    assert TimelineRecorder(enabled=not expect).enabled is (not expect)
+
+
+def test_ring_buffer_bounds_memory():
+    rec = TimelineRecorder(capacity=4, enabled=True)
+    for i in range(10):
+        rec.record(_sample(i))
+    assert len(rec) == 4
+    assert [s.nbytes for s in rec.samples()] == [1030, 1031, 1032, 1033]
+    st = rec.stats()
+    assert st == {"enabled": True, "capacity": 4, "retained": 4,
+                  "recorded": 10, "dropped": 6}
+    rec.clear()
+    assert len(rec) == 0
+    assert rec.stats()["recorded"] == 0
+
+
+def test_recorder_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        TimelineRecorder(capacity=0)
+
+
+def test_stage_timings_cover_every_stage():
+    st = StageTimings(plan_ns=1, lower_ns=2, schedule_ns=3, compile_ns=4,
+                     staging_ns=5, launch_ns=6, execute_ns=7)
+    d = st.as_dict()
+    assert tuple(d) == STAGES
+    assert st.total_ns == sum(d.values()) == 28
+
+
+def test_dispatch_sample_derived_views():
+    s = _sample(launch_ns=2_000, execute_ns=3_000)
+    assert s.signature == (s.routes, 1, "round_robin")
+    assert s.num_paths == 1
+    assert s.links == ((0, 1),)
+    assert s.measured_s == pytest.approx(5e-6)
+
+
+# ------------------------- session integration ------------------------------
+
+def test_session_attributes_stage_time(monkeypatch):
+    monkeypatch.delenv(TELEMETRY_ENV, raising=False)
+    sess = _session(telemetry=True)
+    msg = jnp.arange(4096, dtype=jnp.float32)
+    for _ in range(3):
+        jax.block_until_ready(sess.send(msg, 0, 1, num_chunks=2))
+    samples = sess.telemetry.samples()
+    assert len(samples) == 3
+    cold, warm = samples[0], samples[-1]
+    # slow path pays plan/lower/compile; timings are wall time, nonzero
+    assert not cold.fastpath_hit
+    assert cold.stages.plan_ns > 0
+    assert cold.stages.lower_ns > 0
+    assert cold.stages.compile_ns > 0
+    assert cold.stages.launch_ns > 0
+    # fast-path hit skips every setup stage (§2.3) but still measures
+    # staging/launch/execute
+    assert warm.fastpath_hit
+    assert warm.stages.plan_ns == warm.stages.lower_ns == 0
+    assert warm.stages.schedule_ns == warm.stages.compile_ns == 0
+    assert warm.stages.launch_ns > 0
+    assert warm.nbytes == 4096 * 4
+    assert warm.num_nodes == cold.num_nodes
+    st = sess.stats()
+    assert st["telemetry"]["recorded"] == 3
+    assert st["calibration"] == {"active": False}
+
+
+def test_session_telemetry_off_records_nothing(monkeypatch):
+    monkeypatch.delenv(TELEMETRY_ENV, raising=False)
+    sess = _session()
+    jax.block_until_ready(sess.send(jnp.arange(4096, dtype=jnp.float32),
+                                    0, 1))
+    assert len(sess.telemetry) == 0
+    assert sess.stats()["telemetry"]["enabled"] is False
+
+
+def test_config_env_wiring(monkeypatch):
+    monkeypatch.setenv(TELEMETRY_ENV, "1")
+    monkeypatch.setenv("REPRO_MP_TELEMETRY_CAPACITY", "16")
+    monkeypatch.setenv("REPRO_MP_PROFILE_DIR", "/tmp/profiles")
+    cfg = CommConfig.from_env()
+    assert cfg.telemetry is True
+    assert cfg.telemetry_capacity == 16
+    assert cfg.profile_dir == "/tmp/profiles"
+    with pytest.raises(ValueError, match="telemetry_capacity"):
+        CommConfig(telemetry_capacity=0)
+
+
+# ------------------------- windowed stats (satellite) -----------------------
+
+def test_stats_reset_rewinds_window_not_build_costs(monkeypatch):
+    monkeypatch.delenv(TELEMETRY_ENV, raising=False)
+    sess = _session(telemetry=True)
+    msg = jnp.arange(4096, dtype=jnp.float32)
+    for _ in range(4):
+        jax.block_until_ready(sess.send(msg, 0, 1))
+    st = sess.stats(reset=True)
+    assert st["dispatches"] == 4
+    assert st["fastpath"]["hits"] == 3
+    # the reset call itself reported the pre-reset window…
+    st2 = sess.stats()
+    # …and the new window starts from zero
+    assert st2["dispatches"] == 0
+    assert st2["fastpath"]["hits"] == st2["fastpath"]["misses"] == 0
+    assert st2["cache"]["hits"] == st2["cache"]["misses"] == 0
+    assert st2["fastpath"]["staging_ns"] == 0
+    # build timings survive: the compiled plan still knows its build cost
+    (compiled,) = sess.cache._store.values()
+    assert compiled.lifecycle.build_ns > 0
+    assert compiled.lifecycle.launches == 0       # windowed counter rewound
+    # telemetry samples are NOT dropped by a stats reset (explicit clear)
+    assert len(sess.telemetry) == 4
+    # window accumulates again after the reset
+    jax.block_until_ready(sess.send(msg, 0, 1))
+    assert sess.stats()["dispatches"] == 1
+
+
+def test_lifecycle_reset_window_unit():
+    from repro.comm.cache import PlanLifecycle
+
+    lc = PlanLifecycle(trace_ns=10, lower_ns=20, compile_ns=30,
+                       num_nodes=7)
+    lc.launches = 5
+    lc.total_launch_ns = 500
+    lc.staging_ns = 50
+    lc.fastpath_hits = 3
+    lc.reset_window()
+    assert (lc.launches, lc.total_launch_ns, lc.staging_ns,
+            lc.fastpath_hits) == (0, 0, 0, 0)
+    # one-time build costs and structure survive the window rewind
+    assert (lc.trace_ns, lc.lower_ns, lc.compile_ns) == (10, 20, 30)
+    assert lc.build_ns == 60 and lc.num_nodes == 7
