@@ -1,0 +1,164 @@
+"""Whole-iteration capture — captured vs uncaptured Jacobi step (§2.4).
+
+The paper's CUDA Graphs capture kernels and memcpys together; §2.4's
+``session.capture`` does the analogue here. This benchmark measures one
+Jacobi iteration (boundary extraction + ring halo exchange + 5-point
+sweep) two ways, per chunk-interleaving schedule:
+
+* **captured** — the whole iteration is ONE heterogeneous
+  ``TransferGraph`` (copy + compute nodes) and ONE engine dispatch
+  (``make_captured_jacobi_step``),
+* **uncaptured** — the pre-§2.4 idiom: one ``session.exchange`` group
+  dispatch for the halos plus a separately-jitted sweep (two launches
+  per iteration).
+
+Each captured row carries ``captured_dispatches`` (the acceptance
+invariant: exactly ONE per iteration) and the modeled times of both
+variants — ``modeled_captured_s`` is ``scheduled_time_s`` over the
+heterogeneous graph, ``modeled_uncaptured_s`` adds the second launch's
+fixed cost and the compute nodes' ``compute_time_s`` to the comm-only
+graph — so CI can assert the model agrees capture never loses.
+"""
+
+import time
+
+from benchmarks import common
+from benchmarks.common import Row, timeit_us
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CommConfig, CommSession
+from repro.core import Topology
+from repro.core.halo import halo_exchange_group, make_captured_jacobi_step
+from repro.core.pipelining import (compute_time_s, launch_model_for,
+                                   scheduled_time_s)
+
+NDEV = 4
+ROWS, COLS = 64, 64
+ITERS = 10
+
+
+def _session(schedule: str):
+    topo = Topology.full_mesh(NDEV, with_host=False)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:NDEV]), ("dev",))
+    return CommSession(
+        CommConfig(multipath_threshold=64, schedule=schedule),
+        mesh=mesh, topology=topo)
+
+
+def _global_sweep():
+    """Jitted whole-domain sweep — the uncaptured step's compute half."""
+
+    @jax.jit
+    def sweep(blocks, left_halos, right_halos):
+        n = blocks.shape[0]
+        idx = jnp.arange(n)
+        left = jnp.where((idx == 0)[:, None, None], 0.0, left_halos)
+        right = jnp.where((idx == n - 1)[:, None, None], 0.0, right_halos)
+        ext = jnp.concatenate([left, blocks, right], axis=2)
+        up = jnp.pad(ext[:, :-1, :], ((0, 0), (1, 0), (0, 0)))
+        down = jnp.pad(ext[:, 1:, :], ((0, 0), (0, 1), (0, 0)))
+        return 0.25 * (ext[:, :, :-2] + ext[:, :, 2:] + up[:, :, 1:-1]
+                       + down[:, :, 1:-1])
+
+    return sweep
+
+
+def _modeled(step_entry, comm_graph, topo) -> tuple[float, float]:
+    """(captured, uncaptured) modeled seconds for one iteration."""
+    captured_s = scheduled_time_s(step_entry.graph, topo)
+    launch = launch_model_for(topo)
+    compute_s = sum(compute_time_s(n) for n in step_entry.graph.nodes
+                    if hasattr(n, "kernel"))
+    uncaptured_s = (scheduled_time_s(comm_graph, topo) + compute_s
+                    + launch.graph_launch_base_ns / 1e9)
+    return captured_s, uncaptured_s
+
+
+def run() -> list[Row]:
+    rows = []
+    domain = jnp.arange(NDEV * ROWS * COLS, dtype=jnp.float32).reshape(
+        NDEV, ROWS, COLS) / (NDEV * ROWS * COLS)
+    sweep = _global_sweep()
+    for sched in common.SCHEDULES:
+        # -- captured: the whole iteration is one dispatch
+        cap_sess = _session(sched)
+        t0 = time.perf_counter_ns()
+        captured = make_captured_jacobi_step(cap_sess, ROWS, COLS)
+        entry = captured.resolve()
+        setup_us = (time.perf_counter_ns() - t0) / 1e3
+        cap_sess.stats(reset=True)
+        out = captured(domain)[0]
+        jax.block_until_ready(out)
+        captured_dispatches = cap_sess.stats()["dispatches"]
+        cap_us = timeit_us(lambda: captured(domain)[0], iters=ITERS,
+                           warmup=1)
+
+        # -- uncaptured: one exchange-group dispatch + a jitted sweep
+        unc_sess = _session(sched)
+
+        def uncaptured_step(blocks):
+            left, right = halo_exchange_group(unc_sess, blocks)
+            return sweep(blocks, left, right)
+
+        unc_sess.stats(reset=True)
+        jax.block_until_ready(uncaptured_step(domain))
+        unc_dispatches = unc_sess.stats()["dispatches"]
+        unc_us = timeit_us(uncaptured_step, domain, iters=ITERS, warmup=1)
+        comm_entry = next(iter(
+            unc_sess.engine._fastpath._store.values()))[1]
+
+        g = entry.graph
+        modeled_cap_s, modeled_unc_s = _modeled(
+            entry, comm_entry.graph, cap_sess.topology)
+        counts = {"nodes": g.num_nodes,
+                  "copy_nodes": g.num_copy_nodes,
+                  "compute_nodes": g.num_compute_nodes,
+                  "schedule": sched}
+        rows += [
+            Row(f"step_capture/{sched}/captured", cap_us,
+                f"{captured_dispatches}dispatch",
+                {**counts,
+                 "captured_dispatches": captured_dispatches,
+                 "setup_us": round(setup_us, 2),
+                 "modeled_captured_s": modeled_cap_s,
+                 "modeled_uncaptured_s": modeled_unc_s,
+                 "modeled_speedup": round(
+                     modeled_unc_s / max(modeled_cap_s, 1e-12), 3)}),
+            Row(f"step_capture/{sched}/uncaptured", unc_us,
+                "exchange+jit_sweep",
+                {**counts,
+                 "engine_dispatches": unc_dispatches,
+                 "launches_per_iter": unc_dispatches + 1}),
+        ]
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="two schedules only (CI smoke step)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    if args.smoke:
+        common.SCHEDULES[:] = common.SCHEDULES[:2]
+    rows = run()
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row.csv(), flush=True)
+    if args.json:
+        payload = [{"name": r.name, "us_per_call": round(r.us, 2),
+                    "derived": r.derived, **r.extra} for r in rows]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload)} rows to {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV:
 * bench_jacobi         → paper Fig. 12  (Jacobi solver speedup + halo group)
 * bench_graph_overhead → paper Fig. 13/14 (plan lifecycle costs)
 * bench_calibration    → DESIGN.md §4.4c (model error, cold vs fitted)
+* bench_step_capture   → DESIGN.md §2.4 (captured vs uncaptured step)
 * bench_collectives    → paper §6 future work (multipath collectives)
 
 ``--smoke`` shrinks every size sweep to its smallest point (CI's tier-1
@@ -34,12 +35,12 @@ def collect() -> list:
     from benchmarks import (bench_calibration, bench_collectives,
                             bench_dispatch, bench_graph_overhead,
                             bench_jacobi, bench_omb_bibw, bench_omb_bw,
-                            bench_put_bw)
+                            bench_put_bw, bench_step_capture)
 
     rows = []
     for mod in (bench_put_bw, bench_omb_bw, bench_omb_bibw, bench_jacobi,
                 bench_graph_overhead, bench_dispatch, bench_calibration,
-                bench_collectives):
+                bench_step_capture, bench_collectives):
         rows.extend(mod.run())
     return rows
 

@@ -10,6 +10,11 @@ Run:  PYTHONPATH=src python examples/train_smollm.py --steps 300
 ``--manual-collectives`` switches gradient synchronization from XLA's
 auto-sharded collectives to explicit data parallelism through a
 ``repro.comm.CommSession`` (bidirectional-ring multipath all-reduce).
+
+``--captured-step`` goes one further (DESIGN §2.4): the whole training
+step — grad compute, multipath ring all-reduce, optimizer update — is
+captured as ONE heterogeneous transfer graph via ``session.capture``,
+so each step is exactly one engine dispatch (printed at the end).
 """
 
 import os
@@ -30,8 +35,9 @@ from repro.configs import get_config
 from repro.data import DataConfig, SyntheticDataset
 from repro.optim import OptimConfig
 from repro.runtime import StragglerDetector
-from repro.training import (TrainStepConfig, init_state, make_dp_train_step,
-                            make_train_step)
+from repro.training import (TrainStepConfig, init_state,
+                            make_captured_dp_train_step,
+                            make_dp_train_step, make_train_step)
 
 
 def main():
@@ -46,6 +52,10 @@ def main():
     ap.add_argument("--manual-collectives", action="store_true",
                     help="data-parallel grads via the CommSession's "
                          "multipath collectives instead of auto-sharding")
+    ap.add_argument("--captured-step", action="store_true",
+                    help="capture the whole train step (grads + ring "
+                         "all-reduce + update) as ONE graph: one engine "
+                         "dispatch per step (DESIGN §2.4)")
     args = ap.parse_args()
 
     base = get_config("smollm_360m")
@@ -65,7 +75,19 @@ def main():
     opt = OptimConfig(learning_rate=3e-3,
                       warmup_steps=max(1, args.steps // 20),
                       total_steps=args.steps)
-    if args.manual_collectives:
+    comm = None
+    state = init_state(cfg, opt)
+    ds = SyntheticDataset(cfg, DataConfig(seq_len=args.seq,
+                                          global_batch=args.batch))
+    if args.captured_step:
+        comm = CommSession()
+        batch0 = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+        step_fn = make_captured_dp_train_step(
+            cfg, TrainStepConfig(), opt, comm, state, batch0)
+        print(f"captured DP step over {comm.num_devices} devices: "
+              f"grads + ring all-reduce + update as ONE graph "
+              f"(one dispatch per step)")
+    elif args.manual_collectives:
         comm = CommSession()
         step_fn = jax.jit(make_dp_train_step(cfg, TrainStepConfig(), opt,
                                              comm),
@@ -75,9 +97,6 @@ def main():
     else:
         step_fn = jax.jit(make_train_step(cfg, TrainStepConfig(), opt),
                           donate_argnums=(0,))
-    state = init_state(cfg, opt)
-    ds = SyntheticDataset(cfg, DataConfig(seq_len=args.seq,
-                                          global_batch=args.batch))
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
     straggler = StragglerDetector()
     t_start = time.time()
@@ -97,6 +116,12 @@ def main():
     ckpt.wait()
     print(f"done in {time.time()-t_start:.1f}s; "
           f"checkpoints in {args.ckpt_dir}")
+    if args.captured_step:
+        g = comm.stats()["graph"]
+        print(f"captured-step accounting: {comm.stats()['dispatches']} "
+              f"dispatches for {args.steps} steps; compiled "
+              f"{g['copy_nodes_compiled']} copy + "
+              f"{g['compute_nodes_compiled']} compute nodes")
 
 
 if __name__ == "__main__":

@@ -5,8 +5,9 @@ caching. Layering (DESIGN.md §1):
 
 * :mod:`repro.comm.config`      — :class:`CommConfig` (+ ``from_env``)
 * :mod:`repro.comm.plan`        — transfer-plan data model
-* :mod:`repro.comm.graph`       — :class:`TransferGraph` copy-node DAG IR
+* :mod:`repro.comm.graph`       — :class:`TransferGraph` heterogeneous DAG IR
 * :mod:`repro.comm.passes`      — chunk-interleaving scheduler passes (§2.2)
+* :mod:`repro.comm.capture`     — whole-iteration step capture (§2.4)
 * :mod:`repro.comm.policy`      — pluggable :class:`PathPolicy` strategies
 * :mod:`repro.comm.planner`     — route enumeration + plan construction
 * :mod:`repro.comm.cache`       — compiled-plan LRU (CUDA-Graph analogue)
@@ -35,7 +36,11 @@ from repro.comm.config import (  # noqa: F401
 from repro.comm.plan import (  # noqa: F401
     PathAssignment, TransferGroup, TransferPlan, TransferRequest)
 from repro.comm.graph import (  # noqa: F401
-    CopyNode, DepEdge, TransferGraph, canonical_digest, lower)
+    BUFFER_EDGE, ComputeNode, CopyNode, DepEdge, TransferGraph,
+    canonical_digest, lower)
+from repro.comm.capture import (  # noqa: F401
+    BufferRef, BufferSpec, CapturedStep, StepCapture, captured_psum,
+    emit_step, lower_step)
 from repro.comm.passes import (  # noqa: F401
     AutoSchedule, CriticalPathSchedule, DepthFirstSchedule, GraphPass,
     RoundRobinSchedule, apply_schedule, check_pass, make_schedule,

@@ -281,7 +281,11 @@ class CalibrationFitter:
                     ) -> tuple[LaunchModel | None, int]:
         """Fit graph launch + instantiate terms from (node count,
         measured ns) pairs — median per node count then a weighted
-        line, gated by ``min_samples`` (else ``None``)."""
+        line, gated by ``min_samples`` (else ``None``). Captured-step
+        samples (non-empty ``compute``) are excluded — a kernel node's
+        launch cost is not a copy node's, and pooling them would bend
+        the fitted per-node slope (§4.4c signature invariant)."""
+        samples = [s for s in samples if not getattr(s, "compute", ())]
         launch_pts = [(s.num_nodes, float(s.stages.launch_ns))
                       for s in samples if s.stages.launch_ns > 0]
         if len(launch_pts) < self.min_samples:
@@ -309,11 +313,18 @@ class CalibrationFitter:
         each sample moves its bottleneck links' estimates by
         ``ratio**-decay`` (ratio = measured/modeled, clamped to
         ``max_ratio``) — time scales as 1/bandwidth, so a slow link is
-        attributed a proportionally lower fitted bandwidth."""
+        attributed a proportionally lower fitted bandwidth.
+
+        Captured-step samples (non-empty ``compute`` identity) are
+        excluded: their execute time includes kernel work the wire model
+        cannot attribute to links, so pooling them would corrupt the
+        fitted bandwidths — the §4.4c signature invariant."""
         est = {k: ln.bandwidth_gbps
                for k, ln in self.topology.links.items()}
         counts: dict[_LinkKey, int] = defaultdict(int)
         for s in samples:
+            if getattr(s, "compute", ()):
+                continue
             measured = s.stages.execute_ns / 1e9
             if measured <= 0:
                 continue

@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import re
 import time
 from collections import OrderedDict
 from functools import lru_cache
@@ -60,9 +61,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm.cache import (CompiledPlan, FastPathCache, FastPathEntry,
                               TransferPlanCache, compile_plan)
+from repro.comm.capture import CapturedStep, StepCapture, emit_step, lower_step
 from repro.compat import shard_map
 from repro.comm.config import VALIDATE_MODES, _env_bool
-from repro.comm.graph import TransferGraph, lower
+from repro.comm.graph import ComputeNode, TransferGraph, lower
 from repro.comm.passes import GraphPass, apply_schedule
 from repro.comm.plan import TransferGroup, TransferPlan, TransferRequest
 from repro.comm.planner import PathPlanner
@@ -89,6 +91,12 @@ class GroupKey:
     message order before planning (see :meth:`MultiPathTransfer
     .transfer_group`), so structurally identical groups whose operands
     were merely permuted collide on one entry.
+
+    Captured whole-iteration steps reuse this key: ``digest`` is the
+    scheduled heterogeneous graph's digest (compute nodes included) and
+    ``entries`` carries the capture signature plus one
+    ``(kernel, flops, cost_ns)`` triple per compute node, so the key
+    covers compute identity as well as routes.
     """
 
     digest: str
@@ -104,6 +112,26 @@ class GroupKey:
     #: so it must never be served to an AOT caller that reuses arrays
     #: across launches (``compiled_for*`` always compiles undonated).
     donated: bool = False
+
+
+@dataclasses.dataclass
+class _StepEntry:
+    """Fast-path entry for a captured whole-iteration step.
+
+    Same shape as :class:`~repro.comm.cache.FastPathEntry` (the front
+    cache stores entries opaquely) plus the recording itself (``program``
+    — needed to rebuild the SPMD program if the plan cache evicts the
+    executable under us) and the step's output buffer ids.
+    """
+
+    plans: tuple
+    graph: TransferGraph
+    digest: str
+    key: GroupKey
+    compiled: CompiledPlan
+    schedule: str
+    program: StepCapture
+    outputs: tuple
 
 
 def plan_signature(plan: TransferPlan) -> tuple:
@@ -307,8 +335,13 @@ class MultiPathTransfer:
         self.dispatches = 0
         #: Copy nodes / dependency edges across every graph this engine
         #: compiled (cache misses only) — `session.stats()` surfaces them.
+        #: `copy_nodes_compiled`/`compute_nodes_compiled` break the node
+        #: total down by kind (heterogeneous captured-step graphs carry
+        #: both); `nodes_compiled` stays the total of the two.
         self.nodes_compiled = 0
         self.edges_compiled = 0
+        self.copy_nodes_compiled = 0
+        self.compute_nodes_compiled = 0
 
     # -- planning -----------------------------------------------------------
     def plan_for(self, src: int, dst: int, nelems: int, dtype=jnp.float32,
@@ -402,6 +435,8 @@ class MultiPathTransfer:
         fn = self._build_group_fn(graph, itemsizes)
         self.nodes_compiled += graph.num_nodes
         self.edges_compiled += graph.num_edges
+        self.copy_nodes_compiled += graph.num_copy_nodes
+        self.compute_nodes_compiled += graph.num_compute_nodes
         jit_kwargs = {}
         if key.donated:
             # XLA reuses the staged operand buffers for the outputs
@@ -600,6 +635,229 @@ class MultiPathTransfer:
             self._fastpath.put(sig, epoch, entry)
         return entry
 
+    # -- whole-iteration capture (heterogeneous graphs) ---------------------
+    def capture(self, build_fn, *, schedule: str | None = None
+                ) -> CapturedStep:
+        """Record one iteration and return a launchable
+        :class:`~repro.comm.capture.CapturedStep`.
+
+        ``build_fn(cap)`` declares the step against a fresh
+        :class:`~repro.comm.capture.StepCapture` and returns the output
+        ref(s). Nothing is planned or compiled here — resolution happens
+        on first launch (or :meth:`CapturedStep.resolve`) and is
+        memoized on the fast path.
+        """
+        cap = StepCapture()
+        outputs = build_fn(cap)
+        if not isinstance(outputs, (tuple, list)):
+            outputs = (outputs,)
+        return CapturedStep(self, cap, tuple(outputs), schedule=schedule)
+
+    def _build_step_fn(self, program: StepCapture, graph: TransferGraph,
+                       outputs: tuple):
+        """Fused whole-iteration SPMD program: the SCHEDULED graph's copy
+        AND compute nodes, one trace. Each kernel is wrapped in an inner
+        ``jax.jit`` named ``capk_<kernel>`` so traced kernel calls are
+        countable in the jaxpr exactly like ``ppermute`` eqns — the
+        one-launch acceptance check."""
+        ax = self.axis_name
+        buffers = tuple(program.buffers)
+        input_ids = tuple(program.inputs)
+        wrapped = {}
+        for kname, fn in program.kernels.items():
+            def _impl(*args, _fn=fn):
+                return _fn(*args)
+            _impl.__name__ = "capk_" + re.sub(r"\W", "_", kname)
+            wrapped[kname] = jax.jit(_impl)
+
+        def local_body(*xs):
+            values = {}
+            for bid, x in zip(input_ids, xs):
+                values[bid] = x if buffers[bid].replicated else x[0]
+            values = emit_step(graph, buffers, wrapped, values, ax)
+            return tuple(values[o][None] for o in outputs)
+
+        in_specs = tuple(P() if buffers[b].replicated else P(ax)
+                         for b in input_ids)
+        out_specs = tuple(P(ax) for _ in outputs)
+        return shard_map(local_body, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+    def _step_abstracts(self, program: StepCapture) -> tuple:
+        abstracts = []
+        for bid in program.inputs:
+            spec = program.buffers[bid]
+            dtype = jnp.dtype(spec.dtype)
+            if spec.replicated:
+                abstracts.append(jax.ShapeDtypeStruct(
+                    spec.shape, dtype,
+                    sharding=NamedSharding(self.mesh, P())))
+            else:
+                abstracts.append(jax.ShapeDtypeStruct(
+                    (self.num_devices,) + spec.shape, dtype,
+                    sharding=NamedSharding(self.mesh, P(self.axis_name))))
+        return tuple(abstracts)
+
+    def _compile_step(self, key: GroupKey, graph: TransferGraph,
+                      program: StepCapture, outputs: tuple) -> CompiledPlan:
+        """Compile one captured step (never donated: callers legitimately
+        reuse input arrays, e.g. re-running a step on the same batch)."""
+        fn = self._build_step_fn(program, graph, outputs)
+        self.nodes_compiled += graph.num_nodes
+        self.edges_compiled += graph.num_edges
+        self.copy_nodes_compiled += graph.num_copy_nodes
+        self.compute_nodes_compiled += graph.num_compute_nodes
+        return compile_plan(key, fn, self._step_abstracts(program),
+                            num_nodes=graph.num_nodes)
+
+    def resolve_step(self, step: CapturedStep,
+                     schedule: str | GraphPass | None = None) -> _StepEntry:
+        """Resolve a captured step to a launchable entry.
+
+        Mirrors :meth:`_resolve`: fast-path hit is one dict lookup
+        keyed on (capture signature, outputs, schedule name, mesh size)
+        under the planner epoch; miss runs lower_step → scheduler pass →
+        §4.5 validation (inside lowering) → compile, keyed on the
+        scheduled graph digest + capture signature + per-kernel compute
+        identity, then memoizes. Two schedules of the same capture
+        digest apart and never cross-serve executables.
+        """
+        program = step.capture
+        sched = self.schedule if schedule is None else schedule
+        sched_name = sched if isinstance(sched, str) else None
+        use_fast = self.fastpath and sched_name is not None
+        tel = self.telemetry
+        stages = (StageTimings() if tel is not None and tel.enabled
+                  else None)
+        self._pending_stages, self._pending_hit = stages, False
+        sig = epoch = None
+        if use_fast:
+            sig = ("capture_step", program.signature(), step.outputs,
+                   sched_name, self.num_devices)
+            epoch = self.planner.epoch
+            entry = self._fastpath.get(sig, epoch)
+            if entry is not None:
+                compiled = self.cache.get(entry.key)
+                if compiled is None:   # evicted under us: recompile only
+                    compiled = self._compile_step(
+                        entry.key, entry.graph, entry.program,
+                        entry.outputs)
+                    self.cache.put(entry.key, compiled)
+                    if stages is not None:
+                        stages.compile_ns = compiled.lifecycle.build_ns
+                entry.compiled = compiled
+                if self.validate == "always":
+                    for p in entry.plans:
+                        validate_plan(p)
+                    entry.graph.validate(
+                        {i: p.nbytes for i, p in enumerate(entry.plans)},
+                        cross_flow_exclusive=False)
+                compiled.lifecycle.fastpath_hits += 1
+                self._count_schedule(entry.schedule)
+                self._pending_hit = True
+                return entry
+        t0 = time.perf_counter_ns()
+        graph, plans = lower_step(program, self.plan_group_for,
+                                  self.topology.name)
+        t1 = time.perf_counter_ns()
+        scheduled, chosen = apply_schedule(graph, sched, self.topology)
+        if stages is not None:
+            stages.lower_ns = t1 - t0
+            stages.schedule_ns = time.perf_counter_ns() - t1
+        self._count_schedule(chosen)
+        compute_id = tuple((n.kernel, n.flops, n.cost_ns)
+                           for n in scheduled.nodes
+                           if isinstance(n, ComputeNode))
+        key = GroupKey(scheduled.digest(),
+                       entries=(program.signature(), step.outputs)
+                       + compute_id,
+                       window=1, num_devices=self.num_devices)
+        built: list[CompiledPlan] = []
+
+        def _builder() -> CompiledPlan:
+            c = self._compile_step(key, scheduled, program, step.outputs)
+            built.append(c)
+            return c
+
+        compiled = self.cache.get_or_build(key, _builder)
+        if stages is not None and built:
+            stages.compile_ns = compiled.lifecycle.build_ns
+        entry = _StepEntry(plans=plans, graph=scheduled, digest=key.digest,
+                           key=key, compiled=compiled, schedule=chosen,
+                           program=program, outputs=step.outputs)
+        if use_fast:
+            self._fastpath.put(sig, epoch, entry)
+        return entry
+
+    def _launch_step(self, entry: _StepEntry, arrays: Sequence[jax.Array],
+                     *, block: bool) -> list[jax.Array]:
+        """Stage the step inputs (device_put onto the declared shardings;
+        staging a whole iteration's operands is dominated by the step
+        itself, so inputs are not pooled like message staging) and launch
+        the compiled whole-iteration program ONCE."""
+        stages, hit = self._pending_stages, self._pending_hit
+        self._pending_stages, self._pending_hit = None, False
+        program = entry.program
+        if len(arrays) != len(program.inputs):
+            raise ValueError(f"captured step takes {len(program.inputs)} "
+                             f"input arrays, got {len(arrays)}")
+        t0 = time.perf_counter_ns()
+        xs = []
+        for bid, arr in zip(program.inputs, arrays):
+            spec = program.buffers[bid]
+            arr = jnp.asarray(arr, jnp.dtype(spec.dtype))
+            want = (spec.shape if spec.replicated
+                    else (self.num_devices,) + spec.shape)
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"input for buffer {bid} must have shape {want} "
+                    f"({'replicated' if spec.replicated else 'sharded'}), "
+                    f"got {tuple(arr.shape)}")
+            sh = NamedSharding(self.mesh, P() if spec.replicated
+                               else P(self.axis_name))
+            xs.append(jax.device_put(arr, sh))
+        staging = time.perf_counter_ns() - t0
+        self.staging_ns += staging
+        compiled = entry.compiled
+        compiled.lifecycle.staging_ns += staging
+        if stages is None:
+            ys = compiled(*xs) if block else compiled.dispatch(*xs)
+        else:
+            stages.staging_ns = staging
+            if block:
+                ys, stages.launch_ns, stages.execute_ns = (
+                    compiled.timed_call(*xs))
+            else:
+                t1 = time.perf_counter_ns()
+                ys = compiled.dispatch(*xs)
+                stages.launch_ns = time.perf_counter_ns() - t1
+            routes = tuple(
+                tuple((pa.route.directional_links(), pa.nbytes,
+                       pa.num_chunks) for pa in p.paths)
+                for p in entry.plans)
+            compute = tuple((n.kernel, n.flops, n.cost_ns)
+                            for n in entry.graph.nodes
+                            if isinstance(n, ComputeNode))
+            self.telemetry.record(DispatchSample(
+                routes=routes,
+                nbytes=sum(p.nbytes for p in entry.plans),
+                num_nodes=entry.graph.num_nodes, window=1,
+                schedule=entry.schedule, stages=stages,
+                fastpath_hit=hit, compute=compute))
+        self.dispatches += 1
+        return list(ys)
+
+    def run_step(self, step: CapturedStep, arrays: Sequence[jax.Array], *,
+                 schedule: str | GraphPass | None = None,
+                 block: bool = True) -> list[jax.Array]:
+        """Resolve + launch one captured iteration as ONE dispatch.
+
+        Returns the step outputs device-stacked ``(num_devices,
+        *local_shape)``, aligned with the capture's declared outputs.
+        """
+        entry = self.resolve_step(step, schedule)
+        return self._launch_step(entry, arrays, block=block)
+
     # -- public API ---------------------------------------------------------
     def transfer(self, message: jax.Array, src: int, dst: int, *,
                  window: int = 1, max_paths: int | None = None,
@@ -736,7 +994,10 @@ class MultiPathTransfer:
                          "staging_ns": self.staging_ns,
                          **self._fastpath.stats(reset=reset)},
             "graph": {"nodes_compiled": self.nodes_compiled,
-                      "edges_compiled": self.edges_compiled},
+                      "edges_compiled": self.edges_compiled,
+                      "copy_nodes_compiled": self.copy_nodes_compiled,
+                      "compute_nodes_compiled":
+                          self.compute_nodes_compiled},
             "schedules": dict(self.schedule_counts),
         }
         if self.telemetry is not None:
@@ -746,5 +1007,7 @@ class MultiPathTransfer:
             self.staging_ns = 0
             self.nodes_compiled = 0
             self.edges_compiled = 0
+            self.copy_nodes_compiled = 0
+            self.compute_nodes_compiled = 0
             self.schedule_counts = {}
         return out

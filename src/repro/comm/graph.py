@@ -22,12 +22,26 @@ Because the model, the validator, and the executable are all views over
 ONE lowering, they can no longer silently disagree about what a plan
 means (the PR-2 mid-route-host bug was exactly such a divergence).
 
+The IR is **heterogeneous** (whole-iteration capture): alongside
+:class:`CopyNode` the graph may carry :class:`ComputeNode` entries —
+one per SPMD kernel invocation — so a full iteration (stencil sweep + halo
+exchange, grad compute + multipath pmean) is ONE graph scheduled by the
+same passes and launched as ONE compiled program. Compute nodes declare
+the *buffer ids* they read (``operands``) and write (``results``);
+dataflow between compute and copies is stored as ``"buffer"`` edges and
+validated as part of §4.5 (def-use consistency against the graph's
+``messages`` table).
+
 Edge kinds:
 
 * ``"hop"`` — hop order within a chunk (hop *i+1* consumes hop *i*'s
   value; the CUDA Graph dependency edge),
 * ``"window"`` — replay ordering between window rounds of the same chunk
-  (round *w+1* re-sends the chunk after round *w* completed).
+  (round *w+1* re-sends the chunk after round *w* completed),
+* ``"buffer"`` — def-use dataflow through a named buffer: producer
+  compute → first-hop copy of a message whose payload it wrote, terminal
+  copy → consumer compute of the message's reception buffer, or compute
+  → compute directly.
 
 Per-link serialization between consecutive chunks of one path is *not*
 stored — it is derivable (:meth:`TransferGraph.serialization_edges`) and
@@ -55,6 +69,7 @@ from repro.comm.plan import TransferGroup, TransferPlan
 #: Edge kinds (see module docstring).
 HOP_EDGE = "hop"
 WINDOW_EDGE = "window"
+BUFFER_EDGE = "buffer"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +101,36 @@ class CopyNode:
 
 
 @dataclasses.dataclass(frozen=True)
+class ComputeNode:
+    """One SPMD kernel invocation inside a heterogeneous graph.
+
+    The CUDA-Graph kernel-node analogue: ``kernel`` is the registered
+    kernel name (its *identity* — digests, cache keys, and telemetry
+    signatures all key on it, so re-registering a different function
+    under the same name is a contract breach exactly like mutating a
+    cached plan). ``operands`` / ``results`` are buffer ids in the
+    owning capture's buffer table; the §4.5 validator checks that every
+    :data:`BUFFER_EDGE` touching this node is consistent with them
+    (def-use edges must name buffers the node actually reads/writes).
+
+    Invariant obligations (§2.2): like :class:`CopyNode`, the tuple
+    ``(kernel, window, operands, results, flops, cost_ns)`` is the
+    node's identity — scheduler passes may renumber indices but must
+    preserve the tuple (unless they declare ``allows_rewrite``).
+    ``flops`` / ``cost_ns`` feed the cost model: ``cost_ns`` (measured)
+    wins when non-zero, else declared ``flops`` are priced at the
+    :data:`repro.core.pipelining.COMPUTE_GFLOPS` rate.
+    """
+
+    kernel: str                 # registered kernel name (identity)
+    window: int                 # replay round (0-based)
+    operands: tuple[int, ...]   # buffer ids read
+    results: tuple[int, ...]    # buffer ids written
+    flops: int = 0              # declared work (model input)
+    cost_ns: int = 0            # measured time; overrides flops if set
+
+
+@dataclasses.dataclass(frozen=True)
 class DepEdge:
     """A dependency edge between node indices (``src`` before ``dst``).
 
@@ -93,8 +138,11 @@ class DepEdge:
     edge must point forward (``src < dst`` after any scheduler pass — the
     §2.2 contract; :meth:`TransferGraph.topological_order` re-validates
     acyclicity). ``kind`` is :data:`HOP_EDGE` (dataflow: hop *i+1*
-    consumes hop *i*'s value) or :data:`WINDOW_EDGE` (replay ordering);
-    passes may not add, drop, or re-kind edges, only renumber endpoints.
+    consumes hop *i*'s value), :data:`WINDOW_EDGE` (replay ordering), or
+    :data:`BUFFER_EDGE` (def-use dataflow through a named buffer, the
+    compute↔copy coupling in heterogeneous graphs); passes may not add,
+    drop, or re-kind edges, only renumber endpoints (unless they declare
+    ``allows_rewrite`` — see DESIGN §2.2).
     """
 
     src: int
@@ -126,30 +174,51 @@ class TransferGraph:
     them and leave the node/edge *content* untouched (DESIGN.md §2.2).
     """
 
-    nodes: tuple[CopyNode, ...]
+    nodes: tuple[CopyNode | ComputeNode, ...]
     edges: tuple[DepEdge, ...]
     window: int
     num_messages: int
     topology_name: str
+    #: msg_idx → (payload buffer id, reception buffer id) for captured
+    #: graphs; empty for pure-comm lowerings. Needed by the §4.5 buffer
+    #: def-use validation and the heterogeneous emitter.
+    messages: tuple[tuple[int, int], ...] = ()
 
     # -- basic shape --------------------------------------------------------
     @property
     def num_nodes(self) -> int:
-        """Copy-node count — invariant under every scheduler pass (the
-        equal-graph acceptance: traced ``ppermute`` count equals this)."""
+        """Total node count (copies + computes) — invariant under every
+        non-rewriting scheduler pass (the equal-graph acceptance: traced
+        ``ppermute`` + kernel-call count equals this)."""
         return len(self.nodes)
 
     @property
+    def num_copy_nodes(self) -> int:
+        """:class:`CopyNode` count — equals the traced ``ppermute``
+        count; invariant under non-rewriting passes (§2.2)."""
+        return sum(1 for n in self.nodes if isinstance(n, CopyNode))
+
+    @property
+    def num_compute_nodes(self) -> int:
+        """:class:`ComputeNode` count — equals the traced kernel-call
+        count; invariant under non-rewriting passes (§2.2)."""
+        return sum(1 for n in self.nodes if isinstance(n, ComputeNode))
+
+    @property
     def num_edges(self) -> int:
-        """Stored dependency-edge count (hop + window; serialization
-        edges are derived, not stored) — invariant under passes."""
+        """Stored dependency-edge count (hop + window + buffer;
+        serialization edges are derived, not stored) — invariant under
+        passes."""
         return len(self.edges)
 
     def flows(self) -> tuple[tuple[int, int], ...]:
-        """Per-message (src, dst), aligned with ``msg_idx``."""
+        """Per-message (src, dst), aligned with ``msg_idx``. Compute
+        nodes carry no flow and are skipped; the §4.5 per-message
+        invariants apply to copy nodes only."""
         seen: dict[int, tuple[int, int]] = {}
         for n in self.nodes:
-            seen.setdefault(n.msg_idx, n.flow)
+            if isinstance(n, CopyNode):
+                seen.setdefault(n.msg_idx, n.flow)
         return tuple(seen[i] for i in sorted(seen))
 
     # -- dataflow structure -------------------------------------------------
@@ -160,9 +229,13 @@ class TransferGraph:
 
     @cached_property
     def terminal_nodes(self) -> frozenset[int]:
-        """Nodes with no outgoing hop edge — each chunk's landing copy."""
+        """Copy nodes with no outgoing hop edge — each chunk's landing
+        copy (compute nodes are never terminals; the §4.5 byte-cover
+        invariant is checked over exactly this set)."""
         non_terminal = {e.src for e in self.edges if e.kind == HOP_EDGE}
-        return frozenset(range(self.num_nodes)) - non_terminal
+        return frozenset(
+            i for i, n in enumerate(self.nodes)
+            if isinstance(n, CopyNode)) - non_terminal
 
     def topological_order(self) -> list[int]:
         """Kahn's algorithm over the stored edges, lowest index first.
@@ -199,13 +272,20 @@ class TransferGraph:
         renumbers nodes reorders exactly these edges, which is the only
         freedom the §2.2 pass contract grants. The critical-path
         evaluations in :mod:`repro.core.pipelining` add these to the hop
-        and window edges.
+        and window edges. Compute nodes all share one ``("compute",)``
+        slot — kernels execute serially on the device's compute stream
+        in dispatch order, which is the resource the §2.2 schedulers
+        trade against link serialization when they interleave copies
+        into compute gaps.
         """
-        by_slot: dict[tuple[int, int, int, int], list[int]] = {}
+        by_slot: dict[tuple, list[int]] = {}
         for i, n in enumerate(self.nodes):
-            by_slot.setdefault(
-                (n.msg_idx, n.path_idx, n.window, n.hop_idx),
-                []).append(i)
+            if isinstance(n, ComputeNode):
+                by_slot.setdefault(("compute",), []).append(i)
+            else:
+                by_slot.setdefault(
+                    (n.msg_idx, n.path_idx, n.window, n.hop_idx),
+                    []).append(i)
         out: list[tuple[int, int]] = []
         for slot in by_slot.values():
             out.extend(zip(slot, slot[1:]))
@@ -234,12 +314,16 @@ class TransferGraph:
         the instance; before this memo every ``_group_key`` construction
         re-hashed the whole graph on the dispatch hot path. The §2.2
         invariant that passes return *new* graphs (never mutate) is what
-        makes per-instance caching sound.
+        makes per-instance caching sound. Nodes are tagged with their
+        type name so heterogeneous graphs canonicalize unambiguously —
+        a :class:`CopyNode` and a :class:`ComputeNode` can never collide
+        even if their field tuples happened to match.
         """
         return canonical_digest((
-            tuple(dataclasses.astuple(n) for n in self.nodes),
+            tuple((type(n).__name__,) + dataclasses.astuple(n)
+                  for n in self.nodes),
             tuple(sorted(dataclasses.astuple(e) for e in self.edges)),
-            self.window, self.num_messages))
+            self.window, self.num_messages, self.messages))
 
     def digest(self) -> str:
         """Canonical content hash — THE cache-key ingredient.
@@ -277,13 +361,23 @@ class TransferGraph:
            away deliberately).
         3. **Connected hop chains** — every chunk's links chain
            ``flow.src → ... → flow.dst`` in hop order.
+        4. **Buffer def-use consistency** (heterogeneous graphs) — every
+           :data:`BUFFER_EDGE` names real dataflow: compute→compute
+           edges share a buffer id between the producer's ``results``
+           and the consumer's ``operands``; compute→copy edges land on a
+           first-hop copy of a message whose payload buffer the producer
+           wrote; copy→compute edges leave a terminal copy of a message
+           whose reception buffer the consumer reads (resolved through
+           the graph's ``messages`` table).
 
         Raises ``ValueError`` on any breach.
         """
-        # (2) link exclusivity, on nodes
+        # (2) link exclusivity, on copy nodes
         link_paths: dict[tuple[int, tuple[int, int]], int] = {}
         link_flow: dict[tuple[int, int], tuple[int, int]] = {}
         for n in self.nodes:
+            if not isinstance(n, CopyNode):
+                continue
             prev_path = link_paths.setdefault((n.msg_idx, n.link),
                                               n.path_idx)
             if prev_path != n.path_idx:
@@ -299,6 +393,8 @@ class TransferGraph:
         # (3) connected hop chains, on hop edges
         chains: dict[tuple[int, int, int, int], list[CopyNode]] = {}
         for n in self.nodes:
+            if not isinstance(n, CopyNode):
+                continue
             chains.setdefault(
                 (n.msg_idx, n.path_idx, n.chunk_idx, n.window),
                 []).append(n)
@@ -335,6 +431,46 @@ class TransferGraph:
                 if pos != want:
                     raise ValueError(
                         f"coverage ends at {pos}, message is {want}")
+        # (4) buffer def-use consistency, on buffer edges
+        for e in self.edges:
+            if e.kind != BUFFER_EDGE:
+                continue
+            src_n, dst_n = self.nodes[e.src], self.nodes[e.dst]
+            if isinstance(src_n, ComputeNode) and isinstance(
+                    dst_n, ComputeNode):
+                if not set(src_n.results) & set(dst_n.operands):
+                    raise ValueError(
+                        f"buffer edge {e.src}->{e.dst} names no shared "
+                        f"buffer between producer results and consumer "
+                        f"operands")
+                continue
+            if not self.messages:
+                raise ValueError(
+                    "buffer edge touches a copy node but the graph has "
+                    "no messages table")
+            if isinstance(src_n, ComputeNode):
+                if not isinstance(dst_n, CopyNode) or dst_n.hop_idx != 0:
+                    raise ValueError(
+                        f"compute->copy buffer edge {e.src}->{e.dst} "
+                        f"must land on a first-hop copy")
+                payload, _ = self.messages[dst_n.msg_idx]
+                if payload not in src_n.results:
+                    raise ValueError(
+                        f"copy {e.dst} reads payload buffer {payload} "
+                        f"that compute {e.src} does not write")
+            elif isinstance(dst_n, ComputeNode):
+                if e.src not in self.terminal_nodes:
+                    raise ValueError(
+                        f"copy->compute buffer edge {e.src}->{e.dst} "
+                        f"must leave a terminal copy")
+                _, result = self.messages[src_n.msg_idx]
+                if result not in dst_n.operands:
+                    raise ValueError(
+                        f"compute {e.dst} does not read reception "
+                        f"buffer {result} written by copy {e.src}")
+            else:
+                raise ValueError(
+                    f"buffer edge {e.src}->{e.dst} joins two copy nodes")
 
 
 @lru_cache(maxsize=256)

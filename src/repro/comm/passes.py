@@ -14,9 +14,9 @@ edges); it must NOT change anything else:
 
 * the node multiset is fixed — byte cover, hop chains, flows, chunking
   are §4.5 invariants the pass inherits and must preserve,
-* the stored edge *set* (hop dataflow + window replay, identified by the
-  node content at each endpoint) is fixed; only endpoint indices are
-  remapped,
+* the stored edge *set* (hop dataflow + window replay + buffer def-use,
+  identified by the node content at each endpoint) is fixed; only
+  endpoint indices are remapped,
 * index order must remain a valid topological order (every stored edge
   points forward), so the emitter's walk IS the schedule,
 * the scheduled graph must still pass
@@ -24,6 +24,20 @@ edges); it must NOT change anything else:
   :meth:`~repro.comm.graph.TransferGraph.digest` is recomputed from the
   new node order — cache keys (``GroupKey``) therefore distinguish
   schedules and can never cross-serve executables.
+
+**The ``allows_rewrite`` capability flag.** A pass that sets a truthy
+``allows_rewrite`` attribute opts out of the node-multiset and edge-set
+freezes — it may rewrite node *content* (e.g. the ROADMAP host-staged
+pricing pass replacing host hops with a simulated stage). The rest of
+the contract still binds: metadata fixed, every stored edge forward, and
+the §4.5 validation re-run on the output. :func:`check_pass` reads the
+flag; passes that don't declare it get the full freeze.
+
+Graphs may be **heterogeneous** (whole-iteration capture): the shipped
+schedulers are compute-aware — :class:`~repro.comm.graph.ComputeNode`
+entries serialize on one shared compute slot while ready copies are dispatched
+ahead of ready computes, so copies slot into compute gaps and the
+emitter overlaps communication with kernel execution.
 
 :func:`apply_schedule` enforces all of this after every pass
 (:func:`check_pass`), so a buggy custom pass fails loudly at schedule
@@ -53,10 +67,11 @@ Shipped schedulers (:data:`repro.comm.config.SCHEDULE_NAMES`):
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Iterable, Protocol, Sequence, runtime_checkable
 
 from repro.comm.config import SCHEDULE_NAMES
-from repro.comm.graph import DepEdge, TransferGraph
+from repro.comm.graph import ComputeNode, DepEdge, TransferGraph
 from repro.core.topology import Topology
 
 
@@ -79,8 +94,9 @@ class GraphPass(Protocol):
 
 
 def _node_id(node) -> tuple:
-    """Content identity of a node — what a pass may never change."""
-    return dataclasses.astuple(node)
+    """Content identity of a node — what a non-rewriting pass may never
+    change. Type-tagged so heterogeneous node kinds cannot collide."""
+    return (type(node).__name__,) + dataclasses.astuple(node)
 
 
 def reindex(graph: TransferGraph, order: Sequence[int]) -> TransferGraph:
@@ -113,10 +129,11 @@ def reindex(graph: TransferGraph, order: Sequence[int]) -> TransferGraph:
          for e in graph.edges),
         key=lambda e: (e.src, e.dst, e.kind)))
     return TransferGraph(nodes, edges, graph.window, graph.num_messages,
-                         graph.topology_name)
+                         graph.topology_name, graph.messages)
 
 
-def check_pass(before: TransferGraph, after: TransferGraph) -> None:
+def check_pass(before: TransferGraph, after: TransferGraph,
+               *, allows_rewrite: bool = False) -> None:
     """Assert the §2.2 pass contract between a pass's input and output.
 
     Raises ``ValueError`` if the pass changed anything beyond dispatch
@@ -126,23 +143,36 @@ def check_pass(before: TransferGraph, after: TransferGraph) -> None:
     (:meth:`TransferGraph.validate`) on the output.
     ``apply_schedule`` calls this after every pass; pass authors get it
     for free in tests via the hypothesis property suite.
+
+    ``allows_rewrite=True`` is the §2.2 capability flag: the node-multiset
+    and edge-set freezes are waived for passes that declare node
+    *rewrites* (e.g. host-staged pricing), while metadata, forward-edge
+    topology, and the §4.5 validation still apply.
     """
     if (after.window != before.window
             or after.num_messages != before.num_messages
             or after.topology_name != before.topology_name):
         raise ValueError("pass changed graph metadata "
                          "(window/num_messages/topology)")
-    if sorted(map(_node_id, after.nodes)) != sorted(map(_node_id,
-                                                        before.nodes)):
-        raise ValueError(
-            "pass changed the node multiset — byte cover and hop chains "
-            "are fixed by the §2.2 contract; only dispatch order is free")
-    def edge_set(g: TransferGraph) -> set:
-        return {(_node_id(g.nodes[e.src]), _node_id(g.nodes[e.dst]), e.kind)
-                for e in g.edges}
-    if edge_set(after) != edge_set(before):
-        raise ValueError("pass changed the dependency-edge set — passes "
-                         "may only renumber edge endpoints")
+    if not allows_rewrite:
+        if after.messages != before.messages:
+            raise ValueError(
+                "pass changed the buffer messages table — def-use "
+                "semantics are fixed by the §2.2 contract")
+        if sorted(map(_node_id, after.nodes)) != sorted(map(
+                _node_id, before.nodes)):
+            raise ValueError(
+                "pass changed the node multiset — byte cover and hop "
+                "chains are fixed by the §2.2 contract; only dispatch "
+                "order is free (declare allows_rewrite to opt out)")
+        def edge_set(g: TransferGraph) -> set:
+            return {(_node_id(g.nodes[e.src]), _node_id(g.nodes[e.dst]),
+                     e.kind) for e in g.edges}
+        if edge_set(after) != edge_set(before):
+            raise ValueError(
+                "pass changed the dependency-edge set — passes may only "
+                "renumber edge endpoints (declare allows_rewrite to opt "
+                "out)")
     for e in after.edges:
         if e.src >= e.dst:
             raise ValueError("pass broke topological index order "
@@ -154,9 +184,66 @@ def check_pass(before: TransferGraph, after: TransferGraph) -> None:
     after.validate(cross_flow_exclusive=False)
 
 
-def _sorted_order(graph: TransferGraph, key) -> list[int]:
-    return sorted(range(graph.num_nodes),
-                  key=lambda i: key(graph.nodes[i]))
+def _constrained_order(graph: TransferGraph, key) -> list[int]:
+    """Min-key Kahn's algorithm: dispatch the ready node with the
+    smallest ``key(node, index)``.
+
+    On a pure-comm lowering whose sort order is already topological
+    (both shipped sort keys are monotone along hop/window edges) this
+    yields exactly the globally sorted order, so ``round_robin`` stays
+    the identity on a fresh lowering. On heterogeneous graphs the buffer
+    edges gate compute nodes behind their operands while ready copies
+    keep flowing — the compute-aware interleave.
+    """
+    n = graph.num_nodes
+    succs: dict[int, list[int]] = {}
+    indeg = [0] * n
+    for e in graph.edges:
+        succs.setdefault(e.src, []).append(e.dst)
+        indeg[e.dst] += 1
+    ready = [(key(graph.nodes[i], i), i)
+             for i in range(n) if indeg[i] == 0]
+    heapq.heapify(ready)
+    order: list[int] = []
+    while ready:
+        _, i = heapq.heappop(ready)
+        order.append(i)
+        for j in succs.get(i, ()):
+            indeg[j] -= 1
+            if indeg[j] == 0:
+                heapq.heappush(ready, (key(graph.nodes[j], j), j))
+    if len(order) != n:
+        raise ValueError("dependency cycle in transfer graph")
+    return order
+
+
+def _rr_key(n, i: int) -> tuple:
+    """Round-robin priority: chunk waves across paths; ready copies
+    dispatch before ready computes (class marker 0 < 1) so copies slot
+    into compute gaps — part of the §2.2 compute-aware contract."""
+    if isinstance(n, ComputeNode):
+        return (n.window, 1, i, 0, 0, 0)
+    return (n.window, 0, n.msg_idx, n.chunk_idx, n.path_idx, n.hop_idx)
+
+
+def _serialization_slot(nd) -> tuple:
+    """The resource a node serializes on: its per-link slot for copies,
+    the one shared compute stream for kernels (mirrors
+    :meth:`TransferGraph.serialization_edges` — the two must agree or
+    the greedy would optimize a different objective than the validator
+    derives)."""
+    if isinstance(nd, ComputeNode):
+        return ("compute",)
+    return (nd.msg_idx, nd.path_idx, nd.window, nd.hop_idx)
+
+
+def _df_key(n, i: int) -> tuple:
+    """Depth-first priority: drain each path's chunk chain; compute
+    nodes follow ready copies in original index order (same §2.2
+    compute-aware rule as :func:`_rr_key`)."""
+    if isinstance(n, ComputeNode):
+        return (n.window, 1, i, 0, 0, 0)
+    return (n.window, 0, n.msg_idx, n.path_idx, n.chunk_idx, n.hop_idx)
 
 
 class RoundRobinSchedule:
@@ -166,15 +253,17 @@ class RoundRobinSchedule:
     Identity on a fresh lowering (same graph object, same digest): this
     pass exists so the ordering is *owned by the pipeline* rather than
     baked into the emitter, and so other passes have a baseline to be
-    scored against. Preserves every §4.5 invariant trivially.
+    scored against. Compute-aware on heterogeneous graphs: ready copies
+    dispatch before ready compute nodes, which serialize in program
+    order. Preserves every §4.5 invariant trivially.
     """
 
     name = "round_robin"
 
     def __call__(self, graph: TransferGraph) -> TransferGraph:
-        return reindex(graph, _sorted_order(
-            graph, lambda n: (n.window, n.msg_idx, n.chunk_idx,
-                              n.path_idx, n.hop_idx)))
+        """Renumber into round-robin order (identity on a fresh
+        pure-comm lowering — same object, same digest; §2.2)."""
+        return reindex(graph, _constrained_order(graph, _rr_key))
 
 
 class DepthFirstSchedule:
@@ -184,16 +273,17 @@ class DepthFirstSchedule:
     one contiguous burst per window round) at the cost of starting path
     *k* only after all of path *k−1*'s copies have been issued — the
     modeled issue chain prices that delay, which is why ``auto`` rarely
-    picks it on multi-path plans. Preserves the §4.5 invariants: only
-    node indices (and thus serialization-edge order) change.
+    picks it on multi-path plans. Compute-aware like ``round_robin``.
+    Preserves the §4.5 invariants: only node indices (and thus
+    serialization-edge order) change.
     """
 
     name = "depth_first"
 
     def __call__(self, graph: TransferGraph) -> TransferGraph:
-        return reindex(graph, _sorted_order(
-            graph, lambda n: (n.window, n.msg_idx, n.path_idx,
-                              n.chunk_idx, n.hop_idx)))
+        """Renumber into depth-first order under the stored-edge
+        constraints (§2.2: content untouched, digest reflects order)."""
+        return reindex(graph, _constrained_order(graph, _df_key))
 
 
 class CriticalPathSchedule:
@@ -230,8 +320,9 @@ class CriticalPathSchedule:
         overlay, the issue slot via
         :func:`~repro.core.pipelining.launch_model_for`. Without a
         topology, weights degrade to raw chunk bytes on uniform links
-        and the issue term vanishes — invariants are preserved either
-        way, only the heuristic's objective coarsens.
+        (compute nodes to their declared cost) and the issue term
+        vanishes — invariants are preserved either way, only the
+        heuristic's objective coarsens.
         """
         if self.topology is not None:
             from repro.core.pipelining import (graph_node_weights_s,
@@ -239,7 +330,9 @@ class CriticalPathSchedule:
             launch = launch_model_for(self.topology)
             return (graph_node_weights_s(graph, self.topology),
                     launch.graph_launch_per_node_ns / 1e9)
-        return [float(n.nbytes) for n in graph.nodes], 0.0
+        return [float(n.cost_ns or n.flops)
+                if isinstance(n, ComputeNode) else float(n.nbytes)
+                for n in graph.nodes], 0.0
 
     def __call__(self, graph: TransferGraph) -> TransferGraph:
         n = graph.num_nodes
@@ -257,8 +350,12 @@ class CriticalPathSchedule:
         for i in reversed(graph.topological_order()):
             for j in succs.get(i, ()):
                 down[i] = max(down[i], weight[i] + down[j])
-        canonical = {i: (nd.window, nd.msg_idx, nd.chunk_idx, nd.path_idx,
-                         nd.hop_idx) for i, nd in enumerate(graph.nodes)}
+        canonical = {
+            i: ((nd.window, 1, i, 0, 0, 0)
+                if isinstance(nd, ComputeNode) else
+                (nd.window, 0, nd.msg_idx, nd.chunk_idx, nd.path_idx,
+                 nd.hop_idx))
+            for i, nd in enumerate(graph.nodes)}
         slot_free: dict[tuple, float] = {}   # per-link serialization slot
         finish: dict[int, float] = {}
         preds: dict[int, list[int]] = {}
@@ -271,7 +368,7 @@ class CriticalPathSchedule:
             best, best_key = None, None
             for i in ready:
                 nd = graph.nodes[i]
-                slot = (nd.msg_idx, nd.path_idx, nd.window, nd.hop_idx)
+                slot = _serialization_slot(nd)
                 start = max((finish[p] for p in preds.get(i, ())),
                             default=0.0)
                 start = max(start, slot_free.get(slot, 0.0), k * issue_s)
@@ -280,7 +377,7 @@ class CriticalPathSchedule:
                     best, best_key = i, key
             i = best
             nd = graph.nodes[i]
-            slot = (nd.msg_idx, nd.path_idx, nd.window, nd.hop_idx)
+            slot = _serialization_slot(nd)
             start = max((finish[p] for p in preds.get(i, ())), default=0.0)
             start = max(start, slot_free.get(slot, 0.0), k * issue_s)
             finish[i] = slot_free[slot] = start + weight[i]
@@ -369,7 +466,9 @@ def apply_schedule(graph: TransferGraph,
     object), applies it, enforces the §2.2 contract (:func:`check_pass`)
     so §4.5 invariants and digest semantics cannot be silently broken,
     and returns ``(scheduled graph, concrete schedule name)`` — for
-    ``auto`` the name of the candidate the model actually picked.
+    ``auto`` the name of the candidate the model actually picked. A pass
+    declaring the ``allows_rewrite`` capability is checked under the
+    relaxed contract (node rewrites allowed, §4.5 still enforced).
     """
     sched = (make_schedule(schedule, topology)
              if isinstance(schedule, str) else schedule)
@@ -378,7 +477,9 @@ def apply_schedule(graph: TransferGraph,
         return scheduled, name
     scheduled = sched(graph)
     if scheduled is not graph:     # identity (e.g. default round_robin on
-        check_pass(graph, scheduled)  # a fresh lowering) is a provable no-op
+        check_pass(graph, scheduled,  # a fresh lowering) is a provable no-op
+                   allows_rewrite=bool(getattr(sched, "allows_rewrite",
+                                               False)))
     return scheduled, sched.name
 
 

@@ -300,6 +300,24 @@ class CommSession:
         """AOT (executable, plan) handle for benchmarks."""
         return self.engine.compiled_for(src, dst, nelems, dtype, **kwargs)
 
+    def capture(self, build_fn, *, schedule: str | None = None):
+        """Capture one whole iteration (kernels + multipath exchanges) as
+        ONE heterogeneous transfer graph; returns a launchable
+        :class:`~repro.comm.capture.CapturedStep`.
+
+        ``build_fn(cap)`` declares the step against a
+        :class:`~repro.comm.capture.StepCapture` — inputs, kernel
+        invocations, fused exchanges — and returns the output ref(s).
+        The recording lowers to one graph of copy AND compute nodes,
+        the session's chunk-interleaving scheduler (§2.2) interleaves
+        copies into compute gaps, and every call launches ONE compiled
+        SPMD program: ``stats()["dispatches"]`` increments by exactly
+        one per captured iteration, however many kernels and messages
+        it carries. Resolution rides the §2.3 fast path (memoized per
+        capture signature + schedule + planner epoch).
+        """
+        return self.engine.capture(build_fn, schedule=schedule)
+
     def send_pytree(self, tree, src: int, dst: int):
         """Move every array leaf of ``tree`` from ``src`` to ``dst``.
 
@@ -508,6 +526,8 @@ class CommSession:
             "graph": {
                 "digest": graph.digest(),
                 "nodes": graph.num_nodes,
+                "copy_nodes": graph.num_copy_nodes,
+                "compute_nodes": graph.num_compute_nodes,
                 "edges": graph.num_edges,
                 "critical_path_nodes": graph.critical_path_nodes(),
             },
@@ -547,9 +567,12 @@ class CommSession:
         """One-stop accounting: cache hits/misses, launches, policy,
         topology. ``dispatches`` counts compiled-program launches — a fused
         group (``exchange``, ``send_pytree``, ``bidirectional``) is ONE
-        dispatch however many messages it carries. ``graph`` totals the
-        copy nodes / dependency edges of every transfer graph this session
-        compiled (cache misses only). ``schedule`` is the session's
+        dispatch however many messages it carries — as is a captured
+        whole-iteration step (``session.capture``). ``graph`` totals the
+        nodes / dependency edges of every transfer graph this session
+        compiled (cache misses only); ``copy_nodes_compiled`` /
+        ``compute_nodes_compiled`` break the node total down by kind
+        (heterogeneous captured-step graphs carry both). ``schedule`` is the session's
         default scheduler and ``schedules`` counts dispatch/compile
         calls per concrete schedule resolved — ``auto`` counts as
         whichever candidate it picked, and cache-hit launches count too
@@ -579,7 +602,9 @@ class CommSession:
                   "fastpath": {"enabled": self.config.fastpath,
                                "validate": self.config.validate,
                                "staging_ns": 0, **FastPathCache().stats()},
-                  "graph": {"nodes_compiled": 0, "edges_compiled": 0},
+                  "graph": {"nodes_compiled": 0, "edges_compiled": 0,
+                            "copy_nodes_compiled": 0,
+                            "compute_nodes_compiled": 0},
                   "schedules": {}}
         return {
             "cache": es["cache"],

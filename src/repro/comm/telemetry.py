@@ -87,6 +87,13 @@ class DispatchSample:
     them (warmup dropping, medians) — the sample must therefore preserve
     everything the §4.4 model needs to re-price it, and nothing tied to
     live objects (no plans, no graphs, no topology references).
+
+    ``compute`` is the compute-node identity of a captured-step dispatch
+    — one ``(kernel, flops, cost_ns)`` triple per
+    :class:`~repro.comm.graph.ComputeNode` — and is part of
+    :attr:`signature`, so the calibration fitter can never pool a
+    captured-step sample (whose execute time includes kernel work) with
+    a pure-comm sample of the same route shape.
     """
 
     routes: tuple[tuple[tuple[tuple[tuple[int, int], ...], int, int],
@@ -97,12 +104,15 @@ class DispatchSample:
     schedule: str
     stages: StageTimings
     fastpath_hit: bool
+    compute: tuple[tuple[str, int, int], ...] = ()
 
     @property
     def signature(self) -> tuple:
-        """Hashable pooling key ``(routes, window, schedule)`` — the
-        contract key the fitter groups warmup/median statistics by."""
-        return (self.routes, self.window, self.schedule)
+        """Hashable pooling key ``(routes, window, schedule, compute)``
+        — the contract key the fitter groups warmup/median statistics
+        by. Compute identity keeps captured-step samples apart from
+        pure-comm samples with the same routes (§4.4c invariant)."""
+        return (self.routes, self.window, self.schedule, self.compute)
 
     @property
     def num_paths(self) -> int:

@@ -102,6 +102,73 @@ def halo_exchange_group(session: "CommSession", blocks: jax.Array
     return left_halos, right_halos
 
 
+def make_captured_jacobi_step(session: "CommSession", rows: int, cols: int,
+                              dtype=jnp.float32, *,
+                              schedule: str | None = None,
+                              max_paths: int | None = None,
+                              num_chunks: int | None = None):
+    """Capture one whole Jacobi iteration (halo exchange + sweep) as ONE
+    heterogeneous graph — the reference ``session.capture`` idiom.
+
+    The returned :class:`~repro.comm.capture.CapturedStep` takes the
+    column-decomposed domain ``(n, rows, cols)`` and returns the swept
+    domain, same shape, in ONE compiled launch: boundary extraction and
+    the 5-point stencil are compute nodes, the ``2n``-message ring
+    exchange is planned jointly (``max_paths``/``num_chunks`` as in
+    :meth:`~repro.comm.session.CommSession.exchange`), and the scheduler
+    pass interleaves the copies into the compute gaps. The sweep applies
+    *exactly* the eager :func:`jacobi_step` operations (same Dirichlet
+    masking, same stencil), and each halo is joined from the exchange's
+    reception buffers by exact zero-sum — numerics are identical to the
+    eager path, which ``tests/test_capture.py`` asserts bitwise.
+    """
+    ax = session.axis_name
+    n = session.engine.num_devices
+    if n < 2:
+        raise ValueError("captured Jacobi needs >= 2 devices (the ring "
+                         "exchange cannot self-send)")
+
+    def build(cap):
+        u = cap.input((rows, cols), dtype)
+        right, left = cap.kernel(
+            lambda u_: (u_[:, -1], u_[:, 0]), u, name="halo_slices",
+            flops=0)
+        sends = ([(right, i, (i + 1) % n) for i in range(n)]
+                 + [(left, i, (i - 1) % n) for i in range(n)])
+        recvs = cap.exchange(sends, max_paths=max_paths,
+                             num_chunks=num_chunks)
+
+        def sweep(u_, *halos):
+            # device j's left halo is j-1's right boundary: of the n
+            # right-going receptions exactly one is nonzero locally.
+            left_halo = halos[0]
+            for h in halos[1:n]:
+                left_halo = left_halo + h
+            right_halo = halos[n]
+            for h in halos[n + 1:]:
+                right_halo = right_halo + h
+            left_halo = left_halo.reshape(rows, 1)
+            right_halo = right_halo.reshape(rows, 1)
+            i = lax.axis_index(ax)
+            left_halo = jnp.where(i == 0, jnp.zeros_like(left_halo),
+                                  left_halo)
+            right_halo = jnp.where(i == n - 1, jnp.zeros_like(right_halo),
+                                   right_halo)
+            ext = jnp.concatenate([left_halo, u_, right_halo], axis=1)
+            up = jnp.pad(ext[:-1, :], ((1, 0), (0, 0)))
+            down = jnp.pad(ext[1:, :], ((0, 1), (0, 0)))
+            return 0.25 * (ext[:, :-2] + ext[:, 2:] + up[:, 1:-1]
+                           + down[:, 1:-1])
+
+        from repro.comm.capture import BufferSpec
+        out = cap.kernel(sweep, u, *recvs, name="jacobi_sweep",
+                         out=BufferSpec((rows, cols), str(jnp.dtype(dtype))),
+                         flops=5 * rows * cols)
+        return out
+
+    return session.capture(build, schedule=schedule)
+
+
 def jacobi_step(u: jax.Array, axis_name: str, *, multipath: bool = False,
                 use_kernel: bool = False) -> jax.Array:
     """One Jacobi sweep on a column-partitioned 2-D domain.

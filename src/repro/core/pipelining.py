@@ -73,6 +73,21 @@ GRAPH_LAUNCH_PER_NODE_NS = 300      # marginal per-node launch cost in a graph
 GRAPH_INSTANTIATE_BASE_NS = 90_000  # one-time instantiation (first iter)
 GRAPH_INSTANTIATE_PER_NODE_NS = 85_000
 SYNC_NS_PER_PATH = 2_000            # event record + stream-wait per path
+COMPUTE_GFLOPS = 50.0               # declared-FLOP pricing rate for
+                                    # ComputeNodes without a measured cost
+
+
+def compute_time_s(node) -> float:
+    """Modeled seconds for one :class:`~repro.comm.graph.ComputeNode`.
+
+    Measured ``cost_ns`` wins when non-zero (the calibration loop can
+    stamp it); otherwise declared ``flops`` are priced at the nominal
+    :data:`COMPUTE_GFLOPS` rate. Shared by the critical-path weights and
+    the scheduled-DAG arbiter so ``auto`` stays honest about compute.
+    """
+    if node.cost_ns:
+        return node.cost_ns / 1e9
+    return node.flops / (COMPUTE_GFLOPS * 1e9)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -309,6 +324,8 @@ def _graph_message_times_s(graph: "TransferGraph",
     totals: dict[tuple[int, int], int] = defaultdict(int)
     chunks: dict[tuple[int, int], int] = defaultdict(int)
     for node in graph.nodes:
+        if hasattr(node, "kernel"):   # ComputeNode: no wire time
+            continue
         if node.window:
             continue
         key = (node.msg_idx, node.path_idx)
@@ -422,16 +439,23 @@ def graph_node_weights_s(graph: "TransferGraph", topo: Topology
     ``critical_path`` scheduler in :mod:`repro.comm.passes`, so the
     greedy pass optimizes exactly the objective the ``auto`` scorer
     rates it on. Raises ``ValueError`` when a graph link is absent from
-    ``topo`` (the graph and topology must agree).
+    ``topo`` (the graph and topology must agree). Heterogeneous graphs:
+    compute nodes are priced by :func:`compute_time_s` (measured
+    ``cost_ns`` or declared FLOPs) and use no link.
     """
     paths_on: dict[tuple[int, int], set] = defaultdict(set)
     host_paths: set = set()
     for node in graph.nodes:
+        if hasattr(node, "kernel"):   # ComputeNode: uses no link
+            continue
         paths_on[node.link].add((node.msg_idx, node.path_idx))
         if HOST in node.link:
             host_paths.add((node.msg_idx, node.path_idx))
     weight = []
     for node in graph.nodes:
+        if hasattr(node, "kernel"):
+            weight.append(compute_time_s(node))
+            continue
         link = topo.link(*node.link)
         if link is None:
             raise ValueError(f"graph link {node.link} not in topology "
@@ -488,7 +512,8 @@ def scheduled_time_s(graph: "TransferGraph", topo: Topology, *,
         for p in preds[idx]:
             start = max(start, finish[p])
         finish[idx] = start + weight[idx]
-    num_paths = len({(nd.msg_idx, nd.path_idx) for nd in graph.nodes})
+    num_paths = len({(nd.msg_idx, nd.path_idx) for nd in graph.nodes
+                     if not hasattr(nd, "kernel")})
     if compiled_plan:
         base = launch.graph_launch_base_ns
         if first_iteration:

@@ -1,4 +1,4 @@
 from repro.training.train_step import (  # noqa: F401
-    TrainStepConfig, init_state, make_dp_train_step, make_train_step,
-    state_shapes, state_shardings)
+    TrainStepConfig, init_state, make_captured_dp_train_step,
+    make_dp_train_step, make_train_step, state_shapes, state_shardings)
 from repro.training import sharding  # noqa: F401

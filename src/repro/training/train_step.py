@@ -129,6 +129,108 @@ def make_dp_train_step(cfg: ArchConfig, ts: TrainStepConfig,
                      check_vma=False)
 
 
+def make_captured_dp_train_step(cfg: ArchConfig, ts: TrainStepConfig,
+                                opt: OptimConfig, comm: "CommSession",
+                                state, batch, *,
+                                schedule: str | None = None,
+                                max_paths: int | None = None,
+                                num_chunks: int | None = None) -> Callable:
+    """Data-parallel step captured as ONE heterogeneous graph —
+    grad compute, multipath ring all-reduce, and the optimizer update
+    all inside a single compiled launch (``session.capture``).
+
+    ``state``/``batch`` are example pytrees (concrete or abstract) fixing
+    the shapes; the returned ``step(state, batch) -> (state, metrics)``
+    matches :func:`make_dp_train_step` to numerical tolerance (the
+    captured all-reduce sums in fp32 ring order, the eager path in
+    bidirectional-ring order). Every call is ONE engine dispatch — grad
+    kernel, ``n-1`` exchange rounds, combine kernels, and the update
+    kernel are nodes of one scheduled transfer graph, so
+    ``comm.stats()["dispatches"]`` increments by one per step.
+    """
+    import math
+
+    from repro.comm.capture import captured_psum
+
+    grads_of = _make_grad_fn(cfg, ts)
+    n = comm.engine.num_devices
+    params_leaves, params_def = jax.tree.flatten(state["params"])
+    opt_leaves, opt_def = jax.tree.flatten(state["opt"])
+    batch_leaves, batch_def = jax.tree.flatten(batch)
+    npar, nopt = len(params_leaves), len(opt_leaves)
+    for b in batch_leaves:
+        if b.shape[0] % n:
+            raise ValueError(f"global batch dim {b.shape[0]} not divisible "
+                             f"by {n} devices")
+    grad_sizes = [math.prod(p.shape) for p in params_leaves]
+    total = sum(grad_sizes)
+    m_shapes = jax.eval_shape(lambda p, g, s: apply_updates(p, g, s, opt)[2],
+                              state["params"], state["params"],
+                              state["opt"])
+    metric_keys = tuple(sorted(m_shapes)) + ("loss",)
+
+    def build(cap):
+        p_refs = [cap.input(tuple(p.shape), p.dtype, replicated=True)
+                  for p in params_leaves]
+        o_refs = [cap.input(tuple(o.shape), o.dtype, replicated=True)
+                  for o in opt_leaves]
+        b_refs = [cap.input((b.shape[0] // n,) + tuple(b.shape[1:]),
+                            b.dtype) for b in batch_leaves]
+
+        def grad_kernel(*leaves):
+            params = params_def.unflatten(list(leaves[:npar]))
+            bt = batch_def.unflatten(list(leaves[npar:]))
+            loss, grads = grads_of(params, bt)
+            flat = [g.astype(jnp.float32).ravel()
+                    for g in params_def.flatten_up_to(grads)]
+            return jnp.concatenate(
+                flat + [loss.astype(jnp.float32).reshape(1)])
+
+        gvec = cap.kernel(grad_kernel, *p_refs, *b_refs, name="grad",
+                          flops=6 * total)
+        tot = captured_psum(cap, gvec, n, max_paths=max_paths,
+                            num_chunks=num_chunks, name="gradsum")
+
+        def update_kernel(tot_v, *leaves):
+            params = params_def.unflatten(list(leaves[:npar]))
+            opt_state = opt_def.unflatten(list(leaves[npar:]))
+            mean = tot_v / n
+            gleaves, off = [], 0
+            for p, sz in zip(params_leaves, grad_sizes):
+                gleaves.append(mean[off:off + sz].reshape(p.shape)
+                               .astype(p.dtype))
+                off += sz
+            loss = mean[total]
+            grads = params_def.unflatten(gleaves)
+            new_params, new_opt, metrics = apply_updates(
+                params, grads, opt_state, opt)
+            metrics["loss"] = loss
+            mvec = jnp.stack([metrics[k].astype(jnp.float32)
+                              for k in metric_keys])
+            return (tuple(jax.tree.leaves(new_params))
+                    + tuple(jax.tree.leaves(new_opt)) + (mvec,))
+
+        return cap.kernel(update_kernel, tot, *p_refs, *o_refs,
+                          name="update", flops=10 * total)
+
+    captured = comm.capture(build, schedule=schedule)
+
+    def step(st, bt):
+        p_l = params_def.flatten_up_to(st["params"])
+        o_l = opt_def.flatten_up_to(st["opt"])
+        b_l = [jnp.asarray(x).reshape((n, x.shape[0] // n) + x.shape[1:])
+               for x in batch_def.flatten_up_to(bt)]
+        outs = captured(*p_l, *o_l, *b_l)
+        outs0 = [o[0] for o in outs]   # replicated results: rows identical
+        new_params = params_def.unflatten(outs0[:npar])
+        new_opt = opt_def.unflatten(outs0[npar:npar + nopt])
+        mvec = outs0[-1]
+        metrics = {k: mvec[i] for i, k in enumerate(metric_keys)}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
 def state_shapes(cfg: ArchConfig, opt: OptimConfig):
     p = tfm.param_shapes(cfg)
     o = jax.eval_shape(lambda pp: init_opt_state(pp, opt), p)

@@ -23,11 +23,13 @@ import pytest
 
 import repro.comm.cache as cache_mod
 import repro.comm.calibration as calibration_mod
+import repro.comm.capture as capture_mod
 import repro.comm.graph as graph_mod
 import repro.comm.passes as passes_mod
 import repro.comm.telemetry as telemetry_mod
 
-GATED = [graph_mod, passes_mod, cache_mod, telemetry_mod, calibration_mod]
+GATED = [graph_mod, passes_mod, capture_mod, cache_mod, telemetry_mod,
+         calibration_mod]
 
 DOCS = pathlib.Path(__file__).resolve().parents[1] / "docs" / "api.md"
 

@@ -14,7 +14,8 @@ import numpy as np  # noqa: E402
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.comm import (CommConfig, CommSession, PathPlanner,  # noqa: E402
-                        TransferPlanCache)
+                        TransferPlanCache, TransferRequest)
+from repro.comm.capture import StepCapture, lower_step  # noqa: E402
 from repro.comm.graph import lower  # noqa: E402
 from repro.comm.passes import apply_schedule, check_pass  # noqa: E402
 from repro.core import (Topology, build_schedule,  # noqa: E402
@@ -170,6 +171,58 @@ def test_group_pass_invariants_property(pairs, sizes, window):
 
 _pairs8 = st.tuples(st.integers(0, 7), st.integers(0, 7)).filter(
     lambda p: p[0] != p[1])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nelems=st.integers(16, 65536),
+    chunks=st.one_of(st.none(), st.integers(1, 8)),
+    max_paths=st.integers(1, 3),
+    pairs=st.lists(_pairs8, min_size=1, max_size=3, unique=True),
+)
+def test_capture_count_laws_property(nelems, chunks, max_paths, pairs):
+    """Heterogeneous count laws (ISSUE 7): ``lower_step`` emits exactly
+    one ComputeNode per kernel invocation plus Σ chunks×hops copy nodes,
+    §4.5 validation (including buffer def-use edges) holds on the
+    lowering, and every shipped scheduler preserves the node multiset,
+    the copy/compute split, and every message's byte cover (§2.2)."""
+    topo = Topology.full_mesh(8, with_host=False)
+    planner = PathPlanner(topo, multipath_threshold=256)
+
+    def plan_group_fn(specs, *, max_paths=None, num_chunks=None):
+        reqs = [TransferRequest(s, d, ne * 4, granularity=4)
+                for (s, d, ne, _) in specs]
+        return planner.plan_group(reqs, max_paths=max_paths,
+                                  include_host=False,
+                                  num_chunks=num_chunks)
+
+    cap = StepCapture()
+    x = cap.input((nelems,), jnp.float32)
+    y = cap.kernel(lambda v: v * 2, x, name="k0")
+    recvs = cap.exchange([(y, s, d) for (s, d) in pairs],
+                         max_paths=max_paths, num_chunks=chunks)
+    cap.kernel(lambda *vs: sum(vs[1:], vs[0]), y, *recvs, name="k1")
+    graph, plans = lower_step(cap, plan_group_fn, topo.name)
+    assert graph.num_compute_nodes == 2
+    assert graph.num_copy_nodes == sum(
+        len(pa.chunk_bounds()) * pa.route.num_hops
+        for p in plans for pa in p.paths)
+    assert graph.num_nodes == graph.num_copy_nodes + graph.num_compute_nodes
+    assert len(graph.messages) == len(pairs)
+    totals = {i: p.nbytes for i, p in enumerate(plans)}
+    for name in _ALL_SCHEDULES:
+        scheduled, _ = apply_schedule(graph, name, topo)
+        check_pass(graph, scheduled)
+        scheduled.validate(totals, cross_flow_exclusive=False)
+        assert scheduled.num_nodes == graph.num_nodes
+        assert scheduled.num_copy_nodes == graph.num_copy_nodes
+        assert scheduled.num_compute_nodes == graph.num_compute_nodes
+        for m_idx, plan in enumerate(plans):
+            per_msg = sorted((n.offset, n.nbytes) for n in scheduled.nodes
+                             if hasattr(n, "msg_idx")
+                             and n.msg_idx == m_idx and n.hop_idx == 0)
+            assert per_msg == sorted(
+                b for pa in plan.paths for b in pa.chunk_bounds())
 
 
 @settings(max_examples=40, deadline=None)

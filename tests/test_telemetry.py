@@ -93,7 +93,7 @@ def test_stage_timings_cover_every_stage():
 
 def test_dispatch_sample_derived_views():
     s = _sample(launch_ns=2_000, execute_ns=3_000)
-    assert s.signature == (s.routes, 1, "round_robin")
+    assert s.signature == (s.routes, 1, "round_robin", ())
     assert s.num_paths == 1
     assert s.links == ((0, 1),)
     assert s.measured_s == pytest.approx(5e-6)
