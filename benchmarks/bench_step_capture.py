@@ -18,6 +18,18 @@ variants — ``modeled_captured_s`` is ``scheduled_time_s`` over the
 heterogeneous graph, ``modeled_uncaptured_s`` adds the second launch's
 fixed cost and the compute nodes' ``compute_time_s`` to the comm-only
 graph — so CI can assert the model agrees capture never loses.
+
+Overlap instrumentation (DESIGN §2.2 lane model): captured rows
+additionally carry ``modeled_lane_s`` / ``modeled_serialized_s`` (the
+resource-lane makespan vs the historic serialized chain of the SAME
+scheduled graph) and ``hidden_copy_s`` / ``hidden_frac`` (modeled copy
+seconds running behind compute, as a fraction of total copy time).
+``step_capture/{sched}/dp_model`` rows price a mini captured DP-train
+step graph (grad → ring all-reduce → update; lowered + scheduled, never
+compiled) the same way — together they feed the CI overlap gate, which
+asserts ``overlap``'s lane makespan never exceeds ``critical_path``'s
+serialized makespan on either graph and ``auto`` never regresses
+``round_robin``.
 """
 
 import time
@@ -29,10 +41,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import CommConfig, CommSession
+from repro.comm import CommConfig, CommSession, PathPlanner, TransferRequest
 from repro.core import Topology
 from repro.core.halo import halo_exchange_group, make_captured_jacobi_step
-from repro.core.pipelining import (compute_time_s, launch_model_for,
+from repro.core.pipelining import (compute_time_s, graph_node_weights_s,
+                                   hidden_copy_time_s, launch_model_for,
                                    scheduled_time_s)
 
 NDEV = 4
@@ -70,11 +83,71 @@ def _modeled(step_entry, comm_graph, topo) -> tuple[float, float]:
     """(captured, uncaptured) modeled seconds for one iteration."""
     captured_s = scheduled_time_s(step_entry.graph, topo)
     launch = launch_model_for(topo)
-    compute_s = sum(compute_time_s(n) for n in step_entry.graph.nodes
+    compute_s = sum(compute_time_s(n, topo) for n in step_entry.graph.nodes
                     if hasattr(n, "kernel"))
     uncaptured_s = (scheduled_time_s(comm_graph, topo) + compute_s
                     + launch.graph_launch_base_ns / 1e9)
     return captured_s, uncaptured_s
+
+
+def _overlap_extras(graph, topo) -> dict:
+    """Lane-model view of one scheduled mixed graph: both objectives'
+    makespans plus modeled hidden-copy seconds and fraction."""
+    lane_s = scheduled_time_s(graph, topo, mode="lanes")
+    serialized_s = scheduled_time_s(graph, topo, mode="serialized")
+    hidden_s = hidden_copy_time_s(graph, topo)
+    weights = graph_node_weights_s(graph, topo)
+    copy_s = sum(w for nd, w in zip(graph.nodes, weights)
+                 if not hasattr(nd, "kernel"))
+    return {"modeled_lane_s": lane_s,
+            "modeled_serialized_s": serialized_s,
+            "hidden_copy_s": hidden_s,
+            "hidden_frac": round(hidden_s / copy_s, 4) if copy_s else 0.0}
+
+
+def _dp_model_rows() -> list[Row]:
+    """Modeled-only rows for a mini captured DP-train step graph (grad →
+    multipath ring all-reduce → update), lowered and scheduled per
+    schedule but never compiled — the second mixed graph the CI overlap
+    gate prices."""
+    from repro.comm.capture import StepCapture, captured_psum, lower_step
+    from repro.comm.passes import apply_schedule
+
+    topo = Topology.full_mesh(NDEV, with_host=False)
+    planner = PathPlanner(topo, multipath_threshold=256)
+
+    def plan_group_fn(specs, *, max_paths=None, num_chunks=None):
+        reqs = [TransferRequest(s, d, ne * 4, granularity=4)
+                for (s, d, ne, _) in specs]
+        return planner.plan_group(reqs, max_paths=max_paths,
+                                  include_host=False,
+                                  num_chunks=num_chunks)
+
+    # Launch-bound payload (the regime graph capture targets): the
+    # serialized issue chain dominates, so concurrent link lanes give
+    # the lane model a strict win the CI gate can assert.
+    nelems = 1 << 10
+    cap = StepCapture()
+    x = cap.input((nelems,), jnp.float32)
+    gvec = cap.kernel(lambda v: v * 2.0, x, name="grad",
+                      flops=6 * nelems)
+    tot = captured_psum(cap, gvec, NDEV, num_chunks=2, name="gradsum")
+    cap.kernel(lambda t, v: t / NDEV + v, tot, x, name="update",
+               flops=10 * nelems)
+    graph, _ = lower_step(cap, plan_group_fn, topo.name)
+
+    rows = []
+    for sched in common.SCHEDULES:
+        scheduled, chosen = apply_schedule(graph, sched, topo)
+        extras = _overlap_extras(scheduled, topo)
+        rows.append(Row(
+            f"step_capture/{sched}/dp_model",
+            extras["modeled_lane_s"] * 1e6, f"chosen={chosen}",
+            {"nodes": scheduled.num_nodes,
+             "copy_nodes": scheduled.num_copy_nodes,
+             "compute_nodes": scheduled.num_compute_nodes,
+             "schedule": sched, "chosen": chosen, **extras}))
+    return rows
 
 
 def run() -> list[Row]:
@@ -126,13 +199,15 @@ def run() -> list[Row]:
                  "modeled_captured_s": modeled_cap_s,
                  "modeled_uncaptured_s": modeled_unc_s,
                  "modeled_speedup": round(
-                     modeled_unc_s / max(modeled_cap_s, 1e-12), 3)}),
+                     modeled_unc_s / max(modeled_cap_s, 1e-12), 3),
+                 **_overlap_extras(g, cap_sess.topology)}),
             Row(f"step_capture/{sched}/uncaptured", unc_us,
                 "exchange+jit_sweep",
                 {**counts,
                  "engine_dispatches": unc_dispatches,
                  "launches_per_iter": unc_dispatches + 1}),
         ]
+    rows += _dp_model_rows()
     return rows
 
 
@@ -142,12 +217,15 @@ def main() -> None:
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="two schedules only (CI smoke step)")
+                    help="overlap-gate schedules only (CI smoke step)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as a JSON artifact")
     args = ap.parse_args()
     if args.smoke:
-        common.SCHEDULES[:] = common.SCHEDULES[:2]
+        # Keep the schedules the CI overlap gate compares (overlap vs
+        # critical_path, auto vs round_robin) in the smoke artifact.
+        common.SCHEDULES[:] = [s for s in common.SCHEDULES
+                               if s != "depth_first"]
     rows = run()
     print("name,us_per_call,derived")
     for row in rows:

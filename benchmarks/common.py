@@ -17,7 +17,8 @@ SIZES_OMB = [1, 4, 8, 16, 32, 64]                  # MiB (paper Fig. 7-10)
 EXEC_SIZES = [1, 4, 16]                            # MiB actually executed
 #: Chunk-interleaving schedulers swept by bench_graph_overhead (the
 #: ``--schedule`` axis; ``run.py --schedule NAME`` narrows it in place).
-SCHEDULES = ["round_robin", "depth_first", "critical_path", "auto"]
+SCHEDULES = ["round_robin", "depth_first", "critical_path", "overlap",
+             "auto"]
 #: Per-path chunk counts swept by bench_dispatch (the node-count axis of
 #: the steady-state dispatch rows; --smoke shrinks it in place).
 DISPATCH_CHUNKS = [1, 4, 16]

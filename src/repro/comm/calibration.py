@@ -133,6 +133,10 @@ class CalibrationProfile:
     holds only links that passed the fitter's minimum-sample gate;
     ``launch`` is ``None`` when launch terms did not (consumers fall
     back to :data:`~repro.core.pipelining.DEFAULT_LAUNCH_MODEL`).
+    ``kernel_cost_ns`` maps kernel names to fitted median execute ns —
+    the per-kernel compute term that replaces the ``COMPUTE_GFLOPS``
+    constant in :func:`~repro.core.pipelining.compute_time_s` when the
+    profile is attached; empty when no kernel evidence passed the gate.
     """
 
     topology_digest: str
@@ -142,17 +146,23 @@ class CalibrationProfile:
     link_samples: dict[_LinkKey, int] = dataclasses.field(
         default_factory=dict)
     launch_samples: int = 0
+    kernel_cost_ns: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    kernel_samples: dict[str, int] = dataclasses.field(
+        default_factory=dict)
     version: int = PROFILE_VERSION
 
     def summary(self) -> dict:
         """Compact schema-stable dict for ``session.describe()``:
-        digest, fitted-link count, whether launch terms are live —
-        enough to audit which terms an arbitration consumed."""
+        digest, fitted-link count, whether launch terms are live,
+        fitted-kernel count — enough to audit which terms an
+        arbitration consumed."""
         return {"topology_digest": self.topology_digest,
                 "version": self.version,
                 "links_fitted": len(self.link_bandwidth_gbps),
                 "launch_fitted": self.launch is not None,
-                "launch_samples": self.launch_samples}
+                "launch_samples": self.launch_samples,
+                "kernels_fitted": len(self.kernel_cost_ns)}
 
     def to_payload(self) -> dict:
         """Versioned JSON-safe payload (the inverse of
@@ -169,6 +179,10 @@ class CalibrationProfile:
             "launch": (dataclasses.asdict(self.launch)
                        if self.launch is not None else None),
             "launch_samples": self.launch_samples,
+            "kernels": {name: {"cost_ns": cost,
+                               "samples": self.kernel_samples.get(name, 0)}
+                        for name, cost in sorted(
+                            self.kernel_cost_ns.items())},
         }
 
     @classmethod
@@ -188,10 +202,15 @@ class CalibrationProfile:
             counts[(s, d)] = int(entry.get("samples", 0))
         raw = payload.get("launch")
         launch = LaunchModel(**raw) if raw is not None else None
+        kernels, kcounts = {}, {}
+        for name, entry in payload.get("kernels", {}).items():
+            kernels[name] = float(entry["cost_ns"])
+            kcounts[name] = int(entry.get("samples", 0))
         return cls(topology_digest=str(payload["topology_digest"]),
                    link_bandwidth_gbps=links, launch=launch,
                    link_samples=counts,
-                   launch_samples=int(payload.get("launch_samples", 0)))
+                   launch_samples=int(payload.get("launch_samples", 0)),
+                   kernel_cost_ns=kernels, kernel_samples=kcounts)
 
     def filename(self) -> str:
         """Canonical per-digest file name — one profile per machine
@@ -341,20 +360,51 @@ class CalibrationFitter:
                   if c >= self.min_samples}
         return fitted, {k: counts[k] for k in fitted}
 
-    def fit(self, samples: Iterable["DispatchSample"]
+    def _fit_kernels(self, kernels: dict[str, Sequence[float]]
+                     ) -> tuple[dict[str, float], dict[str, int]]:
+        """Fit per-kernel execute costs from the recorder's kernel
+        channel (``{name: chronological execute_ns}``): the first
+        ``warmup`` measurements per kernel are dropped (compile noise),
+        the remainder must clear ``min_samples``, and the fitted term
+        is the median — the same robustness gates the wire terms get.
+        Non-positive medians are discarded: a fitted compute term of
+        zero would silently hide a kernel from the lane model."""
+        fitted: dict[str, float] = {}
+        counts: dict[str, int] = {}
+        for name, values in kernels.items():
+            usable = [float(v) for v in list(values)[self.warmup:]
+                      if v > 0]
+            if len(usable) < self.min_samples:
+                continue
+            med = statistics.median(usable)
+            if med <= 0:
+                continue
+            fitted[name] = round(med, 3)
+            counts[name] = len(usable)
+        return fitted, counts
+
+    def fit(self, samples: Iterable["DispatchSample"],
+            kernels: dict[str, Sequence[float]] | None = None
             ) -> CalibrationProfile:
         """Produce a :class:`CalibrationProfile` for the fitter's
         topology digest. Applies every §4.4c gate; with too little
         evidence the profile is simply sparse (no fitted links and/or
         ``launch=None``) — it never invents terms to preserve the
-        constants-as-fallback contract."""
+        constants-as-fallback contract. ``kernels`` is the *separate*
+        per-kernel execute channel from
+        :meth:`~repro.comm.telemetry.TimelineRecorder.kernel_samples`;
+        keeping it apart from ``samples`` preserves the invariant that
+        captured-step dispatch samples never pool with pure-comm wire
+        evidence."""
         usable = self._drop_warmup(samples)
         launch, n_launch = self._fit_launch(usable)
         bw, counts = self._fit_bandwidth(usable)
+        kcost, kcounts = self._fit_kernels(kernels or {})
         return CalibrationProfile(
             topology_digest=self.topology.digest(),
             link_bandwidth_gbps=bw, launch=launch,
-            link_samples=counts, launch_samples=n_launch)
+            link_samples=counts, launch_samples=n_launch,
+            kernel_cost_ns=kcost, kernel_samples=kcounts)
 
 
 def modeled_sample_time_s(sample: "DispatchSample", topology: Topology,

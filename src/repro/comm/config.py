@@ -20,7 +20,7 @@ Environment variables read by :meth:`from_env`:
 * ``REPRO_MP_POLICY``      — path policy name (greedy | round_robin | tuner)
 * ``REPRO_MP_SCHEDULE``    — chunk-interleaving scheduler applied to the
   lowered transfer graph (round_robin | depth_first | critical_path |
-  auto; DESIGN.md §2.2)
+  overlap | auto; DESIGN.md §2.2)
 * ``REPRO_MP_FASTPATH``    — "1"/"0" steady-state dispatch fast path
   (default on; DESIGN.md §2.3): repeat traffic skips planner, lowering,
   scheduler pass, validation, and digest entirely
@@ -48,9 +48,12 @@ POLICY_NAMES = ("greedy", "round_robin", "tuner")
 
 #: Scheduler (graph-pass) names accepted by
 #: :func:`repro.comm.passes.make_schedule` — ``round_robin`` is today's
-#: lowering order (identity pass), ``auto`` model-scores every candidate
-#: order and picks the winner before compiling (DESIGN.md §2.2).
-SCHEDULE_NAMES = ("round_robin", "depth_first", "critical_path", "auto")
+#: lowering order (identity pass), ``overlap`` list-schedules over the
+#: resource-lane makespan model to hide copies behind compute, ``auto``
+#: model-scores every candidate order and picks the winner before
+#: compiling (DESIGN.md §2.2).
+SCHEDULE_NAMES = ("round_robin", "depth_first", "critical_path",
+                  "overlap", "auto")
 
 #: Validation modes for compiled dispatch (DESIGN.md §4.5): ``miss``
 #: validates a plan/graph only when it is (re)built — the fast path trusts

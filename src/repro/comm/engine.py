@@ -65,7 +65,7 @@ from repro.comm.capture import CapturedStep, StepCapture, emit_step, lower_step
 from repro.compat import shard_map
 from repro.comm.config import VALIDATE_MODES, _env_bool
 from repro.comm.graph import ComputeNode, TransferGraph, lower
-from repro.comm.passes import GraphPass, apply_schedule
+from repro.comm.passes import AutoSchedule, GraphPass, apply_schedule
 from repro.comm.plan import TransferGroup, TransferPlan, TransferRequest
 from repro.comm.planner import PathPlanner
 from repro.comm.telemetry import (DispatchSample, StageTimings,
@@ -999,6 +999,9 @@ class MultiPathTransfer:
                       "compute_nodes_compiled":
                           self.compute_nodes_compiled},
             "schedules": dict(self.schedule_counts),
+            # auto's candidate-score memo (keyed on digest + topology
+            # epoch): hits are selections answered without re-scoring.
+            "schedule_scores": AutoSchedule.score_stats(reset=reset),
         }
         if self.telemetry is not None:
             out["telemetry"] = self.telemetry.stats()

@@ -57,17 +57,27 @@ Shipped schedulers (:data:`repro.comm.config.SCHEDULE_NAMES`):
   node with the most downstream work. Reorders serialization edges to
   shorten the DAG's modeled critical path (remainder chunks really are
   bigger, so order matters on staged paths).
+* ``overlap`` — list scheduling over the resource-lane makespan model
+  (:func:`repro.core.pipelining.lane_intervals_s`): link-exclusive
+  transfer lanes plus one SPMD compute lane, copies issued as early as
+  their deps allow so they run *behind* compute on the modeled
+  timeline. Falls back to the input order whenever its greedy order
+  does not model strictly faster (list-scheduling anomaly guard), so
+  ``overlap(g)`` never models worse than ``g``.
 * ``auto`` — scores every candidate order with
   :func:`~repro.core.pipelining.scheduled_time_s` and picks the winner
   before compiling; ties (and any tie with the baseline) resolve to
   ``round_robin``, so ``auto`` never selects a schedule the model scores
-  worse than ``round_robin``.
+  worse than ``round_robin``. Candidate scores are memoized on
+  ``(graph digest, topology epoch)`` — the same keying the engine's
+  schedule memo uses — surfaced as the ``schedule_scores`` stat.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+from collections import OrderedDict
 from typing import Iterable, Protocol, Sequence, runtime_checkable
 
 from repro.comm.config import SCHEDULE_NAMES
@@ -237,6 +247,17 @@ def _serialization_slot(nd) -> tuple:
     return (nd.msg_idx, nd.path_idx, nd.window, nd.hop_idx)
 
 
+def _lane_key(nd) -> tuple:
+    """The resource lane a node occupies in the lane makespan model: its
+    directional link for copies (link-exclusive transfer engine), the
+    shared SPMD compute lane for kernels (mirrors
+    :func:`repro.core.pipelining.lane_intervals_s` — the ``overlap``
+    greedy and the ``auto`` scorer must price the same objective)."""
+    if isinstance(nd, ComputeNode):
+        return ("compute",)
+    return ("link",) + tuple(nd.link)
+
+
 def _df_key(n, i: int) -> tuple:
     """Depth-first priority: drain each path's chunk chain; compute
     nodes follow ready copies in original index order (same §2.2
@@ -390,33 +411,168 @@ class CriticalPathSchedule:
         return reindex(graph, order)
 
 
+class OverlapSchedule(CriticalPathSchedule):
+    """List scheduling over the resource-lane makespan model: hide
+    copies behind compute (§2.2 reorder-only pass, no ``allows_rewrite``).
+
+    Simulates the lane model of
+    :func:`repro.core.pipelining.lane_intervals_s` — each directional
+    link an exclusive FIFO transfer lane, all kernels one SPMD compute
+    lane, per-node launch cost charged to the executing lane — and
+    repeatedly dispatches the ready node with the earliest feasible
+    start (ties to earliest finish, then most downstream work). Copies
+    whose deps are satisfied are therefore issued *before* later compute
+    and make progress behind it on the modeled timeline. If the greedy
+    order does not model strictly faster than the input order (list-
+    scheduling anomalies are real), the input order is returned
+    unchanged — ``overlap`` never models worse than its input, which is
+    what keeps ``auto`` never-worse-than-``round_robin`` under the lane
+    objective. Deterministic; preserves the node multiset, edge set, and
+    §4.5 invariants (enforced by ``check_pass``). Construct with a
+    :class:`~repro.core.topology.Topology` for §4.4-priced (and
+    calibrated, §4.4c/§4.4d) durations; without one, weights degrade to
+    raw bytes / declared compute cost.
+    """
+
+    name = "overlap"
+
+    def _lane_makespan(self, graph: TransferGraph, order: Sequence[int],
+                       weight: Sequence[float], issue_s: float,
+                       preds: dict[int, list[int]]) -> float:
+        """Lane-model makespan of dispatching ``graph`` in ``order``
+        (must be topological); mirrors
+        :func:`repro.core.pipelining.lane_intervals_s` so the pass
+        optimizes exactly the objective ``auto`` scores it on."""
+        lane_free: dict[tuple, float] = {}
+        finish: dict[int, float] = {}
+        makespan = 0.0
+        for old in order:
+            lane = _lane_key(graph.nodes[old])
+            start = max((finish[p] for p in preds.get(old, ())),
+                        default=0.0)
+            start = max(start, lane_free.get(lane, 0.0))
+            finish[old] = lane_free[lane] = start + weight[old] + issue_s
+            makespan = max(makespan, finish[old])
+        return makespan
+
+    def __call__(self, graph: TransferGraph) -> TransferGraph:
+        """Renumber into the greedy lane-model order when it models
+        strictly faster; identity otherwise (§2.2 contract either way)."""
+        n = graph.num_nodes
+        if n == 0:
+            return graph
+        weight, issue_s = self._weights(graph)
+        succs: dict[int, list[int]] = {}
+        indeg = [0] * n
+        preds: dict[int, list[int]] = {}
+        for e in graph.edges:
+            succs.setdefault(e.src, []).append(e.dst)
+            preds.setdefault(e.dst, []).append(e.src)
+            indeg[e.dst] += 1
+        down = list(weight)
+        for i in reversed(graph.topological_order()):
+            for j in succs.get(i, ()):
+                down[i] = max(down[i], weight[i] + down[j])
+        canonical = {
+            i: ((nd.window, 1, i, 0, 0, 0)
+                if isinstance(nd, ComputeNode) else
+                (nd.window, 0, nd.msg_idx, nd.chunk_idx, nd.path_idx,
+                 nd.hop_idx))
+            for i, nd in enumerate(graph.nodes)}
+        lane_free: dict[tuple, float] = {}
+        finish: dict[int, float] = {}
+        ready = {i for i in range(n) if indeg[i] == 0}
+        order: list[int] = []
+        while ready:
+            best, best_key = None, None
+            for i in ready:
+                start = max((finish[p] for p in preds.get(i, ())),
+                            default=0.0)
+                start = max(start,
+                            lane_free.get(_lane_key(graph.nodes[i]), 0.0))
+                key = (start, start + weight[i], -down[i], canonical[i])
+                if best_key is None or key < best_key:
+                    best, best_key = i, key
+            i = best
+            lane = _lane_key(graph.nodes[i])
+            start = max((finish[p] for p in preds.get(i, ())), default=0.0)
+            start = max(start, lane_free.get(lane, 0.0))
+            finish[i] = lane_free[lane] = start + weight[i] + issue_s
+            order.append(i)
+            ready.remove(i)
+            for j in succs.get(i, ()):
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    ready.add(j)
+        greedy = self._lane_makespan(graph, order, weight, issue_s, preds)
+        identity = self._lane_makespan(graph, range(n), weight, issue_s,
+                                       preds)
+        if greedy >= identity:          # anomaly guard: never model worse
+            return graph
+        return reindex(graph, order)
+
+
 class AutoSchedule:
     """Score every candidate dispatch order with the scheduled-DAG model
     and pick the winner BEFORE compiling.
 
     Candidates are the shipped concrete schedulers (``round_robin``
-    first); :func:`repro.core.pipelining.scheduled_time_s` arbitrates,
-    and a strict improvement is required to displace an earlier
-    candidate — so ``auto`` can never select a schedule the model scores
-    worse than ``round_robin``. Requires a
-    :class:`~repro.core.topology.Topology` (the model needs link
-    bandwidths). The §4.5 invariants hold because every candidate is a
-    contract-checked pass output.
+    first, ``overlap`` last); :func:`repro.core.pipelining.scheduled_time_s`
+    arbitrates — the serialized chain on pure-comm graphs, the lane
+    makespan on heterogeneous ones — and a strict improvement is
+    required to displace an earlier candidate, so ``auto`` can never
+    select a schedule the model scores worse than ``round_robin``.
+    Requires a :class:`~repro.core.topology.Topology` (the model needs
+    link bandwidths). The §4.5 invariants hold because every candidate
+    is a contract-checked pass output. Candidate scores are memoized on
+    ``(graph digest, topology epoch)`` — any topology mutation or
+    calibration (re)attachment bumps the epoch and re-scores — with
+    hit/miss counters surfaced via :meth:`score_stats` (the engine's
+    ``schedule_scores`` stat).
     """
 
     name = "auto"
+
+    #: Class-level score memo shared by every instance (mirrors the
+    #: engine's schedule memo keying); bounded LRU.
+    _memo: OrderedDict = OrderedDict()
+    _memo_capacity = 256
+    _stats = {"hits": 0, "misses": 0}
 
     def __init__(self, topology: Topology):
         self.topology = topology
         self.candidates: tuple[GraphPass, ...] = (
             RoundRobinSchedule(), DepthFirstSchedule(),
-            CriticalPathSchedule(topology))
+            CriticalPathSchedule(topology), OverlapSchedule(topology))
+
+    @classmethod
+    def score_stats(cls, reset: bool = False) -> dict[str, int]:
+        """Hit/miss counters of the candidate-score memo (the
+        ``schedule_scores`` stat); measurements only — never feed cache
+        keys. ``reset=True`` zeroes them after reading."""
+        out = dict(cls._stats)
+        if reset:
+            cls._stats.update(hits=0, misses=0)
+        return out
 
     def select(self, graph: TransferGraph
                ) -> tuple[str, TransferGraph, dict[str, float]]:
-        """(winner name, scheduled graph, per-candidate modeled seconds)."""
+        """(winner name, scheduled graph, per-candidate modeled seconds).
+
+        Memoized on ``(graph.digest(), topology.epoch)`` — re-scoring
+        every candidate on every miss is pure waste when neither the
+        graph content nor the model terms changed."""
         from repro.core.pipelining import scheduled_time_s
 
+        epoch = getattr(self.topology, "epoch", None)
+        key = (graph.digest(), epoch) if epoch is not None else None
+        if key is not None:
+            hit = AutoSchedule._memo.get(key)
+            if hit is not None:
+                AutoSchedule._memo.move_to_end(key)
+                AutoSchedule._stats["hits"] += 1
+                return hit
+            AutoSchedule._stats["misses"] += 1
         scores: dict[str, float] = {}
         best_name, best_graph, best_t = None, None, float("inf")
         for cand in self.candidates:
@@ -427,9 +583,16 @@ class AutoSchedule:
             if t < best_t:                      # strict: ties keep earlier
                 best_name, best_graph, best_t = cand.name, scheduled, t
         assert best_graph is not None
-        return best_name, best_graph, scores
+        result = (best_name, best_graph, scores)
+        if key is not None:
+            AutoSchedule._memo[key] = result
+            while len(AutoSchedule._memo) > AutoSchedule._memo_capacity:
+                AutoSchedule._memo.popitem(last=False)
+        return result
 
     def __call__(self, graph: TransferGraph) -> TransferGraph:
+        """Apply the winning candidate (see :meth:`select`); the result
+        is a contract-checked §2.2 pass output."""
         return self.select(graph)[1]
 
 
@@ -446,6 +609,8 @@ def make_schedule(name: str, topology: Topology | None = None) -> GraphPass:
         return DepthFirstSchedule()
     if name == CriticalPathSchedule.name:
         return CriticalPathSchedule(topology)
+    if name == OverlapSchedule.name:
+        return OverlapSchedule(topology)
     if name == AutoSchedule.name:
         if topology is None:
             raise ValueError("schedule 'auto' needs a topology to score "

@@ -430,9 +430,11 @@ class CommSession:
         ``persist=True`` saves under ``config.profile_dir`` (a string
         persists under that directory instead); ``fit_kwargs`` forward to
         :class:`CalibrationFitter` (min_samples / warmup / decay /
-        max_ratio — the robustness gates). Raises ``ValueError`` when no
-        samples were recorded (enable ``REPRO_MP_TELEMETRY`` and run
-        traffic first).
+        max_ratio — the robustness gates). The recorder's per-kernel
+        execute channel is forwarded too, so a session that timed
+        captured kernels gets a fitted per-kernel compute term. Raises
+        ``ValueError`` when no samples were recorded (enable
+        ``REPRO_MP_TELEMETRY`` and run traffic first).
         """
         samples = self.telemetry.samples()
         if not samples:
@@ -444,7 +446,8 @@ class CommSession:
             fitter = CalibrationFitter(self.topology, **fit_kwargs)
         elif fit_kwargs:
             raise ValueError("pass fit_kwargs or a fitter, not both")
-        profile = fitter.fit(samples)
+        profile = fitter.fit(samples,
+                             kernels=self.telemetry.kernel_samples())
         if attach:
             self.topology.set_calibration(profile)
         if persist:
@@ -543,11 +546,35 @@ class CommSession:
                 "effective_gbps": pl.effective_bandwidth_gbps(
                     plan, self.topology),
             },
+            # Lane-model view (§2.2): how the scheduled order prices
+            # under the resource-lane simulation vs the serialized
+            # chain, and how many modeled copy seconds hide behind
+            # compute. Zero hidden time on a pure-comm describe.
+            "overlap": self._overlap_info(graph),
             # Measured feedback (§4.4c): which terms the model sections
             # above actually consumed, plus modeled-vs-measured residuals
             # over the recorded samples so drift is visible.
             "calibration": self._calibration_info(),
         }
+
+    def _overlap_info(self, graph) -> dict:
+        """The ``describe()['overlap']`` section: lane vs serialized
+        makespans of the scheduled graph plus modeled hidden-copy
+        seconds and the fraction of total copy time hidden — the
+        §2.2 overlap-visibility contract."""
+        from repro.core import pipelining as pl
+        lane = pl.scheduled_time_s(graph, self.topology, mode="lanes")
+        serialized = pl.scheduled_time_s(graph, self.topology,
+                                         mode="serialized")
+        hidden = pl.hidden_copy_time_s(graph, self.topology)
+        weights = pl.graph_node_weights_s(graph, self.topology)
+        copy_s = sum(w for nd, w in zip(graph.nodes, weights)
+                     if not hasattr(nd, "kernel"))
+        return {"lane_makespan_s": lane,
+                "serialized_makespan_s": serialized,
+                "hidden_copy_s": hidden,
+                "hidden_copy_fraction": (hidden / copy_s
+                                         if copy_s > 0 else 0.0)}
 
     def _calibration_info(self) -> dict:
         """The ``describe()['calibration']`` section: live-profile
@@ -576,7 +603,11 @@ class CommSession:
         default scheduler and ``schedules`` counts dispatch/compile
         calls per concrete schedule resolved — ``auto`` counts as
         whichever candidate it picked, and cache-hit launches count too
-        (unlike ``graph``, which totals cache misses only). ``fastpath``
+        (unlike ``graph``, which totals cache misses only).
+        ``schedule_scores`` reports ``auto``'s candidate-score memo
+        (hits / misses keyed on graph digest + topology epoch) —
+        repeat selections of an unchanged graph are answered without
+        re-scoring every candidate. ``fastpath``
         is the steady-state dispatch front cache (DESIGN.md §2.3):
         hits / misses / epoch ``invalidations`` plus ``staging_ns``, the
         cumulative host-side staging-dispatch time (staging *execution*
@@ -597,6 +628,7 @@ class CommSession:
             # sections, derived from an empty cache rather than spelled
             # out by hand.
             from repro.comm.cache import FastPathCache
+            from repro.comm.passes import AutoSchedule
             es = {"dispatches": 0,
                   "cache": self.cache.stats(reset=reset),
                   "fastpath": {"enabled": self.config.fastpath,
@@ -605,7 +637,8 @@ class CommSession:
                   "graph": {"nodes_compiled": 0, "edges_compiled": 0,
                             "copy_nodes_compiled": 0,
                             "compute_nodes_compiled": 0},
-                  "schedules": {}}
+                  "schedules": {},
+                  "schedule_scores": AutoSchedule.score_stats(reset=reset)}
         return {
             "cache": es["cache"],
             "dispatches": es["dispatches"],
@@ -614,6 +647,7 @@ class CommSession:
             "policy": self.policy.name,
             "schedule": self.config.schedule,
             "schedules": es["schedules"],
+            "schedule_scores": es["schedule_scores"],
             "topology": self.topology.name,
             "num_devices": self.topology.num_devices,
             "axis_name": self.axis_name,

@@ -156,6 +156,7 @@ class TimelineRecorder:
         self.enabled = (_env_bool(TELEMETRY_ENV, False)
                         if enabled is None else bool(enabled))
         self._ring: deque[DispatchSample] = deque(maxlen=capacity)
+        self._kernels: dict[str, deque[float]] = {}
         self.recorded = 0
         self.dropped = 0
 
@@ -170,6 +171,46 @@ class TimelineRecorder:
         self._ring.append(sample)
         self.recorded += 1
 
+    def record_kernel(self, name: str, execute_ns: float) -> None:
+        """Append one per-kernel execute measurement (no-op while
+        disabled — the same zero-cost-off contract as :meth:`record`).
+        Measurements accumulate per kernel name in bounded rings
+        (``capacity`` each, oldest dropped) so the calibration fitter
+        can replace the ``COMPUTE_GFLOPS`` guess with a fitted
+        per-kernel compute term. Non-positive durations are ignored —
+        a clock misread must never poison the fit."""
+        if not self.enabled:
+            return
+        if execute_ns <= 0:
+            return
+        ring = self._kernels.get(name)
+        if ring is None:
+            ring = self._kernels[name] = deque(maxlen=self.capacity)
+        ring.append(float(execute_ns))
+
+    def kernel_samples(self) -> dict[str, tuple[float, ...]]:
+        """Snapshot ``{kernel name: (execute_ns, ...)}`` oldest first —
+        the evidence channel ``CalibrationFitter.fit(kernels=...)``
+        consumes. Deliberately separate from :meth:`samples`: kernel
+        timings are compute-side measurements and must never pool with
+        transfer-stage :class:`DispatchSample` records (§4.4c)."""
+        return {name: tuple(ring) for name, ring in self._kernels.items()
+                if ring}
+
+    def kernel_cost_ns(self, name: str) -> float:
+        """Median recorded execute time for ``name`` in ns, or ``0.0``
+        when nothing was recorded — the value capture adopters stamp
+        into ``ComputeNode.cost_ns`` so the lane model prices measured
+        rather than guessed kernel durations."""
+        ring = self._kernels.get(name)
+        if not ring:
+            return 0.0
+        ordered = sorted(ring)
+        mid = len(ordered) // 2
+        if len(ordered) % 2:
+            return ordered[mid]
+        return (ordered[mid - 1] + ordered[mid]) / 2.0
+
     def samples(self) -> tuple[DispatchSample, ...]:
         """Snapshot of retained samples, oldest first (chronological —
         the order the fitter's exponential-decay update contract
@@ -178,8 +219,10 @@ class TimelineRecorder:
 
     def clear(self) -> None:
         """Drop retained samples and zero the counters (the windowed
-        ``stats(reset=True)`` semantics; capacity/enabled preserved)."""
+        ``stats(reset=True)`` semantics; capacity/enabled preserved).
+        Per-kernel execute rings are cleared too."""
         self._ring.clear()
+        self._kernels.clear()
         self.recorded = 0
         self.dropped = 0
 

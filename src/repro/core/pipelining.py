@@ -77,14 +77,23 @@ COMPUTE_GFLOPS = 50.0               # declared-FLOP pricing rate for
                                     # ComputeNodes without a measured cost
 
 
-def compute_time_s(node) -> float:
+def compute_time_s(node, topo: "Topology | None" = None) -> float:
     """Modeled seconds for one :class:`~repro.comm.graph.ComputeNode`.
 
-    Measured ``cost_ns`` wins when non-zero (the calibration loop can
-    stamp it); otherwise declared ``flops`` are priced at the nominal
-    :data:`COMPUTE_GFLOPS` rate. Shared by the critical-path weights and
-    the scheduled-DAG arbiter so ``auto`` stays honest about compute.
+    Pricing precedence (DESIGN §4.4d): a *fitted* per-kernel term from
+    the topology's live calibration profile wins (keyed by the node's
+    ``kernel`` name — measured execute aggregation, see
+    ``TimelineRecorder.record_kernel``), then a stamped ``cost_ns``,
+    then declared ``flops`` at the nominal :data:`COMPUTE_GFLOPS` rate.
+    Shared by the critical-path weights, the lane simulation, and the
+    scheduled-DAG arbiter so ``auto`` stays honest about compute.
     """
+    prof = getattr(topo, "calibration", None)
+    fitted = getattr(prof, "kernel_cost_ns", None)
+    if fitted:
+        ns = fitted.get(node.kernel)
+        if ns:
+            return ns / 1e9
     if node.cost_ns:
         return node.cost_ns / 1e9
     return node.flops / (COMPUTE_GFLOPS * 1e9)
@@ -454,7 +463,7 @@ def graph_node_weights_s(graph: "TransferGraph", topo: Topology
     weight = []
     for node in graph.nodes:
         if hasattr(node, "kernel"):
-            weight.append(compute_time_s(node))
+            weight.append(compute_time_s(node, topo))
             continue
         link = topo.link(*node.link)
         if link is None:
@@ -467,27 +476,97 @@ def graph_node_weights_s(graph: "TransferGraph", topo: Topology
     return weight
 
 
+def _graph_base_s(graph: "TransferGraph", launch: LaunchModel, *,
+                  compiled_plan: bool, first_iteration: bool) -> float:
+    """Fixed per-dispatch cost shared by both scheduling models."""
+    n = graph.num_nodes
+    if compiled_plan:
+        base = launch.graph_launch_base_ns
+        if first_iteration:
+            base += (launch.graph_instantiate_base_ns
+                     + n * launch.graph_instantiate_per_node_ns)
+    else:
+        num_paths = len({(nd.msg_idx, nd.path_idx) for nd in graph.nodes
+                         if not hasattr(nd, "kernel")})
+        base = num_paths * launch.sync_ns_per_path
+    return base / 1e9
+
+
+def _lane_of(node) -> tuple:
+    """Resource lane a node occupies: its directional link for a copy
+    (link-exclusive transfer engine), the shared SPMD compute lane for a
+    kernel (every device's compute lane advances in lockstep)."""
+    if hasattr(node, "kernel"):
+        return ("compute",)
+    return ("link",) + tuple(node.link)
+
+
+def lane_intervals_s(graph: "TransferGraph", topo: Topology, *,
+                     compiled_plan: bool = True
+                     ) -> list[tuple[float, float]]:
+    """Per-node ``(start, finish)`` seconds under the resource-lane
+    simulation (no fixed base cost included).
+
+    The lane model: each (src, dst) directional link is an exclusive
+    transfer lane, all compute shares one SPMD compute lane, a node
+    occupies its lane for its §4.4-priced duration plus the per-node
+    launch cost, lanes drain in dispatch (node-index) order — CUDA-
+    stream-style head-of-line FIFO, which is what makes *order* matter
+    to a reorder-only pass — and stored hop/window/buffer edges gate
+    start times. Makespan replaces the serialized issue chain.
+    """
+    n = graph.num_nodes
+    weight = graph_node_weights_s(graph, topo)
+    launch = launch_model_for(topo)
+    per_node_s = (launch.graph_launch_per_node_ns if compiled_plan
+                  else launch.launch_ns_per_node) / 1e9
+    preds: dict[int, list[int]] = defaultdict(list)
+    for e in graph.edges:
+        preds[e.dst].append(e.src)
+    lane_free: dict[tuple, float] = defaultdict(float)
+    out: list[tuple[float, float]] = [(0.0, 0.0)] * n
+    for idx in range(n):          # dispatch order IS lane-enqueue order
+        lane = _lane_of(graph.nodes[idx])
+        start = lane_free[lane]
+        for p in preds[idx]:
+            start = max(start, out[p][1])
+        finish = start + weight[idx] + per_node_s
+        lane_free[lane] = finish
+        out[idx] = (start, finish)
+    return out
+
+
 def scheduled_time_s(graph: "TransferGraph", topo: Topology, *,
                      compiled_plan: bool = True,
-                     first_iteration: bool = False) -> float:
+                     first_iteration: bool = False,
+                     mode: str | None = None) -> float:
     """Modeled end-to-end time of a *scheduled* transfer graph (§2.2).
 
     Unlike the closed-form :func:`wire_time_s` (which is schedule-blind —
     it reduces the DAG to per-path chunk counts), this is an exact
-    weighted longest-path evaluation over the scheduled DAG, which is how
-    a chunk-interleaving pass becomes visible to the model:
+    evaluation over the scheduled DAG, which is how a chunk-interleaving
+    pass becomes visible to the model. Two objectives share the entry
+    point, selected by ``mode``:
 
-    * **node weight** — the node's actual chunk bytes over its link's
-      contended bandwidth (remainder chunks really are bigger, which is
-      what makes chunk *order* matter on staged paths),
-    * **edges** — stored hop + window edges, plus the derived per-link
-      serialization edges, which follow dispatch (node-index) order
-      (:meth:`TransferGraph.serialization_edges`),
-    * **issue chain** — node *i*'s copy cannot start before its launch
-      slot ``i × per-node launch cost`` (the paper's point that dispatch
-      order is a property of the captured graph: a depth-first order
-      delays the last path's first chunk by every earlier path's issue
-      slots, a round-robin order staggers them evenly).
+    * ``"serialized"`` — the degenerate single-lane model (the historic
+      objective): stored hop + window edges, the derived per-slot
+      serialization edges, and a global issue chain (node *i* cannot
+      start before ``i × per-node launch cost``). Pure-comm digests and
+      arbitration are scored exactly as before.
+    * ``"lanes"`` — the resource-lane makespan (:func:`lane_intervals_s`):
+      link-exclusive transfer lanes plus one SPMD compute lane, per-node
+      launch cost charged to the executing lane instead of a global
+      chain, so copies on independent links make concurrent progress and
+      can *hide* behind compute.
+    * ``None`` (default) — dispatch on graph content: heterogeneous
+      graphs (any ComputeNode) are priced by lanes, pure-comm graphs by
+      the serialized chain. The default therefore *reduces* to the
+      serialized chain on every pure-comm graph — numerically identical
+      scores, digest-stable arbitration — which is the invariant the
+      PR 5/6 acceptance gates rely on. (Explicit ``mode="lanes"`` on a
+      single-path pure-comm chain differs from serialized by exactly
+      ``num_nodes × per-node launch``: the lane model charges issue
+      cost into lane occupancy rather than a global chain.)
 
     Used by the ``auto`` scheduler and ``session.describe`` to score
     candidate dispatch orders of the SAME lowering against each other;
@@ -497,8 +576,19 @@ def scheduled_time_s(graph: "TransferGraph", topo: Topology, *,
     n = graph.num_nodes
     if n == 0:
         return 0.0
-    weight = graph_node_weights_s(graph, topo)
+    if mode is None:
+        mode = "lanes" if graph.num_compute_nodes else "serialized"
+    if mode not in ("serialized", "lanes"):
+        raise ValueError(f"unknown scheduling model {mode!r}; expected "
+                         "'serialized', 'lanes', or None")
     launch = launch_model_for(topo)
+    base = _graph_base_s(graph, launch, compiled_plan=compiled_plan,
+                         first_iteration=first_iteration)
+    if mode == "lanes":
+        intervals = lane_intervals_s(graph, topo,
+                                     compiled_plan=compiled_plan)
+        return max(f for _, f in intervals) + base
+    weight = graph_node_weights_s(graph, topo)
     preds: dict[int, list[int]] = defaultdict(list)
     for e in graph.edges:
         preds[e.dst].append(e.src)
@@ -512,16 +602,37 @@ def scheduled_time_s(graph: "TransferGraph", topo: Topology, *,
         for p in preds[idx]:
             start = max(start, finish[p])
         finish[idx] = start + weight[idx]
-    num_paths = len({(nd.msg_idx, nd.path_idx) for nd in graph.nodes
-                     if not hasattr(nd, "kernel")})
-    if compiled_plan:
-        base = launch.graph_launch_base_ns
-        if first_iteration:
-            base += (launch.graph_instantiate_base_ns
-                     + n * launch.graph_instantiate_per_node_ns)
-    else:
-        base = num_paths * launch.sync_ns_per_path
-    return max(finish) + base / 1e9
+    return max(finish) + base
+
+
+def hidden_copy_time_s(graph: "TransferGraph", topo: Topology, *,
+                       compiled_plan: bool = True) -> float:
+    """Modeled copy seconds that run *behind* compute on the lane
+    timeline: Σ over copy nodes of the overlap between the copy's
+    ``(start, finish)`` interval and the union of compute-lane busy
+    intervals (:func:`lane_intervals_s`). Zero on pure-comm graphs.
+
+    This is the quantity the ``overlap`` scheduler exists to maximize
+    and what ``session.describe()["overlap"]`` reports.
+    """
+    if not graph.num_compute_nodes or not graph.num_copy_nodes:
+        return 0.0
+    intervals = lane_intervals_s(graph, topo, compiled_plan=compiled_plan)
+    busy = sorted(iv for iv, nd in zip(intervals, graph.nodes)
+                  if hasattr(nd, "kernel"))
+    merged: list[list[float]] = []
+    for s, f in busy:
+        if merged and s <= merged[-1][1]:
+            merged[-1][1] = max(merged[-1][1], f)
+        else:
+            merged.append([s, f])
+    hidden = 0.0
+    for (s, f), nd in zip(intervals, graph.nodes):
+        if hasattr(nd, "kernel"):
+            continue
+        for bs, bf in merged:
+            hidden += max(0.0, min(f, bf) - max(s, bs))
+    return hidden
 
 
 def effective_bandwidth_gbps(plan: TransferPlan, topo: Topology, *,

@@ -47,3 +47,35 @@ def multipath_dma_transfer(x: jax.Array, plan: TransferPlan,
                            out_specs=P(AXIS), check_vma=False))
     x = jax.device_put(x, NamedSharding(mesh, P(AXIS)))
     return fn(x)
+
+
+def captured_multipath_dma(cap, x, plan: TransferPlan, num_devices: int, *,
+                           name: str = "multipath_dma",
+                           axis_name: str = AXIS, telemetry=None,
+                           interpret: bool | None = None):
+    """Record the kernel-backed multipath DMA on a ``session.capture``
+    step.
+
+    ``x`` is a capture ref with local shape ``(nelems,)``; returns the
+    same-shape ref with ``y[dst] = x[src]`` (identity elsewhere),
+    executing ``plan``'s copy schedule as Pallas remote DMAs inside the
+    captured program. The result spec is declared explicitly (``out=``)
+    because the kernel's axis collectives cannot be abstractly
+    evaluated outside the mesh. ``cost_ns`` is stamped from
+    ``telemetry``'s recorded median for ``name`` when a recorder is
+    passed, so the lane model prices the DMA kernel's measured
+    duration.
+    """
+    if interpret is None:
+        interpret = _is_cpu()
+    from repro.comm.capture import BufferSpec
+    spec = cap.buffers[cap._resolve(x)]
+    (nelems,) = spec.shape
+    inner = build_multipath_dma(plan, nelems, jnp.dtype(spec.dtype),
+                                num_devices, axis_name=axis_name,
+                                interpret=interpret)
+    cost = int(telemetry.kernel_cost_ns(name)) if telemetry is not None \
+        else 0
+    return cap.kernel(inner, x, name=name,
+                      out=BufferSpec((nelems,), spec.dtype),
+                      cost_ns=cost)

@@ -49,6 +49,69 @@ def make_serve_step(cfg: ArchConfig, spec: tfm.CacheSpec) -> Callable:
     return serve_step
 
 
+def make_captured_decode_step(comm: "CommSession", *, batch: int,
+                              heads: int, kv_len: int, head_dim: int,
+                              kv_chunk: int, src: int, dst: int,
+                              dtype=jnp.float32,
+                              schedule: str | None = None,
+                              max_paths: int | None = None,
+                              num_chunks: int | None = None) -> Callable:
+    """Capture one decode step that migrates a KV chunk *behind* the
+    attention kernel — the flagship overlap adopter (mirrors
+    :func:`repro.training.train_step.make_captured_dp_train_step`).
+
+    ONE heterogeneous graph per call: a flash-attention compute node on
+    the local ``(batch, heads, kv_len, head_dim)`` q/k/v shards, and —
+    on an *independent* dataflow path — a ``kv_chunk``-element KV
+    migration ``src → dst`` (stage kernel → multipath exchange →
+    install kernel), so the lane model can run the migration copies
+    concurrently with attention and the ``overlap`` scheduler has real
+    copy time to hide. The attention node's ``cost_ns`` is stamped from
+    the session's telemetry recorder when it holds measurements for
+    ``"flash_attention"`` (see
+    :meth:`~repro.comm.telemetry.TimelineRecorder.record_kernel`).
+
+    Returns ``step(q, k, v, kv) -> (attn, new_kv)`` over
+    ``(num_devices, *local)`` arrays; every call is ONE engine dispatch.
+    ``new_kv`` equals ``kv`` everywhere except device ``dst``, which
+    receives device ``src``'s chunk.
+    """
+    from jax import lax
+
+    from repro.comm.capture import BufferSpec
+    from repro.kernels.flash_attention.ops import captured_flash_attention
+
+    ax = comm.axis_name
+    n = comm.engine.num_devices
+    if not 0 <= src < n or not 0 <= dst < n or src == dst:
+        raise ValueError(f"need distinct src/dst in [0, {n}), got "
+                         f"{src}/{dst}")
+
+    def build(cap):
+        q = cap.input((batch, heads, kv_len, head_dim), dtype)
+        k = cap.input((batch, heads, kv_len, head_dim), dtype)
+        v = cap.input((batch, heads, kv_len, head_dim), dtype)
+        kv = cap.input((kv_chunk,), dtype)
+        attn = captured_flash_attention(cap, q, k, v,
+                                        telemetry=comm.telemetry)
+        staged = cap.kernel(lambda c: c * jnp.ones((), c.dtype), kv,
+                            name="kv_stage", flops=kv_chunk)
+        (moved,) = cap.exchange([(staged, src, dst)], max_paths=max_paths,
+                                num_chunks=num_chunks)
+
+        def install(cur, mig):
+            i = lax.axis_index(ax)
+            return jnp.where(i == dst, mig, cur)
+
+        new_kv = cap.kernel(install, kv, moved, name="kv_install",
+                            out=BufferSpec((kv_chunk,),
+                                           str(jnp.dtype(dtype))),
+                            flops=kv_chunk)
+        return attn, new_kv
+
+    return comm.capture(build, schedule=schedule)
+
+
 @dataclasses.dataclass
 class Request:
     prompt: list[int]

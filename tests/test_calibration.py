@@ -308,3 +308,70 @@ def test_session_warns_and_runs_on_corrupt_profile(tmp_path):
     assert sess.topology.calibration is None       # degraded, not dead
     jax.block_until_ready(
         sess.send(jnp.arange(256, dtype=jnp.float32), 0, 1))
+
+
+# ------------------- per-kernel compute term (§4.4d) ------------------------
+
+def test_fitter_kernel_channel_gates_and_fits(topo):
+    """The kernel channel is warmup-robust and sample-gated exactly like
+    the link channel; the fitted term is the post-warmup median."""
+    fitter = CalibrationFitter(topo, min_samples=3, warmup=1)
+    samples = [_sample(_direct_routes()) for _ in range(6)]
+    kernels = {"attn": (999_999.0, 100.0, 300.0, 200.0),  # warmup dropped
+               "sparse": (10.0, 20.0),                    # gated: too few
+               "zeros": (5.0, 0.0, -1.0, 0.0)}            # gated: unusable
+    prof = fitter.fit(samples, kernels=kernels)
+    assert prof.kernel_cost_ns == {"attn": 200.0}
+    assert prof.kernel_samples == {"attn": 3}
+    assert prof.summary()["kernels_fitted"] == 1
+
+
+def test_profile_payload_round_trips_kernels(topo):
+    prof = CalibrationProfile(
+        topology_digest=topo.digest(),
+        kernel_cost_ns={"attn": 123.5}, kernel_samples={"attn": 7})
+    clone = CalibrationProfile.from_payload(prof.to_payload())
+    assert clone.kernel_cost_ns == {"attn": 123.5}
+    assert clone.kernel_samples == {"attn": 7}
+    # payloads written before the kernel channel existed still load
+    payload = prof.to_payload()
+    del payload["kernels"]
+    legacy = CalibrationProfile.from_payload(payload)
+    assert legacy.kernel_cost_ns == {} and legacy.kernel_samples == {}
+
+
+def test_compute_time_precedence(topo):
+    """Fitted per-kernel cost > measured ``cost_ns`` > declared FLOPs —
+    the §4.4d pricing ladder the lane model consumes."""
+    from repro.comm.graph import ComputeNode
+    from repro.core.pipelining import COMPUTE_GFLOPS, compute_time_s
+
+    by_flops = ComputeNode(kernel="attn", window=0, operands=(0,),
+                           results=(1,), flops=5_000_000, cost_ns=0)
+    stamped = dataclasses.replace(by_flops, cost_ns=2_000)
+    assert compute_time_s(by_flops, topo) == pytest.approx(
+        5_000_000 / (COMPUTE_GFLOPS * 1e9))
+    assert compute_time_s(stamped, topo) == pytest.approx(2e-6)
+    topo.set_calibration(CalibrationProfile(
+        topology_digest=topo.digest(),
+        kernel_cost_ns={"attn": 7_000.0}, kernel_samples={"attn": 4}))
+    # the fitted term overrides both declared pricings
+    assert compute_time_s(by_flops, topo) == pytest.approx(7e-6)
+    assert compute_time_s(stamped, topo) == pytest.approx(7e-6)
+    # …but only for kernels the profile actually measured
+    other = dataclasses.replace(stamped, kernel="sweep")
+    assert compute_time_s(other, topo) == pytest.approx(2e-6)
+
+
+def test_session_calibrate_forwards_kernel_channel():
+    """session.calibrate() feeds the recorder's per-kernel execute
+    samples into the fitter alongside the dispatch samples."""
+    sess = _session(telemetry=True)
+    msg = jnp.arange(1 << 12, dtype=jnp.float32)
+    for _ in range(4):
+        jax.block_until_ready(sess.send(msg, 0, 1))
+    for ns in (900.0, 100.0, 200.0, 300.0):
+        sess.telemetry.record_kernel("attn", ns)
+    prof = sess.calibrate(min_samples=2, warmup=1)
+    assert prof.kernel_cost_ns == {"attn": 200.0}
+    assert sess.topology.calibration is prof

@@ -366,7 +366,7 @@ def test_engine_stats_shape(session):
     session.send(jnp.arange(64, dtype=jnp.float32), 0, 1)
     s = session.engine.stats()
     assert set(s) == {"dispatches", "cache", "fastpath", "graph",
-                      "schedules", "telemetry"}
+                      "schedules", "schedule_scores", "telemetry"}
     assert s["telemetry"]["enabled"] is False  # off by default (§4.4c)
     assert {"enabled", "validate", "staging_ns", "hits", "misses",
             "invalidations", "evictions", "size",

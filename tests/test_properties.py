@@ -21,7 +21,8 @@ from repro.comm.passes import apply_schedule, check_pass  # noqa: E402
 from repro.core import (Topology, build_schedule,  # noqa: E402
                         validate_group, validate_plan)
 
-_ALL_SCHEDULES = ("round_robin", "depth_first", "critical_path", "auto")
+_ALL_SCHEDULES = ("round_robin", "depth_first", "critical_path", "overlap",
+                  "auto")
 
 MiB = 1 << 20
 

@@ -179,6 +179,43 @@ def test_stats_reset_rewinds_window_not_build_costs(monkeypatch):
     assert sess.stats()["dispatches"] == 1
 
 
+# ------------------- per-kernel execute channel (§4.4d) ---------------------
+
+def test_record_kernel_noop_while_disabled(monkeypatch):
+    monkeypatch.delenv(TELEMETRY_ENV, raising=False)
+    rec = TimelineRecorder()
+    rec.record_kernel("flash_attention", 1_000.0)
+    assert rec.kernel_samples() == {}
+    assert rec.kernel_cost_ns("flash_attention") == 0.0
+
+
+def test_record_kernel_aggregates_and_bounds():
+    rec = TimelineRecorder(capacity=4, enabled=True)
+    for ns in (100.0, 200.0, 300.0, 400.0, 500.0):
+        rec.record_kernel("attn", ns)
+    rec.record_kernel("sweep", 50.0)
+    # per-kernel ring keeps the newest ``capacity`` samples
+    assert rec.kernel_samples() == {"attn": (200.0, 300.0, 400.0, 500.0),
+                                    "sweep": (50.0,)}
+    assert rec.kernel_cost_ns("attn") == pytest.approx(350.0)  # median
+    assert rec.kernel_cost_ns("sweep") == 50.0
+    assert rec.kernel_cost_ns("unmeasured") == 0.0
+    # dispatch-sample stats() schema is untouched by the kernel channel
+    assert rec.stats() == {"enabled": True, "capacity": 4, "retained": 0,
+                           "recorded": 0, "dropped": 0}
+
+
+def test_record_kernel_ignores_nonpositive_and_clears():
+    rec = TimelineRecorder(capacity=4, enabled=True)
+    rec.record_kernel("attn", 0.0)
+    rec.record_kernel("attn", -5.0)
+    assert rec.kernel_samples() == {}
+    rec.record_kernel("attn", 10.0)
+    rec.clear()
+    assert rec.kernel_samples() == {}
+    assert rec.kernel_cost_ns("attn") == 0.0
+
+
 def test_lifecycle_reset_window_unit():
     from repro.comm.cache import PlanLifecycle
 
