@@ -32,7 +32,8 @@ deprecated shims over this package.
 
 from repro.compat import make_mesh, shard_map  # noqa: F401
 from repro.comm.config import (  # noqa: F401
-    POLICY_NAMES, SCHEDULE_NAMES, VALIDATE_MODES, CommConfig)
+    COLLECTIVE_STRATEGIES, POLICY_NAMES, SCHEDULE_NAMES, VALIDATE_MODES,
+    CommConfig)
 from repro.comm.plan import (  # noqa: F401
     PathAssignment, TransferGroup, TransferPlan, TransferRequest)
 from repro.comm.graph import (  # noqa: F401
@@ -58,8 +59,9 @@ from repro.comm.calibration import (  # noqa: F401
     PROFILE_VERSION, CalibrationFitter, CalibrationProfile,
     modeled_sample_time_s, modeled_vs_measured)
 from repro.comm.collectives import (  # noqa: F401
-    bidir_ring_all_gather, bidir_ring_reduce_scatter, multipath_all_reduce,
-    multipath_all_to_all, psum_via_multipath)
+    bidir_ring_all_gather, bidir_ring_reduce_scatter, modeled_all_reduce_s,
+    multipath_all_reduce, multipath_all_to_all, psum_via_multipath,
+    select_all_reduce_strategy, tier_bandwidths_gbps, two_level_all_reduce)
 from repro.comm.engine import (  # noqa: F401
     AXIS, GroupKey, MultiPathTransfer, group_signature,
     multipath_send_local, plan_signature)

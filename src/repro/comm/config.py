@@ -34,6 +34,9 @@ Environment variables read by :meth:`from_env`:
 * ``REPRO_MP_PROFILE_DIR`` — calibration-profile directory; when set, the
   session loads the profile matching its topology digest on init and
   ``session.calibrate(persist=True)`` writes there
+* ``REPRO_MP_COLLECTIVES`` — all-reduce layout on hierarchical
+  topologies (auto | flat | two_level; DESIGN §3.1 — ``auto`` lets the
+  §4.4 tier model arbitrate, flat is forced on single-island topologies)
 """
 
 from __future__ import annotations
@@ -54,6 +57,11 @@ POLICY_NAMES = ("greedy", "round_robin", "tuner")
 #: compiling (DESIGN.md §2.2).
 SCHEDULE_NAMES = ("round_robin", "depth_first", "critical_path",
                   "overlap", "auto")
+
+#: All-reduce layout names (DESIGN §3.1): ``auto`` lets the §4.4 tier
+#: model pick per topology, ``flat``/``two_level`` force the layout (the
+#: two-level decomposition only differs on >1-island topologies).
+COLLECTIVE_STRATEGIES = ("auto", "flat", "two_level")
 
 #: Validation modes for compiled dispatch (DESIGN.md §4.5): ``miss``
 #: validates a plan/graph only when it is (re)built — the fast path trusts
@@ -100,6 +108,7 @@ class CommConfig:
     telemetry: bool = False
     telemetry_capacity: int = 2048
     profile_dir: str = ""
+    collective_strategy: str = "auto"
 
     def __post_init__(self) -> None:
         if self.max_paths < 1:
@@ -132,6 +141,10 @@ class CommConfig:
         if self.telemetry_capacity < 1:
             raise ValueError("telemetry_capacity must be >= 1, got "
                              f"{self.telemetry_capacity}")
+        if self.collective_strategy not in COLLECTIVE_STRATEGIES:
+            raise ValueError(
+                f"unknown collective strategy {self.collective_strategy!r}; "
+                f"expected one of {COLLECTIVE_STRATEGIES}")
 
     @classmethod
     def from_env(cls, **overrides) -> "CommConfig":
@@ -159,6 +172,8 @@ class CommConfig:
                                         cls.telemetry_capacity),
             profile_dir=os.environ.get("REPRO_MP_PROFILE_DIR",
                                        cls.profile_dir),
+            collective_strategy=os.environ.get("REPRO_MP_COLLECTIVES",
+                                               cls.collective_strategy),
         )
         values.update(overrides)
         return cls(**values)

@@ -26,6 +26,12 @@ overlay when a :class:`~repro.comm.calibration.CalibrationProfile` is
 attached, so the contention derate prices fitted terms, not nominal
 constants. Attaching a profile bumps the topology epoch, which bumps the
 planner :attr:`PathPlanner.epoch`, so no pre-calibration plan survives.
+
+Hierarchy (DESIGN §3.1): on multi-island topologies the planner preserves
+the island-routing invariants — intra-island plans never touch an
+inter-node link, and every cross-island route stages through exactly one
+inter-node hop (fan-out / inter-hop / fan-in), with §4.5 link-disjointness
+claimed across both tiers.
 """
 
 from __future__ import annotations
@@ -58,7 +64,10 @@ class PathPlanner:
     plan-validity token the dispatch fast path
     (:class:`repro.comm.cache.FastPathCache`) stamps its entries with —
     so a policy change always forces a re-plan instead of serving a stale
-    executable.
+    executable. Every plan preserves the §4.5 invariants (disjoint byte
+    coverage, link-disjoint routes), island-aware on hierarchical
+    topologies: intra-island traffic never crosses an inter-node link and
+    cross-island routes carry exactly one inter-node hop each.
     """
 
     def __init__(self, topology: Topology, *,
@@ -119,18 +128,35 @@ class PathPlanner:
 
         Staged routes never reuse a directional link of the direct route, so
         per-link exclusivity (§4.5 contention avoidance) holds by construction.
+
+        Island-aware (DESIGN §3.1): when the topology reports more than
+        one island, intra-island requests only ever stage through
+        same-island devices (and optionally the host) — no intra plan
+        touches an inter-node link — while cross-island requests delegate
+        to the staged enumeration (fan-out to an egress device, exactly
+        one inter-node hop, fan-in), see :meth:`cross_island_routes`.
         """
         if src == dst:
             raise ValueError("src == dst")
         topo = self.topology
         include_host = (self.include_host if include_host is None
                         else include_host)
+        hierarchical = topo.num_islands > 1
+        if hierarchical and topo.node_of(src) != topo.node_of(dst):
+            return self.cross_island_routes(src, dst)
+        island = topo.node_of(src) if hierarchical else None
+
+        def in_island(dev: int) -> bool:
+            return (not hierarchical or dev == HOST
+                    or topo.node_of(dev) == island)
+
         routes: list[Route] = []
         direct = topo.link(src, dst)
         if direct is not None:
             routes.append(Route(src, dst, None, (direct,),
                                 direct.bandwidth_gbps))
-        vias = [d for d in topo.devices() if d not in (src, dst)]
+        vias = [d for d in topo.devices()
+                if d not in (src, dst) and in_island(d)]
         if include_host:
             vias.append(HOST)
         for via in vias:
@@ -147,7 +173,7 @@ class PathPlanner:
             # detours (vs routes found so far) are admitted.
             used = {l for r in routes for l in r.directional_links()}
             for v1 in topo.neighbors(src):
-                if v1 in (dst, src):
+                if v1 in (dst, src) or not in_island(v1):
                     continue
                 if v1 == HOST and not include_host:
                     # neighbors() includes the PCIe host node; a detour
@@ -155,7 +181,7 @@ class PathPlanner:
                     # constraint just like the 2-hop host route does.
                     continue
                 for v2 in topo.neighbors(dst):
-                    if v2 in (src, dst, v1):
+                    if v2 in (src, dst, v1) or not in_island(v2):
                         continue
                     if v2 == HOST and not include_host:
                         continue
@@ -176,6 +202,55 @@ class PathPlanner:
                                    r.via == HOST,
                                    r.num_hops,
                                    -r.bottleneck_gbps))
+        return routes
+
+    def cross_island_routes(self, src: int, dst: int) -> list[Route]:
+        """Staged routes across a node boundary, best-first (§4.4/§3.1).
+
+        One candidate per inter-node link whose endpoints sit in the
+        source/destination islands: an optional intra-island hop to the
+        egress device, the inter-node hop, and an optional intra-island
+        hop from the ingress device — so every route crosses **exactly
+        one** inter-node link (the hierarchical-routing invariant the
+        property suite validates). Candidates are filtered best-first to
+        a link-disjoint set, preserving the §4.5 exclusivity contract
+        policies assume of their route lists.
+        """
+        topo = self.topology
+        src_island, dst_island = topo.node_of(src), topo.node_of(dst)
+        if src_island == dst_island:
+            raise ValueError(f"{src}->{dst} is intra-island "
+                             f"(island {src_island})")
+        cands: list[Route] = []
+        for (a, b) in topo.links:
+            if a == HOST or b == HOST:
+                continue
+            if topo.node_of(a) != src_island or topo.node_of(b) != dst_island:
+                continue
+            hops = []
+            if a != src:
+                fan_out = topo.link(src, a)
+                if fan_out is None:
+                    continue
+                hops.append(fan_out)
+            hops.append(topo.link(a, b))
+            if b != dst:
+                fan_in = topo.link(b, dst)
+                if fan_in is None:
+                    continue
+                hops.append(fan_in)
+            via = a if a != src else (b if b != dst else None)
+            cands.append(Route(src, dst, via, tuple(hops),
+                               min(h.bandwidth_gbps for h in hops)))
+        cands.sort(key=lambda r: (-r.bottleneck_gbps, r.num_hops))
+        routes: list[Route] = []
+        used: set[tuple[int, int]] = set()
+        for route in cands:
+            links = set(route.directional_links())
+            if links & used:
+                continue
+            used |= links
+            routes.append(route)
         return routes
 
     # -- plan construction ---------------------------------------------------

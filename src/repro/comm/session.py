@@ -555,6 +555,10 @@ class CommSession:
             # above actually consumed, plus modeled-vs-measured residuals
             # over the recorded samples so drift is visible.
             "calibration": self._calibration_info(),
+            # Island structure (§3.1): whether this request crosses a
+            # node boundary, and the flat-vs-two-level modeled
+            # all-reduce delta for a payload of this size.
+            "hierarchy": self._hierarchy_info(src, dst, nbytes),
         }
 
     def _overlap_info(self, graph) -> dict:
@@ -575,6 +579,30 @@ class CommSession:
                 "hidden_copy_s": hidden,
                 "hidden_copy_fraction": (hidden / copy_s
                                          if copy_s > 0 else 0.0)}
+
+    def _hierarchy_info(self, src: int, dst: int, nbytes: int) -> dict:
+        """The ``describe()['hierarchy']`` section: island count, the
+        request's island endpoints, and — on >1-island topologies — the
+        §4.4 tier model's flat vs two-level all-reduce times for this
+        payload plus the layout ``config.collective_strategy`` resolves
+        to, so benchmarks report the flat-vs-hierarchical delta from the
+        same model the selection contract uses."""
+        topo = self.topology
+        info: dict = {"islands": topo.num_islands,
+                      "src_island": topo.node_of(src),
+                      "dst_island": topo.node_of(dst),
+                      "cross_island": topo.is_inter_island(src, dst)}
+        if topo.num_islands > 1:
+            chosen, times = coll.select_all_reduce_strategy(
+                topo, nbytes, self.config.collective_strategy)
+            info["all_reduce"] = {
+                "chosen": chosen,
+                "flat_time_s": times["flat"],
+                "two_level_time_s": times["two_level"],
+                "delta_two_level_vs_flat_s": (times["two_level"]
+                                              - times["flat"]),
+            }
+        return info
 
     def _calibration_info(self) -> dict:
         """The ``describe()['calibration']`` section: live-profile

@@ -55,6 +55,8 @@ class ArchConfig:
     rope_theta: float = 500000.0
     dtype: str = "bfloat16"
     fsdp: bool = False            # shard params/optimizer over data axis too
+    multi_pod: bool = False       # needs >1 pod: launch resolves the pod-axis
+                                  # mesh + hierarchical (island-aware) topology
     remat: str = "none"           # none | full  (activation checkpointing)
     optimizer_dtype: str = "float32"   # adam moment dtype (bf16/int8 for huge)
     scan_layers: bool = True
@@ -140,6 +142,7 @@ class ArchConfig:
             dtype="float32",
             remat="none",
             fsdp=False,
+            multi_pod=False,
         )
 
 

@@ -24,7 +24,10 @@ CONFIG = register(ArchConfig(
     fsdp=True,
     remat="full",
     optimizer_dtype="int8",
+    multi_pod=True,
     notes="1T total / ~32B active; EP(model) x FSDP(data) 2-D expert "
           "sharding; int8 Adam moments required to fit 16GB/chip at 256 "
-          "chips (see EXPERIMENTS.md §Perf memory iteration).",
+          "chips (see EXPERIMENTS.md §Perf memory iteration); 1T params "
+          "+ moments exceed one pod's HBM, so launch resolves the "
+          "2-pod island-aware mesh/topology.",
 ))

@@ -17,6 +17,9 @@ CONFIG = register(ArchConfig(
     fsdp=True,
     remat="full",
     optimizer_dtype="bfloat16",
+    multi_pod=True,
     notes="squared-ReLU MLP (2 matrices); params+moments require "
-          "FSDP(data)xTP(model) 2-D sharding to fit 16GB/chip.",
+          "FSDP(data)xTP(model) 2-D sharding to fit 16GB/chip; 340B "
+          "params + bf16 moments exceed one pod's HBM, so launch "
+          "resolves the 2-pod island-aware mesh/topology.",
 ))

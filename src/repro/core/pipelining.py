@@ -75,6 +75,8 @@ GRAPH_INSTANTIATE_PER_NODE_NS = 85_000
 SYNC_NS_PER_PATH = 2_000            # event record + stream-wait per path
 COMPUTE_GFLOPS = 50.0               # declared-FLOP pricing rate for
                                     # ComputeNodes without a measured cost
+INTER_NODE_LATENCY_NS = 1_500       # per-chunk hop latency on inter-node
+                                    # links (RDMA/DCN tier, DESIGN §3.1)
 
 
 def compute_time_s(node, topo: "Topology | None" = None) -> float:
@@ -308,10 +310,29 @@ def _bandwidth_map(plans: Sequence[TransferPlan]
     return bw
 
 
+def _inter_latency_s(topo: Topology | None
+                     ) -> "dict[tuple[int, int], float]":
+    """Per-link latency surcharge for the inter-node tier (DESIGN §3.1).
+
+    Flat topologies (one island) get an empty map — the §4.4 model is
+    then bitwise-identical to the pre-hierarchy model. On hierarchical
+    topologies every inter-island directional link costs an extra
+    :data:`INTER_NODE_LATENCY_NS` per chunk hop, so the tuner/arbiter
+    naturally prefer fewer, larger chunks across node boundaries.
+    """
+    if topo is None or getattr(topo, "num_islands", 1) <= 1:
+        return {}
+    lat = INTER_NODE_LATENCY_NS / 1e9
+    return {key: lat for key in topo.links
+            if topo.is_inter_island(*key)}
+
+
 def _graph_message_times_s(graph: "TransferGraph",
                            bw_gbps: dict[tuple[int, int], float],
                            contention: dict[tuple[int, int], int],
-                           host_flows: int) -> dict[int, float]:
+                           host_flows: int,
+                           latency_s: "dict[tuple[int, int], float] | None"
+                           = None) -> dict[int, float]:
     """Per-message critical-path wire time over the copy-node DAG.
 
     The relevant DAG per (message, path) is the chunks × hops grid: hop
@@ -325,7 +346,9 @@ def _graph_message_times_s(graph: "TransferGraph",
     Node weights: steady-state chunk bytes over the link's contended
     bandwidth. A directional link shared by several concurrent paths is
     time-shared; flows staging through the host additionally split the
-    host's aggregate copy bandwidth (paper §5.3 obs. 6).
+    host's aggregate copy bandwidth (paper §5.3 obs. 6). ``latency_s``
+    (from :func:`_inter_latency_s`) adds a per-chunk-hop surcharge on
+    inter-node links — the tier-aware term of the hierarchical model.
     """
     # per (msg, path): hop link sequence + chunk count + total bytes,
     # read off window-0 nodes (windows replay the identical round).
@@ -343,6 +366,7 @@ def _graph_message_times_s(graph: "TransferGraph",
             totals[key] += node.nbytes
             chunks[key] += 1
     times: dict[int, float] = {m: 0.0 for m in range(graph.num_messages)}
+    latency_s = latency_s or {}
     for key, link_by_hop in hops.items():
         n = max(1, chunks[key])
         chunk_bytes = totals[key] / n
@@ -353,7 +377,8 @@ def _graph_message_times_s(graph: "TransferGraph",
             share = max(1, contention.get(link, 1))
             if HOST in link and host_flows > 1:
                 share = max(share, host_flows)
-            hop_times.append(chunk_bytes / (bw / share))
+            hop_times.append(chunk_bytes / (bw / share)
+                             + latency_s.get(link, 0.0))
         fill = sum(hop_times)                 # first chunk: all hop edges
         steady = (n - 1) * max(hop_times)     # serialization on bottleneck
         times[key[0]] = max(times[key[0]], fill + steady)
@@ -375,7 +400,7 @@ def wire_time_s(plan: TransferPlan, topo: Topology, *,
     contention, host_flows = _contention(all_plans)
     times = _graph_message_times_s(
         _lower(plan), _calibrated_bw(_bandwidth_map(all_plans), topo),
-        contention, host_flows)
+        contention, host_flows, _inter_latency_s(topo))
     return times[0]
 
 
@@ -421,7 +446,7 @@ def estimate_group_time_s(
     contention, host_flows = _contention(plans)
     times = _graph_message_times_s(
         _lower(g), _calibrated_bw(_bandwidth_map(plans), topo),
-        contention, host_flows)
+        contention, host_flows, _inter_latency_s(topo))
     wires = [times[i] for i in range(len(plans))]
     if fused:
         return max(wires) + group_launch_overhead_ns(
@@ -460,6 +485,7 @@ def graph_node_weights_s(graph: "TransferGraph", topo: Topology
         paths_on[node.link].add((node.msg_idx, node.path_idx))
         if HOST in node.link:
             host_paths.add((node.msg_idx, node.path_idx))
+    latency_s = _inter_latency_s(topo)
     weight = []
     for node in graph.nodes:
         if hasattr(node, "kernel"):
@@ -472,7 +498,8 @@ def graph_node_weights_s(graph: "TransferGraph", topo: Topology
         share = max(1, len(paths_on[node.link]))
         if HOST in node.link and len(host_paths) > 1:
             share = max(share, len(host_paths))
-        weight.append(node.nbytes / (link.bandwidth_gbps * 1e9 / share))
+        weight.append(node.nbytes / (link.bandwidth_gbps * 1e9 / share)
+                      + latency_s.get(node.link, 0.0))
     return weight
 
 

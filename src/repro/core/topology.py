@@ -9,6 +9,15 @@ Bandwidths are unidirectional per directional link, GB/s. The paper's hardware
 constants (2 NVLink sublinks/pair on Beluga, 4 on Narval, PCIe host links) and
 the TPU v5e constants (4 ICI links/chip, ~50 GB/s/link/direction) are both
 representable.
+
+Hierarchy (DESIGN.md §3.1): every device belongs to exactly one *island*
+(node). Flat topologies put all devices in island 0; :meth:`Topology.\
+hierarchical` builds N islands of intra-node links joined by per-tier
+inter-node links (e.g. ``"nvlink"`` inside, ``"ib"``/``"dcn"`` between).
+The island assignment is part of the structural :meth:`Topology.digest`
+and therefore of the plan-validity epoch: two topologies with identical
+links but different node boundaries can never cross-serve cached plans or
+calibration profiles.
 """
 
 from __future__ import annotations
@@ -33,11 +42,18 @@ PEAK_BF16_TFLOPS = 197.0
 
 @dataclasses.dataclass(frozen=True)
 class Link:
-    """A directional link ``src -> dst`` with unidirectional bandwidth."""
+    """A directional link ``src -> dst`` with unidirectional bandwidth.
+
+    Validated at construction (positive bandwidth, no self-links); the
+    §4.4 model reads every bandwidth through links, so the invariant
+    "a registered link is usable" holds everywhere downstream. ``kind``
+    is the bandwidth class/tier — intra-node (``"nvlink"``, ``"ici"``),
+    host (``"pcie"``) or inter-node (``"ib"``, ``"dcn"``).
+    """
 
     src: int
     dst: int
-    kind: str  # "ici" | "nvlink" | "pcie"
+    kind: str  # "ici" | "nvlink" | "pcie" | "ib" | "dcn"
     bandwidth_gbps: float
 
     def __post_init__(self) -> None:
@@ -53,7 +69,9 @@ class Route:
 
     ``via`` is the staging device (or :data:`HOST`); ``None`` means direct.
     ``bottleneck_gbps`` is the min link bandwidth along the route — the
-    paper's per-path ``share[p]`` is proportional to it (§4.4).
+    paper's per-path ``share[p]`` is proportional to it (§4.4). Routes in
+    one plan are link-disjoint (the §4.5 contention invariant the
+    planner preserves by construction).
     """
 
     src: int
@@ -64,30 +82,45 @@ class Route:
 
     @property
     def kind(self) -> str:
+        """Route class: ``"direct"``, ``"staged_host"`` or
+        ``"staged_device"`` (derived from ``via``)."""
         if self.via is None:
             return "direct"
         return "staged_host" if self.via == HOST else "staged_device"
 
     @property
     def num_hops(self) -> int:
+        """Number of hops (links) along the route."""
         return len(self.hops)
 
     def directional_links(self) -> tuple[tuple[int, int], ...]:
+        """The ``(src, dst)`` directional-link keys along the route, in
+        hop order — the unit of §4.5 link-exclusivity accounting."""
         return tuple((h.src, h.dst) for h in self.hops)
 
 
 class Topology:
-    """Directed link graph over ``num_devices`` accelerators (+ host)."""
+    """Directed link graph over ``num_devices`` accelerators (+ host).
+
+    Structural identity (links **and** island assignment) is captured by
+    :meth:`digest`; any mutation bumps the :attr:`epoch` plan-validity
+    token, so every cached plan / fast-path entry / calibration profile
+    derived from a previous shape is invalidated, never silently reused.
+    """
 
     def __init__(self, num_devices: int, links: Iterable[Link],
                  name: str = "custom",
-                 grid_shape: tuple[int, ...] | None = None):
+                 grid_shape: tuple[int, ...] | None = None,
+                 node_assignment: Iterable[int] | None = None):
         self.num_devices = int(num_devices)
         self.name = name
         self.grid_shape = grid_shape
         self._uid = next(_UID_SOURCE)
         self._epoch = 0
         self._links: dict[tuple[int, int], Link] = {}
+        #: Island (node) membership, device -> island id. Flat topologies
+        #: keep every device in island 0; the tuple is part of digest().
+        self._node_assignment = self._check_assignment(node_assignment)
         #: Measured-feedback overlay (DESIGN §4.4c): a calibration profile
         #: attached via :meth:`set_calibration` plus the per-link ``Link``
         #: shadows :meth:`link` serves while it is live.
@@ -95,6 +128,19 @@ class Topology:
         self._calibrated_links: dict[tuple[int, int], Link] = {}
         for link in links:
             self._register(link)
+
+    def _check_assignment(self, node_assignment: Iterable[int] | None
+                          ) -> tuple[int, ...]:
+        if node_assignment is None:
+            return (0,) * self.num_devices
+        assignment = tuple(int(n) for n in node_assignment)
+        if len(assignment) != self.num_devices:
+            raise ValueError(
+                f"node_assignment length {len(assignment)} != "
+                f"num_devices {self.num_devices}")
+        if any(n < 0 for n in assignment):
+            raise ValueError(f"negative island id in {assignment}")
+        return assignment
 
     def _register(self, link: Link) -> None:
         key = (link.src, link.dst)
@@ -150,14 +196,19 @@ class Topology:
     # -- calibration (measured-feedback overlay, DESIGN §4.4c) -------------
     def digest(self) -> str:
         """Structural identity of this topology: a stable hash over the
-        *nominal* link set ``(num_devices, sorted (src, dst, kind, bw))``.
+        *nominal* link set ``(num_devices, node assignment,
+        sorted (src, dst, kind, bw))``.
 
         Calibration profiles are keyed by this digest so fitted terms can
-        never be applied to a different machine shape. Deliberately
-        ignores the calibrated overlay — attaching a profile does not
-        change what machine this is.
+        never be applied to a different machine shape. The island
+        assignment is part of the payload: two topologies with identical
+        links but different node boundaries route differently, so their
+        plans/profiles must never cross-serve. Deliberately ignores the
+        calibrated overlay — attaching a profile does not change what
+        machine this is.
         """
         payload = (self.num_devices,
+                   self._node_assignment,
                    tuple(sorted((k[0], k[1], ln.kind,
                                  round(ln.bandwidth_gbps, 6))
                                 for k, ln in self._links.items())))
@@ -200,9 +251,74 @@ class Topology:
             self._calibrated_links = {}
         self._epoch += 1  # not bump_epoch(): digest unchanged, keep profile
 
+    # -- hierarchy (islands / node boundaries, DESIGN §3.1) ----------------
+    @property
+    def num_islands(self) -> int:
+        """Number of distinct islands (nodes); 1 for flat topologies."""
+        return len(set(self._node_assignment))
+
+    def node_of(self, dev: int) -> int:
+        """Island (node) id of device ``dev``.
+
+        Raises ``ValueError`` for out-of-range ids, including
+        :data:`HOST` — the host is a staging point, not an island member
+        (host hops never count as inter-island; see
+        :meth:`is_inter_island`).
+        """
+        if not 0 <= dev < self.num_devices:
+            raise ValueError(f"device {dev} has no island "
+                             f"(num_devices={self.num_devices})")
+        return self._node_assignment[dev]
+
+    def islands(self) -> tuple[tuple[int, ...], ...]:
+        """Device ids grouped per island, ordered by island id.
+
+        The grouping is derived from the same node assignment that
+        :meth:`digest` folds in, so models keyed on it share the plan
+        epoch's validity.
+        """
+        groups: dict[int, list[int]] = {}
+        for dev, island in enumerate(self._node_assignment):
+            groups.setdefault(island, []).append(dev)
+        return tuple(tuple(groups[i]) for i in sorted(groups))
+
+    def is_inter_island(self, src: int, dst: int) -> bool:
+        """True iff ``src -> dst`` crosses a node boundary.
+
+        :data:`HOST` endpoints are never inter-island (the host belongs
+        to no island); the §4.4 tier-aware costing and the planner's
+        route invariants both key off this predicate.
+        """
+        if src == HOST or dst == HOST:
+            return False
+        return self.node_of(src) != self.node_of(dst)
+
+    def egress_devices(self, island: int) -> tuple[int, ...]:
+        """Devices of ``island`` owning at least one inter-island link —
+        the fan-out targets of staged cross-island routes (§4.4)."""
+        out = []
+        for dev, isl in enumerate(self._node_assignment):
+            if isl != island:
+                continue
+            for (s, d) in self._links:
+                if s == dev and self.is_inter_island(s, d):
+                    out.append(dev)
+                    break
+        return tuple(out)
+
+    def set_node_assignment(self, node_assignment: Iterable[int] | None
+                            ) -> None:
+        """Reassign node boundaries (``None`` flattens to one island) and
+        bump the plan epoch — the digest changes, so any attached
+        calibration profile is dropped and every cached plan derived from
+        the previous island layout is invalidated."""
+        self._node_assignment = self._check_assignment(node_assignment)
+        self.bump_epoch()
+
     # -- queries ----------------------------------------------------------
     @property
     def links(self) -> Mapping[tuple[int, int], Link]:
+        """The nominal directional-link map ``(src, dst) -> Link``."""
         return self._links
 
     def link(self, src: int, dst: int) -> Link | None:
@@ -218,12 +334,16 @@ class Topology:
         return self._links.get(key)
 
     def has_link(self, src: int, dst: int) -> bool:
+        """True iff the nominal directional link ``src -> dst`` exists."""
         return (src, dst) in self._links
 
     def neighbors(self, dev: int) -> list[int]:
+        """Devices (possibly :data:`HOST`) reachable from ``dev`` over
+        one directional link, sorted."""
         return sorted({d for (s, d) in self._links if s == dev})
 
     def devices(self) -> list[int]:
+        """All accelerator device ids, ``[0, num_devices)``."""
         return list(range(self.num_devices))
 
     # -- constructors ------------------------------------------------------
@@ -255,26 +375,76 @@ class Topology:
         For degenerate axes (size 2) the wraparound link is folded into the
         single neighbour link (doubled bandwidth), matching real ICI cabling.
         """
-        links: list[Link] = []
-
-        def dev(x: int, y: int) -> int:
-            return (x % nx) * ny + (y % ny)
-
-        for x in range(nx):
-            for y in range(ny):
-                s = dev(x, y)
-                nbrs = []
-                if nx > 1:
-                    nbrs += [dev(x + 1, y), dev(x - 1, y)]
-                if ny > 1:
-                    nbrs += [dev(x, y + 1), dev(x, y - 1)]
-                for n in nbrs:
-                    if n != s:
-                        links.append(Link(s, n, "ici", link_gbps))
+        links = _torus_links(nx, ny, link_gbps)
         return cls(nx * ny, links, name=name or f"torus{nx}x{ny}",
                    grid_shape=(nx, ny))
 
+    @classmethod
+    def hierarchical(cls, num_islands: int = 2, devices_per_island: int = 4,
+                     *, intra: str = "mesh",
+                     sublinks_per_pair: int = 2, sublink_gbps: float = 25.0,
+                     torus_shape: tuple[int, int] | None = None,
+                     intra_gbps: float = ICI_LINK_GBPS,
+                     inter_gbps: float = 12.5, inter_kind: str = "ib",
+                     egress_per_island: int = 1,
+                     name: str | None = None) -> "Topology":
+        """Multi-node topology: islands of fast intra-node links joined by
+        a slower inter-node tier (De Sensi et al.; DESIGN §3.1).
+
+        Each island is either an NVLink full mesh (``intra="mesh"``,
+        ``sublinks_per_pair`` × ``sublink_gbps`` per pair) or an ICI
+        2-D torus (``intra="torus"`` with ``torus_shape``,
+        ``intra_gbps``/link). The first ``egress_per_island`` devices of
+        every island are its egress points: egress ``e`` of island ``a``
+        links to egress ``e`` of island ``b`` (both directions, all island
+        pairs, ``inter_kind``/``inter_gbps``) — so every cross-island
+        route has exactly one inter-node hop, the invariant the planner's
+        staged routing preserves. No host links: a shared host would be a
+        hidden cross-island wormhole; add PCIe links explicitly if an
+        experiment wants host staging.
+        """
+        if num_islands < 1:
+            raise ValueError(f"num_islands must be >= 1, got {num_islands}")
+        if devices_per_island < 1:
+            raise ValueError(f"devices_per_island must be >= 1, "
+                             f"got {devices_per_island}")
+        if not 1 <= egress_per_island <= devices_per_island:
+            raise ValueError(
+                f"egress_per_island must be in [1, {devices_per_island}], "
+                f"got {egress_per_island}")
+        links: list[Link] = []
+        for island in range(num_islands):
+            base = island * devices_per_island
+            if intra == "mesh":
+                for a, b in itertools.permutations(
+                        range(devices_per_island), 2):
+                    for _ in range(sublinks_per_pair):
+                        links.append(Link(base + a, base + b, "nvlink",
+                                          sublink_gbps))
+            elif intra == "torus":
+                if torus_shape is None or (
+                        torus_shape[0] * torus_shape[1]
+                        != devices_per_island):
+                    raise ValueError(
+                        f"intra='torus' needs torus_shape with product "
+                        f"{devices_per_island}, got {torus_shape}")
+                links.extend(_torus_links(*torus_shape, intra_gbps,
+                                          base=base))
+            else:
+                raise ValueError(f"unknown intra island kind {intra!r}")
+        for a, b in itertools.permutations(range(num_islands), 2):
+            for e in range(egress_per_island):
+                links.append(Link(a * devices_per_island + e,
+                                  b * devices_per_island + e,
+                                  inter_kind, inter_gbps))
+        assignment = [island for island in range(num_islands)
+                      for _ in range(devices_per_island)]
+        return cls(num_islands * devices_per_island, links,
+                   name=name or f"hier{num_islands}x{devices_per_island}",
+                   node_assignment=assignment)
+
     def coords(self, dev: int) -> tuple[int, ...]:
+        """Grid coordinates of ``dev`` (2-D tori), else ``(dev,)``."""
         if self.grid_shape is None or len(self.grid_shape) != 2:
             return (dev,)
         ny = self.grid_shape[1]
@@ -282,4 +452,26 @@ class Topology:
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return (f"Topology(name={self.name!r}, devices={self.num_devices}, "
-                f"links={len(self._links)})")
+                f"islands={self.num_islands}, links={len(self._links)})")
+
+
+def _torus_links(nx: int, ny: int, link_gbps: float,
+                 base: int = 0) -> list[Link]:
+    """ICI link list for a 2-D torus whose device ids start at ``base``."""
+    links: list[Link] = []
+
+    def dev(x: int, y: int) -> int:
+        return base + (x % nx) * ny + (y % ny)
+
+    for x in range(nx):
+        for y in range(ny):
+            s = dev(x, y)
+            nbrs = []
+            if nx > 1:
+                nbrs += [dev(x + 1, y), dev(x - 1, y)]
+            if ny > 1:
+                nbrs += [dev(x, y + 1), dev(x, y - 1)]
+            for n in nbrs:
+                if n != s:
+                    links.append(Link(s, n, "ici", link_gbps))
+    return links

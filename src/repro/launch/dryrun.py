@@ -155,12 +155,17 @@ def run_cell(arch, shape, mesh, mesh_name):
 
 #: (name, constructor) cells swept by the ``--comm`` transfer-graph dry-run.
 def _comm_topologies():
+    """(name, topology, (src, dst)) sweep cells; the hierarchical cell
+    describes a cross-island transfer so the staged-routing and
+    flat-vs-two-level model rows land in the dry-run artifact."""
     from repro.core.topology import Topology
     return [
-        ("beluga4", Topology.full_mesh(4)),
+        ("beluga4", Topology.full_mesh(4), (0, 1)),
         ("narval4", Topology.full_mesh(4, sublinks_per_pair=4,
-                                       name="narval4")),
-        ("torus4x4", Topology.torus2d(4, 4)),
+                                       name="narval4"), (0, 1)),
+        ("torus4x4", Topology.torus2d(4, 4), (0, 1)),
+        ("hier2x4", Topology.hierarchical(2, 4, egress_per_island=2,
+                                          name="hier2x4"), (1, 7)),
     ]
 
 
@@ -180,17 +185,19 @@ def run_comm_dryrun(out_path: str) -> list[dict]:
 
     MiB = 1 << 20
     rows = []
-    for topo_name, topo in _comm_topologies():
+    for topo_name, topo, (src, dst) in _comm_topologies():
         sess = CommSession(CommConfig(multipath_threshold=MiB),
                            topology=topo)
         for nbytes in (1 * MiB, 8 * MiB, 64 * MiB):
             for max_paths in (1, 3):
-                d = sess.describe(0, 1, nbytes, max_paths=max_paths)
+                d = sess.describe(src, dst, nbytes, max_paths=max_paths)
                 row = {"kind": "comm_graph", "status": "ok",
                        "topology": topo_name,
                        "nbytes": nbytes, "max_paths": max_paths,
                        "num_paths": d["num_paths"], **d["graph"],
-                       **d["model"]}
+                       **d["model"],
+                       "islands": d["hierarchy"]["islands"],
+                       "cross_island": d["hierarchy"]["cross_island"]}
                 rows.append(row)
                 print(f"COMM {topo_name} {nbytes >> 20}MiB "
                       f"paths={d['num_paths']} nodes={d['graph']['nodes']} "
@@ -200,7 +207,7 @@ def run_comm_dryrun(out_path: str) -> list[dict]:
                       flush=True)
         for nbytes in (8 * MiB, 64 * MiB):
             for sched in SCHEDULE_NAMES:
-                d = sess.describe(0, 1, nbytes, max_paths=3,
+                d = sess.describe(src, dst, nbytes, max_paths=3,
                                   schedule=sched)
                 s = d["schedule"]
                 rows.append({

@@ -1,8 +1,10 @@
 """docs/api.md is auto-checked: every public symbol of the pass-facing
 modules (``repro.comm.passes``, ``repro.comm.graph``), the cache layer
-(``repro.comm.cache`` — plan cache, lifecycle, dispatch fast path), and
-the measured-feedback layer (``repro.comm.telemetry``,
-``repro.comm.calibration`` — §4.4c) must
+(``repro.comm.cache`` — plan cache, lifecycle, dispatch fast path), the
+measured-feedback layer (``repro.comm.telemetry``,
+``repro.comm.calibration`` — §4.4c), and the hierarchy-bearing layers
+(``repro.core.topology``, ``repro.comm.planner``,
+``repro.comm.collectives`` — DESIGN §3.1) must
 
 * appear in the reference page,
 * carry a docstring that names its invariant obligations (the §2.2 /
@@ -24,12 +26,15 @@ import pytest
 import repro.comm.cache as cache_mod
 import repro.comm.calibration as calibration_mod
 import repro.comm.capture as capture_mod
+import repro.comm.collectives as collectives_mod
 import repro.comm.graph as graph_mod
 import repro.comm.passes as passes_mod
+import repro.comm.planner as planner_mod
 import repro.comm.telemetry as telemetry_mod
+import repro.core.topology as topology_mod
 
 GATED = [graph_mod, passes_mod, capture_mod, cache_mod, telemetry_mod,
-         calibration_mod]
+         calibration_mod, topology_mod, planner_mod, collectives_mod]
 
 DOCS = pathlib.Path(__file__).resolve().parents[1] / "docs" / "api.md"
 

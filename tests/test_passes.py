@@ -38,8 +38,10 @@ CONCRETE = ("round_robin", "depth_first", "critical_path")
 
 
 @pytest.fixture(scope="module")
-def topo():
-    return Topology.full_mesh(8, with_host=False, name="mesh8")
+def topo(mesh8):
+    # Alias of the shared conftest.py ``mesh8`` fixture; tests needing a
+    # distinct identity (memoization) build their own topologies below.
+    return mesh8
 
 
 @pytest.fixture(scope="module")

@@ -290,6 +290,51 @@ def test_group_exclusive_property(pairs, sizes):
     assert group.exclusive
 
 
+@settings(max_examples=30, deadline=None)
+@given(
+    islands=st.integers(2, 3),
+    per=st.integers(2, 4),
+    egress=st.integers(1, 2),
+    nbytes=st.integers(1024, 32 * MiB),
+    max_paths=st.integers(1, 4),
+    data=st.data(),
+)
+def test_hierarchical_routing_property(islands, per, egress, nbytes,
+                                       max_paths, data):
+    """SATELLITE property (§3.1 island-routing invariants): on randomized
+    hierarchical topologies no plan routes intra-island traffic over an
+    inter-node link, and every cross-island plan crosses exactly ONE
+    inter-node hop per route — and every shipped scheduler preserves
+    those hop sets per (path, chunk)."""
+    topo = Topology.hierarchical(islands, per,
+                                 egress_per_island=min(egress, per))
+    n = islands * per
+    src = data.draw(st.integers(0, n - 1), label="src")
+    dst = data.draw(st.integers(0, n - 1).filter(lambda d: d != src),
+                    label="dst")
+    inter = {(a, b) for (a, b) in topo.links if topo.is_inter_island(a, b)}
+    assert inter                       # the topology really is hierarchical
+    planner = PathPlanner(topo, multipath_threshold=256)
+    plan = planner.plan(src, dst, nbytes, max_paths=max_paths)
+    validate_plan(plan)
+    cross = topo.node_of(src) != topo.node_of(dst)
+    want_inter_hops = 1 if cross else 0
+    for pa in plan.paths:
+        hops = pa.route.directional_links()
+        assert sum(h in inter for h in hops) == want_inter_hops, (
+            src, dst, hops)
+    graph = lower(plan, 1)
+    for name in _ALL_SCHEDULES:
+        scheduled, _ = apply_schedule(graph, name, topo)
+        check_pass(graph, scheduled)
+        per_chunk = {}
+        for node in scheduled.nodes:
+            per_chunk.setdefault((node.path_idx, node.offset),
+                                 []).append(node.link)
+        for links in per_chunk.values():
+            assert sum(lk in inter for lk in links) == want_inter_hops
+
+
 @settings(max_examples=12, deadline=None)
 @given(src=st.integers(0, 7), dst=st.integers(0, 7),
        nelems=st.integers(8, 5000),

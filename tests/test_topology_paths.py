@@ -2,65 +2,58 @@
 
 import pytest
 
-from repro.core import (HOST, PathPlanner, Topology, build_schedule,
-                        estimate_transfer_time_s, validate_plan)
+from repro.core import (HOST, PathPlanner, estimate_transfer_time_s,
+                        validate_plan)
 
 MiB = 1 << 20
 
-
-@pytest.fixture
-def beluga():
-    return Topology.full_mesh(4)  # 2 NVLink sublinks/pair + PCIe host
+# beluga4 / torus4x4 topologies come from the shared fixture library
+# in conftest.py.
 
 
-@pytest.fixture
-def torus():
-    return Topology.torus2d(4, 4)
-
-
-def test_full_mesh_links_aggregate(beluga):
+def test_full_mesh_links_aggregate(beluga4):
     # two 25 GB/s sublinks aggregate to one 50 GB/s logical link
-    assert beluga.link(0, 1).bandwidth_gbps == pytest.approx(50.0)
-    assert beluga.link(0, HOST).kind == "pcie"
+    assert beluga4.link(0, 1).bandwidth_gbps == pytest.approx(50.0)
+    assert beluga4.link(0, HOST).kind == "pcie"
 
 
-def test_route_enumeration_direct_first(beluga):
-    planner = PathPlanner(beluga)
+def test_route_enumeration_direct_first(beluga4):
+    planner = PathPlanner(beluga4)
     routes = planner.enumerate_routes(0, 1)
     assert routes[0].kind == "direct"
     assert {r.via for r in routes[1:]} == {2, 3}
 
 
-def test_route_enumeration_host(beluga):
-    planner = PathPlanner(beluga)
+def test_route_enumeration_host(beluga4):
+    planner = PathPlanner(beluga4)
     routes = planner.enumerate_routes(0, 1, include_host=True)
     assert routes[-1].kind == "staged_host"   # host sorts last (lowest bw)
 
 
-def test_torus_routes(torus):
-    planner = PathPlanner(torus)
+def test_torus_routes(torus4x4):
+    planner = PathPlanner(torus4x4)
     # neighbours (0, 1): direct + 2-hop staged routes exist
     routes = planner.enumerate_routes(0, 1)
     assert routes[0].kind == "direct"
     assert len(routes) >= 2
 
 
-def test_small_message_single_path(beluga):
-    planner = PathPlanner(beluga)   # threshold 2 MiB (paper §5.3)
+def test_small_message_single_path(beluga4):
+    planner = PathPlanner(beluga4)   # threshold 2 MiB (paper §5.3)
     plan = planner.plan(0, 1, 1 * MiB)
     assert plan.num_paths == 1
     assert plan.paths[0].route.kind == "direct"
 
 
-def test_large_message_multipath(beluga):
-    planner = PathPlanner(beluga)
+def test_large_message_multipath(beluga4):
+    planner = PathPlanner(beluga4)
     plan = planner.plan(0, 1, 64 * MiB, max_paths=3)
     assert plan.num_paths == 3
     validate_plan(plan)
 
 
-def test_shares_proportional_to_bandwidth(beluga):
-    planner = PathPlanner(beluga)
+def test_shares_proportional_to_bandwidth(beluga4):
+    planner = PathPlanner(beluga4)
     plan = planner.plan(0, 1, 64 * MiB, max_paths=4, include_host=True)
     # host share must be the smallest (12 vs 50 GB/s routes)
     host = [p for p in plan.paths if p.route.via == HOST]
@@ -68,34 +61,34 @@ def test_shares_proportional_to_bandwidth(beluga):
     assert host and all(host[0].nbytes < o.nbytes for o in others)
 
 
-def test_plan_rejects_bad_granularity(beluga):
-    planner = PathPlanner(beluga)
+def test_plan_rejects_bad_granularity(beluga4):
+    planner = PathPlanner(beluga4)
     with pytest.raises(ValueError):
         planner.plan(0, 1, 10 * MiB + 1, granularity=4)
 
 
-def test_tuner_prefers_multipath_for_large(beluga):
-    planner = PathPlanner(beluga)
+def test_tuner_prefers_multipath_for_large(beluga4):
+    planner = PathPlanner(beluga4)
     best = planner.tune(0, 1, 128 * MiB)
     assert best.num_paths >= 2
     t_single = estimate_transfer_time_s(
-        planner.plan(0, 1, 128 * MiB, max_paths=1), beluga)
-    t_best = estimate_transfer_time_s(best, beluga)
+        planner.plan(0, 1, 128 * MiB, max_paths=1), beluga4)
+    t_best = estimate_transfer_time_s(best, beluga4)
     assert t_best < t_single
 
 
-def test_tuner_prefers_single_path_for_tiny(beluga):
-    planner = PathPlanner(beluga, multipath_threshold=0)
+def test_tuner_prefers_single_path_for_tiny(beluga4):
+    planner = PathPlanner(beluga4, multipath_threshold=0)
     best = planner.tune(0, 1, 64 * 1024,
                         chunk_counts=(1, 2, 4),
                         path_counts=(1, 2, 3))
     assert best.num_paths == 1   # launch overhead dominates
 
 
-def test_env_overrides(monkeypatch, beluga):
+def test_env_overrides(monkeypatch, beluga4):
     monkeypatch.setenv("REPRO_MP_MAX_PATHS", "2")
     monkeypatch.setenv("REPRO_MP_CHUNK_BYTES", str(2 * MiB))
-    planner = PathPlanner(beluga)
+    planner = PathPlanner(beluga4)
     assert planner.max_paths == 2
     assert planner.chunk_bytes == 2 * MiB
     plan = planner.plan(0, 1, 64 * MiB)

@@ -30,10 +30,8 @@ from repro.core import (HOST, Link, Topology, estimate_group_time_s,
 
 MiB = 1 << 20
 
-
-@pytest.fixture(scope="module")
-def mesh8():
-    return Topology.full_mesh(8, with_host=False, name="mesh8")
+# mesh8 / beluga4 / mesh4 / bridge3 topologies come from the shared
+# fixture library in conftest.py.
 
 
 @pytest.fixture(scope="module")
@@ -41,26 +39,12 @@ def session(mesh8):
     return CommSession(CommConfig(multipath_threshold=256), topology=mesh8)
 
 
-def _bridge_topology():
-    """3 GPUs + host where the only alternative 0→1 path stages mid-route
-    through the host: 0↔1 (direct), 0↔2, 2↔HOST, HOST↔1. The detour
-    (0,2),(2,HOST),(HOST,1) records via=2, so a via-only executability
-    check misses the host hop."""
-    gb = 25.0
-    links = []
-    for a, b in ((0, 1), (0, 2)):
-        links += [Link(a, b, "nvlink", gb), Link(b, a, "nvlink", gb)]
-    links += [Link(2, HOST, "pcie", 12.0), Link(HOST, 2, "pcie", 12.0),
-              Link(HOST, 1, "pcie", 12.0), Link(1, HOST, "pcie", 12.0)]
-    return Topology(3, links, name="bridge3")
-
-
 # ------------------------- detour host regressions --------------------------
 
-def test_detour_never_stages_through_host_without_include_host():
+def test_detour_never_stages_through_host_without_include_host(bridge3):
     """Regression: neighbors() includes HOST, so the 3-hop detour search
     could route through the host even with include_host=False."""
-    planner = PathPlanner(_bridge_topology(), multipath_threshold=0)
+    planner = PathPlanner(bridge3, multipath_threshold=0)
     routes = planner.enumerate_routes(0, 1, include_host=False)
     for r in routes:
         for (a, b) in r.directional_links():
@@ -70,18 +54,18 @@ def test_detour_never_stages_through_host_without_include_host():
                for (a, b) in pa.route.directional_links())
 
 
-def test_detour_through_host_allowed_when_requested():
-    planner = PathPlanner(_bridge_topology(), multipath_threshold=0)
+def test_detour_through_host_allowed_when_requested(bridge3):
+    planner = PathPlanner(bridge3, multipath_threshold=0)
     routes = planner.enumerate_routes(0, 1, include_host=True)
     hosted = [r for r in routes
               if any(HOST in link for link in r.directional_links())]
     assert hosted, "host detour should be admitted with include_host=True"
 
 
-def test_check_executable_rejects_mid_route_host():
+def test_check_executable_rejects_mid_route_host(bridge3):
     """Regression: the detour (0,2),(2,HOST),(HOST,1) has via=2, so the
     old via-only check would hand device id -1 to ppermute."""
-    topo = _bridge_topology()
+    topo = bridge3
     planner = PathPlanner(topo, multipath_threshold=0)
     routes = planner.enumerate_routes(0, 1, include_host=True)
     hosted = [r for r in routes if r.via != HOST
@@ -131,21 +115,20 @@ def test_plan_group_bidirectional_exclusive(mesh8):
     assert g.exclusive
 
 
-def test_plan_group_halo_ring_exclusive():
+def test_plan_group_halo_ring_exclusive(beluga4):
     """The paper's 4-rank halo pattern rides a 4-transfer group with fully
     disjoint links on the Beluga mesh."""
-    topo = Topology.full_mesh(4)
-    g = PathPlanner(topo, multipath_threshold=0).plan_group(
+    g = PathPlanner(beluga4, multipath_threshold=0).plan_group(
         [(0, 1, 2 * MiB), (1, 2, 2 * MiB), (2, 3, 2 * MiB), (3, 0, 2 * MiB)])
     validate_group(g)
     assert g.exclusive and g.num_messages == 4
 
 
-def test_plan_group_fan_in_falls_back_to_sharing():
+def test_plan_group_fan_in_falls_back_to_sharing(mesh4):
     """Flows converging on one device can't be link-disjoint without
     starving someone; the model must pick contention-derated sharing and
     still beat the sequential dispatch loop."""
-    topo = Topology.full_mesh(4, with_host=False)
+    topo = mesh4
     planner = PathPlanner(topo, multipath_threshold=256)
     reqs = [(0, 1, 4 * MiB), (2, 1, 4 * MiB)]
     g = planner.plan_group(reqs)
@@ -188,10 +171,10 @@ def test_plan_group_same_flow_messages_share_routes(mesh8):
     assert g.num_messages == 4
 
 
-def test_exchange_model_beats_sequential_sends():
+def test_exchange_model_beats_sequential_sends(beluga4):
     """Acceptance: analytic exchange() time ≤ the max completion of
     independently-planned sequential sends on a contended topology."""
-    topo = Topology.full_mesh(4)
+    topo = beluga4
     planner = PathPlanner(topo, multipath_threshold=256)
     for reqs in (
             [(0, 1, 8 * MiB), (1, 0, 8 * MiB)],                 # BIBW
