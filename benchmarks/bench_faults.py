@@ -1,0 +1,148 @@
+"""Degraded-mode bandwidth per ladder rung + recovery digest (§4.6).
+
+The resilience story has three measurable claims, and this module is the
+CI row for each:
+
+* **Ladder value** — degraded multipath (the surviving-routes re-plan
+  after one NVLink fails) must still model MORE bandwidth than the
+  single-path baseline: the whole point of re-planning instead of
+  collapsing straight to one path. Rows ``faults/ladder/*`` report
+  measured dispatch time plus the modeled effective bandwidth and the
+  ladder level each rung runs at.
+* **Exact recovery** — after ``restore_link`` + healthy probes the plan
+  digest must return to its pre-fault value (``faults/recovery/digest``:
+  the pre/post digests and their match ride the JSON extras).
+* **Health-off costs nothing** — with ``health=False`` and no injector
+  the fast-path setup stage must stay within the same bound the §2.3
+  dispatch benchmark enforces (``faults/health_off/setup_fastpath``).
+
+CI gates assert all three on the ``--smoke`` artifact.
+"""
+
+import time
+
+from benchmarks.common import Row, timeit_us
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CommConfig, CommSession
+from repro.core import Topology
+from repro.core.pipelining import effective_bandwidth_gbps
+
+NELEMS = 1 << 15     # 128 KiB f32 — multipath engages, compiles stay quick
+ITERS = 10
+
+
+def _session(**cfg):
+    cfg.setdefault("multipath_threshold", 64)
+    topo = Topology.full_mesh(4)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("dev",))
+    return CommSession(CommConfig(**cfg), mesh=mesh, topology=topo)
+
+
+def _modeled_gbps(sess, max_paths=3) -> float:
+    plan = sess.plan(0, 1, NELEMS * 4, max_paths=max_paths)
+    return effective_bandwidth_gbps(plan, sess.topology)
+
+
+def _send_us(sess, msg, **kw) -> float:
+    return timeit_us(lambda: sess.send(msg, 0, 1, **kw),
+                     iters=ITERS, warmup=2)
+
+
+def _ladder_rows() -> list:
+    """One dispatch-time + modeled-bandwidth row per ladder rung."""
+    msg = jnp.arange(NELEMS, dtype=jnp.float32)
+    rows = []
+
+    sess = _session()
+    us = _send_us(sess, msg, max_paths=3)
+    rows.append(Row("faults/ladder/multipath", us,
+                    f"{_modeled_gbps(sess):.1f}GB/s",
+                    extra={"modeled_gbps": _modeled_gbps(sess),
+                           "level": sess.stats()["health"]["ladder_level"]}))
+
+    sess.topology.fail_link(0, 1)          # the direct NVLink dies
+    us = _send_us(sess, msg, max_paths=3)
+    rows.append(Row("faults/ladder/surviving", us,
+                    f"{_modeled_gbps(sess):.1f}GB/s",
+                    extra={"modeled_gbps": _modeled_gbps(sess),
+                           "level": sess.stats()["health"]["ladder_level"]}))
+
+    us = _send_us(sess, msg, max_paths=1)  # forced single surviving path
+    rows.append(Row("faults/ladder/single", us,
+                    f"{_modeled_gbps(sess, max_paths=1):.1f}GB/s",
+                    extra={"modeled_gbps": _modeled_gbps(sess, max_paths=1),
+                           "level": 2}))
+    return rows
+
+
+def _recovery_row() -> Row:
+    """Fail → re-plan → restore → probe: digest must round-trip."""
+    sess = _session()
+    msg = jnp.arange(NELEMS, dtype=jnp.float32)
+    sess.send(msg, 0, 1)
+    pre = sess.describe(0, 1, NELEMS * 4)["graph"]["digest"]
+    sess.topology.fail_link(0, 1)
+    sess.send(msg, 0, 1)                   # degraded traffic
+    sess.topology.restore_link(0, 1)
+    t0 = time.perf_counter_ns()
+    for _ in range(3):
+        sess.probe_links()                 # healthy probes re-admit
+    us = (time.perf_counter_ns() - t0) / 3 / 1e3
+    post = sess.describe(0, 1, NELEMS * 4)["graph"]["digest"]
+    match = (pre == post
+             and sess.planner.quarantined == frozenset())
+    return Row("faults/recovery/digest", us, f"match={match}",
+               extra={"pre": pre, "post": post, "match": bool(match)})
+
+
+def _health_off_row() -> Row:
+    """Resolution-stage cost with health off — the zero-overhead gate."""
+    sess = _session(health=False)
+    msg = jnp.arange(NELEMS, dtype=jnp.float32)
+    sess.send(msg, 0, 1)                   # populate the fast path
+    eng = sess.engine
+    specs = [(0, 1, NELEMS, jnp.float32)]
+    t0 = time.perf_counter_ns()
+    for _ in range(ITERS):
+        eng._resolve(specs, window=1, max_paths=None, num_chunks=None,
+                     exclusive=False, schedule=None, single=True)
+    us = (time.perf_counter_ns() - t0) / ITERS / 1e3
+    return Row("faults/health_off/setup_fastpath", us, "health=off")
+
+
+def run() -> list:
+    rows = _ladder_rows()
+    rows.append(_recovery_row())
+    rows.append(_health_off_row())
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="accepted for CI-step uniformity (the chaos rows "
+                         "are already smoke-sized)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    rows = run()
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row.csv(), flush=True)
+    if args.json:
+        payload = [{"name": r.name, "us_per_call": round(r.us, 2),
+                    "derived": r.derived, **r.extra} for r in rows]
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload)} rows to {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

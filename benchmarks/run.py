@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV:
 * bench_calibration    → DESIGN.md §4.4c (model error, cold vs fitted)
 * bench_step_capture   → DESIGN.md §2.4 (captured vs uncaptured step)
 * bench_collectives    → paper §6 future work (multipath collectives)
+* bench_faults         → DESIGN.md §4.6 (degraded-mode ladder + recovery)
 
 ``--smoke`` shrinks every size sweep to its smallest point (CI's tier-1
 benchmark smoke step); ``--json PATH`` additionally writes the rows as a
@@ -33,14 +34,15 @@ def _apply_smoke() -> None:
 
 def collect() -> list:
     from benchmarks import (bench_calibration, bench_collectives,
-                            bench_dispatch, bench_graph_overhead,
-                            bench_jacobi, bench_omb_bibw, bench_omb_bw,
-                            bench_put_bw, bench_step_capture)
+                            bench_dispatch, bench_faults,
+                            bench_graph_overhead, bench_jacobi,
+                            bench_omb_bibw, bench_omb_bw, bench_put_bw,
+                            bench_step_capture)
 
     rows = []
     for mod in (bench_put_bw, bench_omb_bw, bench_omb_bibw, bench_jacobi,
                 bench_graph_overhead, bench_dispatch, bench_calibration,
-                bench_step_capture, bench_collectives):
+                bench_step_capture, bench_collectives, bench_faults):
         rows.extend(mod.run())
     return rows
 

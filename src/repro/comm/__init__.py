@@ -14,6 +14,7 @@ caching. Layering (DESIGN.md §1):
 * :mod:`repro.comm.telemetry`   — per-dispatch stage-timing recorder (§4.4c)
 * :mod:`repro.comm.calibration` — measured-feedback model fitting (§4.4c)
 * :mod:`repro.comm.collectives` — bidirectional-ring collectives
+* :mod:`repro.comm.health`      — link-fault injection + health monitor (§4.6)
 * :mod:`repro.comm.engine`      — executable transfer engine (shard_map)
 * :mod:`repro.comm.session`     — :class:`CommSession` facade
 
@@ -62,6 +63,9 @@ from repro.comm.collectives import (  # noqa: F401
     bidir_ring_all_gather, bidir_ring_reduce_scatter, modeled_all_reduce_s,
     multipath_all_reduce, multipath_all_to_all, psum_via_multipath,
     select_all_reduce_strategy, tier_bandwidths_gbps, two_level_all_reduce)
+from repro.comm.health import (  # noqa: F401
+    LADDER, CommFaultError, FaultEvent, FaultInjector, HealthMonitor,
+    HealthStats, LinkFaultError)
 from repro.comm.engine import (  # noqa: F401
     AXIS, GroupKey, MultiPathTransfer, group_signature,
     multipath_send_local, plan_signature)

@@ -63,6 +63,10 @@ class PlanLifecycle:
     #: Cumulative nanoseconds spent dispatching operand staging (host-
     #: side enqueue) across every launch of this executable.
     staging_ns: int = 0
+    #: Launch attempts of this executable that raised a link fault and
+    #: were retried on a re-planned route (DESIGN §4.6). Windowed like
+    #: ``launches``; a healthy window reports 0.
+    retries: int = 0
 
     @property
     def build_ns(self) -> int:
@@ -77,7 +81,8 @@ class PlanLifecycle:
 
     def reset_window(self) -> None:
         """Zero the *per-window* accumulators (launches,
-        ``total_launch_ns``, ``staging_ns``, ``fastpath_hits``) so
+        ``total_launch_ns``, ``staging_ns``, ``fastpath_hits``,
+        ``retries``) so
         long-running sessions can report rates instead of lifetime sums
         — the ``stats(reset=True)`` windowed-counter contract. The
         one-time build timings (trace/lower/compile) are preserved:
@@ -86,6 +91,7 @@ class PlanLifecycle:
         self.total_launch_ns = 0
         self.staging_ns = 0
         self.fastpath_hits = 0
+        self.retries = 0
 
 
 @dataclasses.dataclass

@@ -294,9 +294,21 @@ def select_all_reduce_strategy(topo: Topology, nbytes: int,
     ``"flat"`` / ``"two_level"`` force the layout but still return both
     modeled times, so ``session.describe()`` and the benchmarks can
     report the flat-vs-hierarchical delta either way.
+
+    Degradation invariant (DESIGN §4.6): a forced ``"two_level"``
+    falls back to ``"flat"`` when the two-level decomposition models
+    infinite time — every egress link of some island has failed, so
+    the inter-island exchange phase cannot run. The fault model feeds
+    this automatically: failed links vanish from ``topo.links`` and
+    degraded links price at their scaled bandwidth, so the modeled
+    times here already reflect the surviving fabric.
     """
     times = {"flat": modeled_all_reduce_s(topo, nbytes, "flat"),
              "two_level": modeled_all_reduce_s(topo, nbytes, "two_level")}
+    if strategy == "two_level" and times["two_level"] == float("inf"):
+        # Egress fabric gone — serve the reduction on the flat ring
+        # rather than raising mid-collective.
+        return "flat", times
     if strategy in ("flat", "two_level"):
         return strategy, times
     if strategy != "auto":

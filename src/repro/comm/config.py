@@ -37,6 +37,22 @@ Environment variables read by :meth:`from_env`:
 * ``REPRO_MP_COLLECTIVES`` — all-reduce layout on hierarchical
   topologies (auto | flat | two_level; DESIGN §3.1 — ``auto`` lets the
   §4.4 tier model arbitrate, flat is forced on single-island topologies)
+* ``REPRO_MP_HEALTH``      — "1"/"0" link-health monitoring + degraded-mode
+  dispatch (default on; DESIGN §4.6 — off skips monitor construction; the
+  healthy dispatch path costs one boolean either way)
+* ``REPRO_MP_FAULTS``      — chaos schedule applied by a
+  :class:`repro.comm.health.FaultInjector`
+  (e.g. ``"fail@12:0-1;restore@40:0-1"``; empty = no injector)
+* ``REPRO_MP_DROOP_THRESHOLD`` — measured/modeled residual ratio above
+  which a sample counts as a droop breach (default 2.0)
+* ``REPRO_MP_DROOP_SAMPLES``   — consecutive breaches before quarantine (3)
+* ``REPRO_MP_RETRY_LIMIT``     — dispatch retries per ladder rung (2)
+* ``REPRO_MP_BACKOFF_S``       — base of the bounded exponential retry
+  backoff, seconds (default 0.001; doubles per retry, capped at 50 ms)
+* ``REPRO_MP_PROBE_HEALTHY``   — consecutive healthy probes to readmit (2)
+* ``REPRO_MP_PROBE_INTERVAL``  — dispatches between automatic probes (16)
+* ``REPRO_MP_RECOVERY_RATIO``  — served/nominal bandwidth floor a probe
+  accepts as healthy (default 0.5)
 """
 
 from __future__ import annotations
@@ -84,6 +100,13 @@ def _env_bool(name: str, default: bool) -> bool:
     return v.strip() not in ("0", "false", "False", "")
 
 
+def _env_float(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
     """Frozen configuration for one :class:`~repro.comm.session.CommSession`.
@@ -109,6 +132,15 @@ class CommConfig:
     telemetry_capacity: int = 2048
     profile_dir: str = ""
     collective_strategy: str = "auto"
+    health: bool = True
+    faults: str = ""
+    droop_threshold: float = 2.0
+    droop_samples: int = 3
+    retry_limit: int = 2
+    backoff_base_s: float = 0.001
+    probe_healthy: int = 2
+    probe_interval: int = 16
+    recovery_ratio: float = 0.5
 
     def __post_init__(self) -> None:
         if self.max_paths < 1:
@@ -145,6 +177,27 @@ class CommConfig:
             raise ValueError(
                 f"unknown collective strategy {self.collective_strategy!r}; "
                 f"expected one of {COLLECTIVE_STRATEGIES}")
+        if self.droop_threshold <= 0:
+            raise ValueError("droop_threshold must be > 0, got "
+                             f"{self.droop_threshold}")
+        if self.droop_samples < 1:
+            raise ValueError(
+                f"droop_samples must be >= 1, got {self.droop_samples}")
+        if self.retry_limit < 0:
+            raise ValueError(
+                f"retry_limit must be >= 0, got {self.retry_limit}")
+        if self.backoff_base_s < 0:
+            raise ValueError(
+                f"backoff_base_s must be >= 0, got {self.backoff_base_s}")
+        if self.probe_healthy < 1:
+            raise ValueError(
+                f"probe_healthy must be >= 1, got {self.probe_healthy}")
+        if self.probe_interval < 1:
+            raise ValueError(
+                f"probe_interval must be >= 1, got {self.probe_interval}")
+        if not 0.0 < self.recovery_ratio <= 1.0:
+            raise ValueError("recovery_ratio must be in (0, 1], got "
+                             f"{self.recovery_ratio}")
 
     @classmethod
     def from_env(cls, **overrides) -> "CommConfig":
@@ -174,6 +227,21 @@ class CommConfig:
                                        cls.profile_dir),
             collective_strategy=os.environ.get("REPRO_MP_COLLECTIVES",
                                                cls.collective_strategy),
+            health=_env_bool("REPRO_MP_HEALTH", cls.health),
+            faults=os.environ.get("REPRO_MP_FAULTS", cls.faults),
+            droop_threshold=_env_float("REPRO_MP_DROOP_THRESHOLD",
+                                       cls.droop_threshold),
+            droop_samples=_env_int("REPRO_MP_DROOP_SAMPLES",
+                                   cls.droop_samples),
+            retry_limit=_env_int("REPRO_MP_RETRY_LIMIT", cls.retry_limit),
+            backoff_base_s=_env_float("REPRO_MP_BACKOFF_S",
+                                      cls.backoff_base_s),
+            probe_healthy=_env_int("REPRO_MP_PROBE_HEALTHY",
+                                   cls.probe_healthy),
+            probe_interval=_env_int("REPRO_MP_PROBE_INTERVAL",
+                                    cls.probe_interval),
+            recovery_ratio=_env_float("REPRO_MP_RECOVERY_RATIO",
+                                      cls.recovery_ratio),
         )
         values.update(overrides)
         return cls(**values)

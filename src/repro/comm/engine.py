@@ -65,6 +65,8 @@ from repro.comm.capture import CapturedStep, StepCapture, emit_step, lower_step
 from repro.compat import shard_map
 from repro.comm.config import VALIDATE_MODES, _env_bool
 from repro.comm.graph import ComputeNode, TransferGraph, lower
+from repro.comm.health import (LADDER, CommFaultError, FaultInjector,
+                               HealthMonitor, HealthStats, LinkFaultError)
 from repro.comm.passes import AutoSchedule, GraphPass, apply_schedule
 from repro.comm.plan import TransferGroup, TransferPlan, TransferRequest
 from repro.comm.planner import PathPlanner
@@ -258,7 +260,11 @@ class MultiPathTransfer:
                  fastpath: bool | None = None,
                  validate: str | None = None,
                  fastpath_cache: FastPathCache | None = None,
-                 telemetry: TimelineRecorder | None = None):
+                 telemetry: TimelineRecorder | None = None,
+                 monitor: HealthMonitor | None = None,
+                 faults: FaultInjector | None = None,
+                 retry_limit: int = 2,
+                 backoff_base_s: float = 0.001):
         if mesh is None:
             devs = jax.devices()
             mesh = jax.sharding.Mesh(devs, (AXIS,))
@@ -342,6 +348,22 @@ class MultiPathTransfer:
         self.edges_compiled = 0
         self.copy_nodes_compiled = 0
         self.compute_nodes_compiled = 0
+        #: Degraded-mode accounting (DESIGN §4.6): retries/replans/ladder
+        #: level, surfaced as the ``health`` stats section. Always
+        #: present so counters exist whether or not a monitor is wired.
+        self.health = HealthStats()
+        #: Optional telemetry-driven link health monitor; when attached,
+        #: dispatch faults quarantine through it (events logged) and the
+        #: degraded loop probes quarantined links on its cadence.
+        self.monitor = monitor
+        #: Optional deterministic chaos injector (``REPRO_MP_FAULTS``);
+        #: fires before each dispatch resolves so epoch bumps always
+        #: precede planning — no stale executable survives an injection.
+        self.faults = faults
+        #: Retries per degradation-ladder rung before escalating, and
+        #: the bounded exponential backoff base between them (§4.6).
+        self.retry_limit = retry_limit
+        self.backoff_base_s = backoff_base_s
 
     # -- planning -----------------------------------------------------------
     def plan_for(self, src: int, dst: int, nelems: int, dtype=jnp.float32,
@@ -854,9 +876,243 @@ class MultiPathTransfer:
 
         Returns the step outputs device-stacked ``(num_devices,
         *local_shape)``, aligned with the capture's declared outputs.
+
+        Under fault state (§4.6 hazard: live injector, quarantined or
+        failed links) the captured step retries with bounded backoff —
+        each :class:`~repro.comm.health.LinkFaultError` quarantines the
+        blamed links so the re-resolve re-plans over surviving routes
+        (``plan_group_for`` naturally narrows the path set; there is no
+        host rung for captured steps). Exhaustion raises
+        :class:`~repro.comm.health.CommFaultError` with the attempt
+        history; the healthy path is byte-identical to before.
         """
-        entry = self.resolve_step(step, schedule)
-        return self._launch_step(entry, arrays, block=block)
+        if self.faults is not None:
+            self.faults.on_dispatch(self)
+        if not self._hazard():
+            entry = self.resolve_step(step, schedule)
+            return self._launch_step(entry, arrays, block=block)
+        hs = self.health
+        delay = self.backoff_base_s
+        history: list[str] = []
+        for attempt in range(self.retry_limit + 2):
+            if attempt:
+                hs.replans += 1
+            try:
+                entry = self.resolve_step(step, schedule)
+                self._fault_check(entry)
+                out = self._launch_step(entry, arrays, block=block)
+                level = self._steady_rung(0)
+                if hs.ladder_level != level:
+                    hs.note("ladder", level=level, rung=LADDER[level],
+                            dispatch=self.dispatches)
+                hs.ladder_level = level
+                if self.monitor is not None:
+                    self.monitor.maybe_probe(self)
+                return out
+            except LinkFaultError as exc:
+                history.append(f"step: {exc}")
+                self._note_fault(exc, 1)
+                if delay > 0:
+                    time.sleep(delay)
+                    delay = min(delay * 2, 0.05)
+            except ValueError as exc:
+                history.append(f"step: {exc}")
+                raise CommFaultError(
+                    f"captured-step ladder exhausted: {exc}",
+                    history) from exc
+        raise CommFaultError(
+            "captured-step dispatch failed after retries", history)
+
+    # -- degraded-mode dispatch (DESIGN §4.6) -------------------------------
+    def _hazard(self) -> bool:
+        """True while any fault state can affect dispatch: a live
+        injector, quarantined links, or failed topology links. The
+        healthy path costs exactly these boolean reads — the §4.6
+        zero-overhead-off contract."""
+        return ((self.faults is not None and self.faults.active)
+                or bool(self.planner.quarantined)
+                or bool(self.topology.failed_links))
+
+    def _fault_check(self, entry) -> None:
+        """Validate a resolved entry against the live fault state.
+
+        Raises :class:`~repro.comm.health.LinkFaultError` when the entry
+        still routes over a failed or quarantined link (a fault landed
+        between resolve and launch) or when the injector's active drop
+        window blames one of the entry's links — the §4.6 invariant that
+        no launch is ever issued onto a link known to be down.
+        """
+        links = tuple({link for p in entry.plans
+                       for link in p.directional_links()})
+        failed = self.topology.failed_links
+        quarantined = self.planner.quarantined
+        bad = [link for link in links
+               if link in failed or link in quarantined]
+        if bad:
+            raise LinkFaultError(bad, "entry routes over faulted links")
+        if self.faults is not None:
+            link = self.faults.dropped_link(self.dispatches, links)
+            if link is not None:
+                raise LinkFaultError((link,), "injected dispatch drop")
+
+    def _note_fault(self, exc: LinkFaultError, rung: int) -> None:
+        """Account one failed attempt: bump the retry counter, log the
+        event, and quarantine the blamed links (through the monitor when
+        attached, so the event stream stays unified) — the epoch bump
+        this causes is what makes the following re-resolve a re-plan
+        over surviving links."""
+        hs = self.health
+        hs.retries += 1
+        hs.note("retry", rung=LADDER[min(rung, len(LADDER) - 1)],
+                links=list(exc.links), reason=exc.reason,
+                dispatch=self.dispatches)
+        for link in exc.links:
+            if link in self.topology.failed_links:
+                continue  # physically gone; quarantine is for suspects
+            if self.monitor is not None:
+                self.monitor.quarantine_link(link, reason=exc.reason,
+                                             dispatch=self.dispatches)
+            else:
+                self.planner.quarantine(link)
+
+    def _steady_rung(self, rung: int) -> int:
+        """The :data:`~repro.comm.health.LADDER` level to record for a
+        successful dispatch at ``rung``: multipath rungs report
+        ``surviving_multipath`` whenever fault state constrained the
+        route set (the invariant that ``ladder_level == 0`` means the
+        full healthy plan)."""
+        if rung >= 2:
+            return rung
+        if self.planner.quarantined or self.topology.failed_links:
+            return 1
+        return 0
+
+    def _host_relay(self, specs: Sequence[tuple],
+                    messages: Sequence[jax.Array],
+                    history: Sequence[str]) -> list[jax.Array]:
+        """Last ladder rung: deliver each message through a host (PCIe)
+        round-trip — a device_get/device_put staging relay, the
+        executable adaptation of the paper's host-staged path.
+
+        Delivery over bandwidth: payloads arrive intact (the §4.5
+        integrity contract still holds) at host-link speed, outside the
+        compiled graph. Requires nominal host links on both endpoints;
+        raises :class:`~repro.comm.health.CommFaultError` (the ladder is
+        exhausted) when any message lacks them.
+        """
+        topo = self.topology
+        for (src, dst, _, _) in specs:
+            if (topo.link(src, HOST) is None
+                    or topo.link(HOST, dst) is None):
+                raise CommFaultError(
+                    f"degradation ladder exhausted for {src}->{dst}: no "
+                    f"surviving device route and no host-staged route",
+                    history)
+        outs = []
+        for (_, _, _, dtype), m in zip(specs, messages):
+            staged = jax.device_get(m)           # PCIe pull to host
+            outs.append(jnp.asarray(staged, dtype))  # PCIe push to dst
+        hs = self.health
+        hs.host_relays += 1
+        hs.ladder_level = 3
+        hs.note("host_relay", messages=len(specs),
+                dispatch=self.dispatches)
+        self.dispatches += 1
+        return outs
+
+    def _dispatch(self, specs: Sequence[tuple],
+                  messages: Sequence[jax.Array], *, window: int,
+                  max_paths: int | None, num_chunks: int | None,
+                  exclusive: bool, schedule: str | GraphPass | None,
+                  single: bool, block: bool) -> list[jax.Array]:
+        """Resolve + launch one request, degradation-aware (§4.6).
+
+        Healthy state (no injector activity, no quarantine, no failed
+        links) is the unchanged fast path: resolve, launch, done —
+        exceptions propagate exactly as before, preserving every
+        caller-visible contract (e.g. ``exclusive=True`` starvation
+        raises). Under fault state the request walks
+        :data:`~repro.comm.health.LADDER` instead.
+        """
+        if self.faults is not None:
+            self.faults.on_dispatch(self)
+        if not self._hazard():
+            hs = self.health
+            if hs.ladder_level:
+                hs.ladder_level = 0  # fully recovered
+            entry = self._resolve(specs, window=window,
+                                  max_paths=max_paths,
+                                  num_chunks=num_chunks,
+                                  exclusive=exclusive, schedule=schedule,
+                                  single=single)
+            return self._launch(entry, messages, block=block)
+        return self._dispatch_degraded(
+            specs, messages, window=window, max_paths=max_paths,
+            num_chunks=num_chunks, exclusive=exclusive, schedule=schedule,
+            single=single, block=block)
+
+    def _dispatch_degraded(self, specs: Sequence[tuple],
+                           messages: Sequence[jax.Array], *, window: int,
+                           max_paths: int | None, num_chunks: int | None,
+                           exclusive: bool,
+                           schedule: str | GraphPass | None,
+                           single: bool, block: bool) -> list[jax.Array]:
+        """Walk the §4.6 degradation ladder until the request delivers.
+
+        Rung 0 resolves the request as asked; each
+        :class:`~repro.comm.health.LinkFaultError` quarantines the
+        blamed links (an epoch bump — the next resolve IS a re-plan over
+        surviving links), sleeps the bounded exponential backoff, and
+        retries up to ``retry_limit`` times per rung. A rung with no
+        admissible route (planner ``ValueError``) escalates immediately:
+        surviving multipath → single best path → host-staged relay.
+        Degraded rungs drop the ``exclusive`` guarantee (delivery over
+        exclusivity — documented in DESIGN §4.6); every launched plan
+        still passes the same §4.5 validation as healthy traffic. Only
+        when every rung is exhausted does
+        :class:`~repro.comm.health.CommFaultError` reach the caller.
+        """
+        hs = self.health
+        delay = self.backoff_base_s
+        history: list[str] = []
+        failed_once = False
+        rungs = ((0, max_paths, 1),
+                 (1, max_paths, self.retry_limit + 1),
+                 (2, 1, self.retry_limit + 1))
+        for rung, rung_paths, attempts in rungs:
+            for _ in range(attempts):
+                if failed_once:
+                    hs.replans += 1
+                try:
+                    entry = self._resolve(
+                        specs, window=window, max_paths=rung_paths,
+                        num_chunks=num_chunks,
+                        exclusive=exclusive and rung == 0,
+                        schedule=schedule, single=single)
+                    self._fault_check(entry)
+                    out = self._launch(entry, messages, block=block)
+                    level = self._steady_rung(rung)
+                    if hs.ladder_level != level:
+                        hs.note("ladder", level=level,
+                                rung=LADDER[level],
+                                dispatch=self.dispatches)
+                    hs.ladder_level = level
+                    if self.monitor is not None:
+                        self.monitor.maybe_probe(self)
+                    return out
+                except LinkFaultError as exc:
+                    failed_once = True
+                    history.append(f"{LADDER[rung]}: {exc}")
+                    entry.compiled.lifecycle.retries += 1
+                    self._note_fault(exc, rung)
+                    if delay > 0:
+                        time.sleep(delay)
+                        delay = min(delay * 2, 0.05)
+                except ValueError as exc:
+                    failed_once = True
+                    history.append(f"{LADDER[rung]}: {exc}")
+                    break  # no admissible route at this rung: escalate
+        return self._host_relay(specs, messages, history)
 
     # -- public API ---------------------------------------------------------
     def transfer(self, message: jax.Array, src: int, dst: int, *,
@@ -877,11 +1133,11 @@ class MultiPathTransfer:
         message = jnp.asarray(message)
         if message.ndim != 1:
             raise ValueError("message must be 1-D; reshape first")
-        entry = self._resolve(
-            [(src, dst, message.shape[0], message.dtype)], window=window,
-            max_paths=max_paths, num_chunks=num_chunks, exclusive=False,
-            schedule=schedule, single=True)
-        return self._launch(entry, [message], block=block)[0]
+        return self._dispatch(
+            [(src, dst, message.shape[0], message.dtype)], [message],
+            window=window, max_paths=max_paths, num_chunks=num_chunks,
+            exclusive=False, schedule=schedule, single=True,
+            block=block)[0]
 
     def transfer_group(self, messages: Sequence[jax.Array],
                        pairs: Sequence[tuple[int, int]], *,
@@ -920,11 +1176,11 @@ class MultiPathTransfer:
         order = sorted(range(len(msgs)),
                        key=lambda i: (specs[i][0], specs[i][1],
                                       specs[i][2], str(specs[i][3])))
-        entry = self._resolve([specs[i] for i in order], window=window,
+        outs = self._dispatch([specs[i] for i in order],
+                              [msgs[i] for i in order], window=window,
                               max_paths=max_paths, num_chunks=num_chunks,
                               exclusive=exclusive, schedule=schedule,
-                              single=False)
-        outs = self._launch(entry, [msgs[i] for i in order], block=block)
+                              single=False, block=block)
         inverse = {i: k for k, i in enumerate(order)}
         return [outs[inverse[i]] for i in range(len(msgs))]
 
@@ -1002,6 +1258,8 @@ class MultiPathTransfer:
             # auto's candidate-score memo (keyed on digest + topology
             # epoch): hits are selections answered without re-scoring.
             "schedule_scores": AutoSchedule.score_stats(reset=reset),
+            "health": self.health.snapshot(
+                len(self.planner.quarantined), self.monitor is not None),
         }
         if self.telemetry is not None:
             out["telemetry"] = self.telemetry.stats()
@@ -1013,4 +1271,5 @@ class MultiPathTransfer:
             self.copy_nodes_compiled = 0
             self.compute_nodes_compiled = 0
             self.schedule_counts = {}
+            self.health.reset_window()
         return out

@@ -53,7 +53,7 @@ _GREEDY = GreedyBandwidthPolicy()
 #: fast-path entry stamped with an older epoch.
 _EPOCH_ATTRS = frozenset({
     "topology", "config", "max_paths", "chunk_bytes", "max_chunks",
-    "include_host", "multipath_threshold", "policy"})
+    "include_host", "multipath_threshold", "policy", "quarantined"})
 
 
 class PathPlanner:
@@ -99,6 +99,11 @@ class PathPlanner:
             else multipath_threshold)
         self.policy = policy if policy is not None else make_policy(
             config.policy)
+        #: Directional links excluded from route admission (DESIGN §4.6):
+        #: the health monitor quarantines suspect links here; reassignment
+        #: bumps :attr:`epoch`, so every fast-path entry routed over a
+        #: newly-quarantined link is invalidated on the next lookup.
+        self.quarantined: frozenset[tuple[int, int]] = frozenset()
         self._track_mutations = True
 
     def __setattr__(self, name: str, value) -> None:
@@ -121,9 +126,38 @@ class PathPlanner:
         """
         return (self._uid, self._epoch, *self.topology.epoch)
 
+    # -- quarantine (link health, DESIGN §4.6) ------------------------------
+    def quarantine(self, *links: tuple[int, int]) -> None:
+        """Exclude directional links from route admission.
+
+        Quarantine is planner-level suspicion, distinct from a topology
+        ``fail_link`` (the link still physically exists — health probes
+        may traverse it via ``admit_quarantined=True``). Reassigning the
+        set bumps :attr:`epoch`, invalidating every cached plan routed
+        over a newly-quarantined link; a no-op call (links already
+        quarantined) preserves the epoch.
+        """
+        add = frozenset(tuple(link) for link in links)
+        if add - self.quarantined:
+            self.quarantined = self.quarantined | add
+
+    def readmit(self, *links: tuple[int, int]) -> None:
+        """Re-admit quarantined links into route admission.
+
+        The inverse of :meth:`quarantine` — called by the health
+        monitor after the probe contract is met (consecutive healthy
+        probes). Bumps :attr:`epoch` when the set actually shrinks, so
+        degraded-mode plans are invalidated and steady-state traffic
+        returns to the full route set (and its pre-fault plan digest).
+        """
+        drop = frozenset(tuple(link) for link in links)
+        if drop & self.quarantined:
+            self.quarantined = self.quarantined - drop
+
     # -- route enumeration --------------------------------------------------
     def enumerate_routes(self, src: int, dst: int,
-                         include_host: bool | None = None) -> list[Route]:
+                         include_host: bool | None = None, *,
+                         admit_quarantined: bool = False) -> list[Route]:
         """All 1- and 2-hop routes src→dst, best (direct, then by bw) first.
 
         Staged routes never reuse a directional link of the direct route, so
@@ -135,15 +169,27 @@ class PathPlanner:
         touches an inter-node link — while cross-island requests delegate
         to the staged enumeration (fan-out to an egress device, exactly
         one inter-node hop, fan-in), see :meth:`cross_island_routes`.
+
+        Quarantined links (DESIGN §4.6) are treated as absent — no
+        admitted route crosses one, the degraded-mode exclusion
+        invariant — unless ``admit_quarantined=True`` (health probes
+        must be able to traverse the very link under suspicion).
         """
         if src == dst:
             raise ValueError("src == dst")
         topo = self.topology
         include_host = (self.include_host if include_host is None
                         else include_host)
+        quarantined = (frozenset() if admit_quarantined
+                       else self.quarantined)
+
+        def usable(a: int, b: int):
+            return None if (a, b) in quarantined else topo.link(a, b)
+
         hierarchical = topo.num_islands > 1
         if hierarchical and topo.node_of(src) != topo.node_of(dst):
-            return self.cross_island_routes(src, dst)
+            return self.cross_island_routes(
+                src, dst, admit_quarantined=admit_quarantined)
         island = topo.node_of(src) if hierarchical else None
 
         def in_island(dev: int) -> bool:
@@ -151,7 +197,7 @@ class PathPlanner:
                     or topo.node_of(dev) == island)
 
         routes: list[Route] = []
-        direct = topo.link(src, dst)
+        direct = usable(src, dst)
         if direct is not None:
             routes.append(Route(src, dst, None, (direct,),
                                 direct.bandwidth_gbps))
@@ -160,7 +206,7 @@ class PathPlanner:
         if include_host:
             vias.append(HOST)
         for via in vias:
-            h1, h2 = topo.link(src, via), topo.link(via, dst)
+            h1, h2 = usable(src, via), usable(via, dst)
             if h1 is None or h2 is None:
                 continue
             routes.append(Route(src, dst, via, (h1, h2),
@@ -185,8 +231,8 @@ class PathPlanner:
                         continue
                     if v2 == HOST and not include_host:
                         continue
-                    h1, h2, h3 = (topo.link(src, v1), topo.link(v1, v2),
-                                  topo.link(v2, dst))
+                    h1, h2, h3 = (usable(src, v1), usable(v1, v2),
+                                  usable(v2, dst))
                     if h1 is None or h2 is None or h3 is None:
                         continue
                     links = {(src, v1), (v1, v2), (v2, dst)}
@@ -204,7 +250,8 @@ class PathPlanner:
                                    -r.bottleneck_gbps))
         return routes
 
-    def cross_island_routes(self, src: int, dst: int) -> list[Route]:
+    def cross_island_routes(self, src: int, dst: int, *,
+                            admit_quarantined: bool = False) -> list[Route]:
         """Staged routes across a node boundary, best-first (§4.4/§3.1).
 
         One candidate per inter-node link whose endpoints sit in the
@@ -214,28 +261,39 @@ class PathPlanner:
         one** inter-node link (the hierarchical-routing invariant the
         property suite validates). Candidates are filtered best-first to
         a link-disjoint set, preserving the §4.5 exclusivity contract
-        policies assume of their route lists.
+        policies assume of their route lists. Quarantined links are
+        excluded like failed ones (DESIGN §4.6) unless
+        ``admit_quarantined=True``.
         """
         topo = self.topology
         src_island, dst_island = topo.node_of(src), topo.node_of(dst)
         if src_island == dst_island:
             raise ValueError(f"{src}->{dst} is intra-island "
                              f"(island {src_island})")
+        quarantined = (frozenset() if admit_quarantined
+                       else self.quarantined)
+
+        def usable(a: int, b: int):
+            return None if (a, b) in quarantined else topo.link(a, b)
+
         cands: list[Route] = []
         for (a, b) in topo.links:
             if a == HOST or b == HOST:
                 continue
             if topo.node_of(a) != src_island or topo.node_of(b) != dst_island:
                 continue
+            inter = usable(a, b)
+            if inter is None:
+                continue
             hops = []
             if a != src:
-                fan_out = topo.link(src, a)
+                fan_out = usable(src, a)
                 if fan_out is None:
                     continue
                 hops.append(fan_out)
-            hops.append(topo.link(a, b))
+            hops.append(inter)
             if b != dst:
-                fan_in = topo.link(b, dst)
+                fan_in = usable(b, dst)
                 if fan_in is None:
                     continue
                 hops.append(fan_in)
@@ -287,11 +345,16 @@ class PathPlanner:
              include_host: bool | None = None,
              num_chunks: int | None = None,
              granularity: int = 1,
-             policy: PathPolicy | None = None) -> TransferPlan:
+             policy: PathPolicy | None = None,
+             admit_quarantined: bool = False) -> TransferPlan:
         """Build the 2-D transfer plan (Algorithm 1 lines 4–11).
 
         ``policy`` overrides the planner's strategy for this call only
         (used by the tuner to score greedy candidates without recursing).
+        ``admit_quarantined=True`` lifts the §4.6 quarantine exclusion
+        for this call — the health-probe escape hatch; every other plan
+        preserves the invariant that no route crosses a quarantined
+        link.
         """
         if nbytes <= 0:
             raise ValueError("nbytes must be positive")
@@ -304,7 +367,8 @@ class PathPlanner:
             max_paths = self.max_paths
         include_host = (self.include_host if include_host is None
                         else include_host)
-        routes = self.enumerate_routes(src, dst, include_host=include_host)
+        routes = self.enumerate_routes(src, dst, include_host=include_host,
+                                       admit_quarantined=admit_quarantined)
         if not routes:
             raise ValueError(
                 f"no route {src}->{dst} in topology {self.topology.name}")

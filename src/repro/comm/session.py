@@ -55,6 +55,7 @@ from repro.compat import shard_map
 from repro.comm.config import CommConfig
 from repro.comm.engine import MultiPathTransfer
 from repro.comm.graph import canonical_digest, lower
+from repro.comm.health import FaultInjector, HealthMonitor, HealthStats
 from repro.comm.passes import GraphPass
 from repro.comm.plan import TransferPlan
 from repro.comm.planner import PathPlanner
@@ -152,6 +153,29 @@ class CommSession:
         self.telemetry = TimelineRecorder(
             capacity=self.config.telemetry_capacity,
             enabled=True if self.config.telemetry else None)
+        #: Link-health monitor (DESIGN §4.6): watches telemetry residuals
+        #: for droop, quarantines suspect links on the planner, and
+        #: re-admits them after healthy probes. ``config.health`` /
+        #: ``REPRO_MP_HEALTH`` gates construction — with it off the
+        #: session carries no monitor and dispatch pays nothing.
+        self.monitor: HealthMonitor | None = None
+        if self.config.health:
+            self.monitor = HealthMonitor(
+                self.topology, self.planner,
+                droop_threshold=self.config.droop_threshold,
+                droop_samples=self.config.droop_samples,
+                probe_healthy=self.config.probe_healthy,
+                recovery_ratio=self.config.recovery_ratio,
+                probe_interval=self.config.probe_interval)
+            # Droop detection rides the telemetry ring's observer hook
+            # (fires only while telemetry is enabled — the zero-cost-off
+            # contract is the recorder's, not duplicated here).
+            self.telemetry.on_record = self.monitor.observe
+        #: Deterministic chaos injector parsed from ``config.faults`` /
+        #: ``REPRO_MP_FAULTS`` (empty spec → no injector, no hazard).
+        self.faults: FaultInjector | None = (
+            FaultInjector.from_spec(self.config.faults)
+            if self.config.faults else None)
         self._engine: MultiPathTransfer | None = None
         if self.config.profile_dir:
             self._load_calibration(self.config.profile_dir)
@@ -183,14 +207,19 @@ class CommSession:
         """The executable transfer engine (built on first use so planning-
         only sessions never initialize a device mesh)."""
         if self._engine is None:
-            self._engine = MultiPathTransfer(self.mesh,
-                                             topology=self.topology,
-                                             planner=self.planner,
-                                             cache=self.cache,
-                                             schedule=self.config.schedule,
-                                             fastpath=self.config.fastpath,
-                                             validate=self.config.validate,
-                                             telemetry=self.telemetry)
+            self._engine = MultiPathTransfer(
+                self.mesh,
+                topology=self.topology,
+                planner=self.planner,
+                cache=self.cache,
+                schedule=self.config.schedule,
+                fastpath=self.config.fastpath,
+                validate=self.config.validate,
+                telemetry=self.telemetry,
+                monitor=self.monitor,
+                faults=self.faults,
+                retry_limit=self.config.retry_limit,
+                backoff_base_s=self.config.backoff_base_s)
         return self._engine
 
     @property
@@ -559,6 +588,10 @@ class CommSession:
             # node boundary, and the flat-vs-two-level modeled
             # all-reduce delta for a payload of this size.
             "hierarchy": self._hierarchy_info(src, dst, nbytes),
+            # Fault state (§4.6): failed / degraded / quarantined links
+            # and the monitor's thresholds, so a dry-run shows whether
+            # this plan was produced under degradation.
+            "health": self._health_info(),
         }
 
     def _overlap_info(self, graph) -> dict:
@@ -604,6 +637,59 @@ class CommSession:
             }
         return info
 
+    def _health_info(self) -> dict:
+        """The ``describe()['health']`` section: whether monitoring is
+        enabled, the topology's failed/degraded/flaky link overlays, the
+        planner's quarantine set, and — when a monitor is attached — its
+        counters and thresholds. Pure state, JSON-able, no side effects:
+        the §4.6 visibility contract for dry-runs and reports."""
+        topo = self.topology
+        info: dict = {
+            "enabled": self.monitor is not None,
+            "failed": sorted(list(k) for k in topo.failed_links),
+            "degraded": {f"{a}-{b}": r
+                         for (a, b), r in sorted(
+                             topo.degraded_links.items())},
+            "quarantined": sorted(list(k)
+                                  for k in self.planner.quarantined),
+        }
+        if self.monitor is not None:
+            info["monitor"] = self.monitor.snapshot()
+        return info
+
+    def probe_links(self, nelems: int = 256) -> dict:
+        """Actively probe every quarantined link (DESIGN §4.6 recovery).
+
+        Each probe validates the link's served bandwidth against the
+        recovery threshold AND pushes a payload over exactly that link
+        through the compiled engine, verifying delivery intact (the
+        §4.5 integrity contract applied to re-admission). A link is
+        re-admitted only after ``probe_healthy`` consecutive healthy
+        probes (doubled for flaky-marked links). Returns ``{(src, dst):
+        ok}`` keyed by the probed links; empty when nothing is
+        quarantined or health is off.
+        """
+        if self.monitor is None:
+            return {}
+        return self.monitor.probe_all(self.engine, nelems=nelems)
+
+    def drain_health_events(self) -> list[dict]:
+        """Return and clear the accumulated health event log — injector
+        firings, retries, quarantines, probes, re-admissions, ladder
+        moves — merged in arrival order. Draining preserves counters
+        (``stats()['health']`` windows are unaffected); it exists so
+        supervisors like ``ResilientTrainLoop`` can fold comm-fault
+        history into their own event stream without double-reporting."""
+        events: list[dict] = []
+        eng = self._engine
+        if eng is not None:
+            events.extend(eng.health.events)
+            eng.health.events.clear()
+        if self.monitor is not None:
+            events.extend(self.monitor.events)
+            self.monitor.events.clear()
+        return events
+
     def _calibration_info(self) -> dict:
         """The ``describe()['calibration']`` section: live-profile
         summary and modeled-vs-measured residuals (constant vs fitted)
@@ -641,6 +727,13 @@ class CommSession:
         cumulative host-side staging-dispatch time (staging *execution*
         overlaps the launch and lands in the launch timings).
 
+        ``health`` is the §4.6 degradation ledger: ``retries`` /
+        ``replans`` / ``faults_seen`` / ``host_relays`` are windowed
+        counters (zeroed by ``reset=True`` like the rest), while
+        ``ladder_level`` and ``quarantined_links`` are live state and
+        survive resets — a reset must not forget that links are still
+        quarantined.
+
         ``reset=True`` returns the snapshot then zeroes every windowed
         counter (engine dispatches/staging, both caches, cached plans'
         windowed lifecycles) — rates instead of lifetime sums for
@@ -666,7 +759,10 @@ class CommSession:
                             "copy_nodes_compiled": 0,
                             "compute_nodes_compiled": 0},
                   "schedules": {},
-                  "schedule_scores": AutoSchedule.score_stats(reset=reset)}
+                  "schedule_scores": AutoSchedule.score_stats(reset=reset),
+                  "health": HealthStats().snapshot(
+                      len(self.planner.quarantined),
+                      self.monitor is not None)}
         return {
             "cache": es["cache"],
             "dispatches": es["dispatches"],
@@ -676,6 +772,7 @@ class CommSession:
             "schedule": self.config.schedule,
             "schedules": es["schedules"],
             "schedule_scores": es["schedule_scores"],
+            "health": es["health"],
             "topology": self.topology.name,
             "num_devices": self.topology.num_devices,
             "axis_name": self.axis_name,

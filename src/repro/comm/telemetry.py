@@ -159,17 +159,30 @@ class TimelineRecorder:
         self._kernels: dict[str, deque[float]] = {}
         self.recorded = 0
         self.dropped = 0
+        #: Optional observer fired with each recorded sample — the hook
+        #: the health monitor's droop detection rides (DESIGN §4.6). It
+        #: runs AFTER the enabled check, preserving the zero-cost-off
+        #: contract, and its exceptions are swallowed: observation must
+        #: never fail a dispatch.
+        self.on_record = None
 
     def record(self, sample: DispatchSample) -> None:
         """Append one sample (no-op while disabled). Preserves the ring
         bound: at capacity the oldest sample is evicted and counted in
-        :attr:`dropped` — the dispatch is never blocked or failed."""
+        :attr:`dropped` — the dispatch is never blocked or failed. Fires
+        :attr:`on_record` (when set) with the sample; observer errors
+        are contained here."""
         if not self.enabled:
             return
         if len(self._ring) == self._ring.maxlen:
             self.dropped += 1
         self._ring.append(sample)
         self.recorded += 1
+        if self.on_record is not None:
+            try:
+                self.on_record(sample)
+            except Exception:
+                pass  # observation must never fail the dispatch
 
     def record_kernel(self, name: str, execute_ns: float) -> None:
         """Append one per-kernel execute measurement (no-op while

@@ -126,6 +126,14 @@ class Topology:
         #: shadows :meth:`link` serves while it is live.
         self._calibration: Any | None = None
         self._calibrated_links: dict[tuple[int, int], Link] = {}
+        #: Fault-model state (DESIGN §4.6): failed links are *removed*
+        #: from the nominal set (stashed here for :meth:`restore_link`),
+        #: degraded links keep their nominal entry but :meth:`link`
+        #: serves a bandwidth-scaled shadow, and flaky marks are advisory
+        #: metadata the health monitor reads for re-admission hysteresis.
+        self._failed: dict[tuple[int, int], Link] = {}
+        self._degraded: dict[tuple[int, int], float] = {}
+        self._flaky: set[tuple[int, int]] = set()
         for link in links:
             self._register(link)
 
@@ -183,14 +191,22 @@ class Topology:
 
     def add_link(self, link: Link) -> None:
         """Register a directional link after construction (aggregating
-        sublinks like the constructor does) and bump the plan epoch."""
+        sublinks like the constructor does) and bump the plan epoch.
+        Re-adding a currently-failed pair drops the failure stash — the
+        explicit registration supersedes the fault record, preserving
+        the invariant that a key is never both live and failed."""
+        self._failed.pop((link.src, link.dst), None)
         self._register(link)
         self.bump_epoch()
 
     def remove_link(self, src: int, dst: int) -> None:
-        """Drop the directional link ``src -> dst`` (e.g. a failed NVLink)
-        and bump the plan epoch; raises ``KeyError`` if absent."""
+        """Drop the directional link ``src -> dst`` permanently (unlike
+        :meth:`fail_link` there is no restore stash) and bump the plan
+        epoch; any droop/flaky overlay for the pair is cleared so no
+        fault state outlives the link. Raises ``KeyError`` if absent."""
         del self._links[(src, dst)]
+        self._degraded.pop((src, dst), None)
+        self._flaky.discard((src, dst))
         self.bump_epoch()
 
     # -- calibration (measured-feedback overlay, DESIGN §4.4c) -------------
@@ -250,6 +266,120 @@ class Topology:
             self._calibration = None
             self._calibrated_links = {}
         self._epoch += 1  # not bump_epoch(): digest unchanged, keep profile
+
+    # -- fault model (link health, DESIGN §4.6) ----------------------------
+    def fail_link(self, src: int, dst: int) -> None:
+        """Take the directional link ``src -> dst`` down (hard failure).
+
+        The link leaves the nominal set entirely — :meth:`link`,
+        :attr:`links`, :meth:`neighbors`, :meth:`egress_devices` and
+        :meth:`digest` all see the surviving machine shape, so every
+        planner/model consumer routes around it without special cases —
+        and is stashed so :meth:`restore_link` can reinstate it
+        *identically* (the digest-returns-to-pre-fault-value contract).
+        Bumps the plan epoch: no cached plan or fast-path entry built on
+        the failed link can ever be served again. Raises ``KeyError`` if
+        the link is absent or already failed.
+        """
+        key = (src, dst)
+        self._failed[key] = self._links.pop(key)
+        self.bump_epoch()
+
+    def restore_link(self, src: int, dst: int) -> None:
+        """Bring a faulted link back to nominal health.
+
+        Reinstates a failed link exactly as stashed by :meth:`fail_link`
+        (so :meth:`digest` returns to its pre-fault value when no other
+        mutation happened) and clears any degradation ratio and flaky
+        mark — restore means full nominal re-admission at the hardware
+        layer; quarantine re-admission stays the health monitor's probe
+        decision. Bumps the plan epoch so degraded-mode plans are
+        invalidated. Raises ``KeyError`` if the link carries no fault
+        state at all.
+        """
+        key = (src, dst)
+        if (key not in self._failed and key not in self._degraded
+                and key not in self._flaky):
+            raise KeyError(f"link {key} has no fault state to restore")
+        if key in self._failed:
+            self._register(self._failed.pop(key))
+        self._degraded.pop(key, None)
+        self._flaky.discard(key)
+        self.bump_epoch()
+
+    def degrade_link(self, src: int, dst: int, ratio: float) -> None:
+        """Droop the link's effective bandwidth to ``ratio`` × nominal.
+
+        A performance overlay in the :meth:`set_calibration` mold: the
+        nominal link stays registered (structural :meth:`digest`
+        unchanged, an attached calibration profile survives) but
+        :meth:`link` serves a bandwidth-scaled shadow, so every model
+        read — planner shares, §4.4 arbitration, collective tier
+        bandwidths — prices the droop automatically. Bumps the plan
+        epoch directly; ``ratio == 1.0`` clears the droop. Raises
+        ``ValueError`` for ratios outside ``(0, 1]`` and ``KeyError``
+        if the link is absent (or currently failed).
+        """
+        if not 0.0 < ratio <= 1.0:
+            raise ValueError(f"degrade ratio must be in (0, 1], got {ratio}")
+        key = (src, dst)
+        if key not in self._links:
+            raise KeyError(f"no link {key} to degrade")
+        if ratio == 1.0:
+            self._degraded.pop(key, None)
+        else:
+            self._degraded[key] = float(ratio)
+        self._epoch += 1  # digest unchanged: droop is an overlay
+
+    def mark_flaky(self, src: int, dst: int, flaky: bool = True) -> None:
+        """Mark (or clear) a link as flaky — advisory fault metadata.
+
+        A flaky link routes normally, but the health monitor demands a
+        longer consecutive-healthy probe streak before re-admitting it
+        from quarantine (hysteresis against flapping). Bumps the plan
+        epoch conservatively so monitors keyed on fault state observe
+        the change; the structural digest is preserved. Raises
+        ``KeyError`` if the link is absent from the nominal set.
+        """
+        key = (src, dst)
+        if key not in self._links and key not in self._failed:
+            raise KeyError(f"no link {key} to mark flaky")
+        if flaky:
+            self._flaky.add(key)
+        else:
+            self._flaky.discard(key)
+        self._epoch += 1  # digest unchanged: advisory overlay
+
+    @property
+    def failed_links(self) -> Mapping[tuple[int, int], Link]:
+        """Links currently failed (``(src, dst) -> stashed nominal
+        Link``) — invisible to every query until restored; the engine's
+        degraded-mode dispatch validates entries against this set."""
+        return self._failed
+
+    @property
+    def degraded_links(self) -> Mapping[tuple[int, int], float]:
+        """Live droop overlay ``(src, dst) -> ratio``; :meth:`link`
+        serves ``ratio × (calibrated or nominal)`` bandwidth while an
+        entry is present (structural digest preserved)."""
+        return self._degraded
+
+    @property
+    def flaky_links(self) -> frozenset:
+        """Links marked flaky — the health monitor's re-admission
+        hysteresis set (contract: advisory only, routing unchanged)."""
+        return frozenset(self._flaky)
+
+    def link_state(self, src: int, dst: int) -> str:
+        """Fault-model state of the directional link: ``"failed"``,
+        ``"degraded"``, ``"up"`` or ``"absent"`` — the single predicate
+        health probes validate a link against."""
+        key = (src, dst)
+        if key in self._failed:
+            return "failed"
+        if key in self._degraded:
+            return "degraded"
+        return "up" if key in self._links else "absent"
 
     # -- hierarchy (islands / node boundaries, DESIGN §3.1) ----------------
     @property
@@ -325,13 +455,23 @@ class Topology:
         """The directional link ``src -> dst`` (or ``None``). When a
         calibration profile is live, returns the fitted-bandwidth shadow
         of the nominal link — every model evaluation that reads
-        bandwidths through here consumes measured terms automatically."""
+        bandwidths through here consumes measured terms automatically.
+        A live droop overlay (:meth:`degrade_link`) scales the served
+        bandwidth on top, and a failed link is ``None`` until restored —
+        the fault model's invariant that no consumer can price or route
+        over a link that is down."""
         key = (src, dst)
+        base = None
         if self._calibrated_links:
-            hit = self._calibrated_links.get(key)
-            if hit is not None:
-                return hit
-        return self._links.get(key)
+            base = self._calibrated_links.get(key)
+        if base is None:
+            base = self._links.get(key)
+        if base is not None and self._degraded:
+            ratio = self._degraded.get(key)
+            if ratio is not None:
+                return Link(base.src, base.dst, base.kind,
+                            base.bandwidth_gbps * ratio)
+        return base
 
     def has_link(self, src: int, dst: int) -> bool:
         """True iff the nominal directional link ``src -> dst`` exists."""

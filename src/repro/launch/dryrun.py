@@ -169,7 +169,15 @@ def _comm_topologies():
     ]
 
 
-def run_comm_dryrun(out_path: str) -> list[dict]:
+def _route_strs(plan) -> list[str]:
+    """``src->via->dst`` strings, one per plan path, in share order."""
+    return ["->".join(str(n) for n in (pa.route.hops[0].src,
+                                       *(h.dst for h in pa.route.hops)))
+            for pa in plan.paths]
+
+
+def run_comm_dryrun(out_path: str,
+                    fail_link: tuple[int, int] | None = None) -> list[dict]:
     """Plan-only sweep: ``session.describe`` over topology × size × paths,
     plus a schedule sweep over the shipped chunk-interleaving passes.
 
@@ -177,9 +185,14 @@ def run_comm_dryrun(out_path: str) -> list[dict]:
     critical-path depth, canonical digest, and the analytic model's
     costs; every ``comm_schedule`` row is one (topology, size, scheduler)
     cell with the scheduled graph's modeled time and its delta vs the
-    ``round_robin`` baseline (DESIGN.md §2.2). Appended to ``out_path``
-    (replacing stale comm rows) next to the model-cell rows so one JSON
-    feeds ``repro.launch.report``.
+    ``round_robin`` baseline (DESIGN.md §2.2). With ``fail_link`` every
+    topology that carries that directional link additionally emits a
+    ``comm_fault`` row: the steady-state plan before the fault and the
+    surviving-routes re-plan after ``fail_link`` (routes, modeled
+    bandwidth, DESIGN §4.6 ladder level), the restore leaving the
+    topology untouched. Appended to ``out_path`` (replacing stale comm
+    rows) next to the model-cell rows so one JSON feeds
+    ``repro.launch.report``.
     """
     from repro.comm import SCHEDULE_NAMES, CommConfig, CommSession
 
@@ -225,13 +238,50 @@ def run_comm_dryrun(out_path: str) -> list[dict]:
                       f"t={s['scheduled_time_s'] * 1e6:.1f}us "
                       f"d={s['delta_vs_round_robin_s'] * 1e9:.0f}ns",
                       flush=True)
+        if fail_link is not None:
+            fsrc, fdst = fail_link
+            try:
+                sess.topology.link(fsrc, fdst)
+            except KeyError:
+                print(f"FAULT {topo_name}: no link {fsrc}->{fdst}, skipped",
+                      flush=True)
+                continue
+
+            def _cell(level_hint=None):
+                d = sess.describe(src, dst, 8 * MiB, max_paths=3)
+                plan = sess.plan(src, dst, 8 * MiB, max_paths=3)
+                level = (level_hint if level_hint is not None
+                         else (1 if d["num_paths"] > 1 else 2))
+                return {"num_paths": d["num_paths"],
+                        "routes": _route_strs(plan),
+                        "effective_gbps": d["model"]["effective_gbps"],
+                        "scheduled_time_s":
+                            d["schedule"]["scheduled_time_s"],
+                        "level": level}
+
+            before = _cell(level_hint=0)
+            sess.topology.fail_link(fsrc, fdst)
+            after = _cell()
+            sess.topology.restore_link(fsrc, fdst)
+            rows.append({"kind": "comm_fault", "status": "ok",
+                         "topology": topo_name, "nbytes": 8 * MiB,
+                         "src": src, "dst": dst,
+                         "failed_link": [fsrc, fdst],
+                         "before": before, "after": after})
+            print(f"FAULT {topo_name} link {fsrc}->{fdst} down: "
+                  f"paths {before['num_paths']}->{after['num_paths']} "
+                  f"bw {before['effective_gbps']:.1f}->"
+                  f"{after['effective_gbps']:.1f}GB/s "
+                  f"ladder {before['level']}->{after['level']}",
+                  flush=True)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     results = []
     if os.path.exists(out_path):
         with open(out_path) as f:
             results = json.load(f)
     results = [r for r in results
-               if r.get("kind") not in ("comm_graph", "comm_schedule")]
+               if r.get("kind") not in ("comm_graph", "comm_schedule",
+                                        "comm_fault")]
     results.extend(rows)
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1)
@@ -250,11 +300,25 @@ def main() -> None:
     parser.add_argument("--comm", action="store_true",
                         help="transfer-graph dry-run (plan-only, no jax "
                              "device init)")
+    parser.add_argument("--fail-link", metavar="SRC:DST", default=None,
+                        help="with --comm: also emit before/after re-plan "
+                             "rows with the directional link SRC:DST "
+                             "failed (DESIGN §4.6 degraded mode)")
     args = parser.parse_args()
 
     if args.comm:
-        run_comm_dryrun(args.out)
+        fail = None
+        if args.fail_link:
+            try:
+                a, b = args.fail_link.split(":")
+                fail = (int(a), int(b))
+            except ValueError:
+                parser.error("--fail-link expects SRC:DST device ints, "
+                             f"got {args.fail_link!r}")
+        run_comm_dryrun(args.out, fail_link=fail)
         return
+    if args.fail_link:
+        parser.error("--fail-link only applies to the --comm dry-run")
 
     import jax
 

@@ -2,9 +2,10 @@
 
 Renders every row kind the dry-run driver emits: model compilation cells,
 ``--comm`` transfer-graph rows (copy-node/edge counts, critical-path
-depth, modeled bandwidth — see ``session.describe``), and the
-``--comm`` schedule-sweep rows (modeled time per chunk-interleaving
-scheduler, DESIGN.md §2.2).
+depth, modeled bandwidth — see ``session.describe``), the ``--comm``
+schedule-sweep rows (modeled time per chunk-interleaving scheduler,
+DESIGN.md §2.2), and the ``--comm --fail-link`` rows (before/after
+re-plan routes and ladder level under a failed link, DESIGN.md §4.6).
 
 Usage: PYTHONPATH=src python -m repro.launch.report \
            experiments/dryrun_results.json > experiments/roofline.md
@@ -82,19 +83,46 @@ def fmt_schedule_table(rows: list[dict]) -> str:
     return "\n".join(out) + "\n"
 
 
+def fmt_fault_table(rows: list[dict]) -> str:
+    """§Link-fault re-plans — one before/after pair per ``--fail-link``
+    dry-run cell (DESIGN.md §4.6): the steady-state routes, the
+    surviving-routes re-plan once the link is down, and the ladder level
+    each side runs at."""
+    out = [
+        "### Link-fault re-plans (`--comm --fail-link` dry-run)\n",
+        "| topology | failed link | transfer | side | paths | routes | "
+        "modeled GB/s | modeled µs | ladder |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: r["topology"]):
+        link = "->".join(str(n) for n in r["failed_link"])
+        xfer = f"{r['src']}->{r['dst']} {r['nbytes'] >> 20}MiB"
+        for side in ("before", "after"):
+            c = r[side]
+            out.append(
+                f"| {r['topology']} | {link} | {xfer} | {side} "
+                f"| {c['num_paths']} | {', '.join(c['routes'])} "
+                f"| {c['effective_gbps']:.1f} "
+                f"| {c['scheduled_time_s'] * 1e6:.1f} | {c['level']} |")
+    return "\n".join(out) + "\n"
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else \
         "experiments/dryrun_results.json"
     rows = json.load(open(path))
     comm = [r for r in rows if r.get("kind") == "comm_graph"]
     sched = [r for r in rows if r.get("kind") == "comm_schedule"]
+    faults = [r for r in rows if r.get("kind") == "comm_fault"]
     rows = [r for r in rows
-            if r.get("kind") not in ("comm_graph", "comm_schedule")]
+            if r.get("kind") not in ("comm_graph", "comm_schedule",
+                                     "comm_fault")]
     ok = [r for r in rows if r["status"] == "ok"]
     sk = [r for r in rows if r["status"] == "skipped"]
     print(f"Cells: {len(ok)} compiled, {len(sk)} skipped, "
           f"{len(rows) - len(ok) - len(sk)} errors; "
-          f"{len(comm)} transfer graphs; {len(sched)} schedule cells.\n")
+          f"{len(comm)} transfer graphs; {len(sched)} schedule cells; "
+          f"{len(faults)} fault cells.\n")
     for mesh in ("single_pod_16x16", "multi_pod_2x16x16"):
         sub = [r for r in rows if r["mesh"] == mesh]
         if sub:
@@ -103,6 +131,8 @@ def main() -> None:
         print(fmt_comm_table(comm))
     if sched:
         print(fmt_schedule_table(sched))
+    if faults:
+        print(fmt_fault_table(faults))
 
 
 if __name__ == "__main__":

@@ -111,11 +111,29 @@ class ResilientTrainLoop:
     """
 
     def __init__(self, ckpt: CheckpointManager,
-                 cfg: ResilientLoopConfig | None = None):
+                 cfg: ResilientLoopConfig | None = None,
+                 comm=None):
         self.ckpt = ckpt
         self.cfg = cfg or ResilientLoopConfig()
         self.straggler = StragglerDetector()
         self.events: list[dict] = []
+        #: Optional CommSession: when attached, the loop drains its
+        #: health event log (link faults, retries, quarantines,
+        #: re-admissions — DESIGN §4.6) into ``self.events`` each step,
+        #: so one timeline interleaves training failures with comm
+        #: degradation.
+        self.comm = comm
+
+    def _drain_comm_events(self, step: int) -> None:
+        """Fold the comm session's pending health events into the loop's
+        event stream, stamped with the training step. Draining clears
+        the session's log (no double-reporting) and preserves its
+        counters — the ``stats()['health']`` window contract."""
+        if self.comm is None:
+            return
+        for ev in self.comm.drain_health_events():
+            self.events.append({"kind": "comm_health", "step": step,
+                                "event": ev})
 
     def run(self, build_fn, total_steps: int,
             fail_at: dict[int, int] | None = None):
@@ -136,6 +154,15 @@ class ResilientTrainLoop:
                 new_n = fail_at.pop(step)
                 restarts += 1
                 if restarts > self.cfg.max_restarts:
+                    # Terminal path must not lose state: flush pending
+                    # checkpoint writes and record the exhaustion BEFORE
+                    # raising, so post-mortem tooling sees a complete
+                    # event log and a consistent checkpoint directory.
+                    self.events.append({"kind": "exhausted", "step": step,
+                                        "restarts": restarts,
+                                        "budget": self.cfg.max_restarts})
+                    self._drain_comm_events(step)
+                    self.ckpt.wait()
                     raise RuntimeError("restart budget exhausted")
                 self.events.append({"kind": "failure", "step": step,
                                     "devices": new_n})
@@ -152,6 +179,7 @@ class ResilientTrainLoop:
             if self.straggler.observe(step, dt):
                 self.events.append({"kind": "straggler", "step": step,
                                     "duration_s": dt})
+            self._drain_comm_events(step)
             losses.append(loss)
             step += 1
             if step % self.cfg.checkpoint_every == 0 or step == total_steps:

@@ -133,9 +133,23 @@ class ServeEngine:
                                    kv_chunks=kv_chunks)
         self.temperature = temperature
         self.comm = comm
+        #: Comm-health events (DESIGN §4.6) drained from the session
+        #: after each migration / generation — link faults, retries,
+        #: quarantines, re-admissions that happened under serving
+        #: traffic. Decode keeps serving through a mid-traffic link
+        #: failure (the session re-plans on surviving routes); this log
+        #: is how the serving layer surfaces that it happened.
+        self.health_events: list[dict] = []
         self._decode = jax.jit(make_serve_step(cfg, self.spec))
         self._prefill = jax.jit(
             lambda p, b: tfm.prefill_forward(p, cfg, b, self.spec))
+
+    def _drain_health(self) -> None:
+        """Fold the comm session's pending health events into
+        :attr:`health_events`. Draining clears the session-side log but
+        preserves its windowed counters (``stats()['health']``)."""
+        if self.comm is not None:
+            self.health_events.extend(self.comm.drain_health_events())
 
     def prefill(self, tokens: jax.Array):
         """Run the prefill forward pass: ``(B, S) int32`` prompt tokens →
@@ -156,7 +170,9 @@ class ServeEngine:
         if self.comm is None:
             raise ValueError("ServeEngine was built without a CommSession; "
                              "pass comm= to enable KV migration")
-        return self.comm.send_pytree(cache, src, dst)
+        out = self.comm.send_pytree(cache, src, dst)
+        self._drain_health()
+        return out
 
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.temperature <= 0.0:
@@ -189,4 +205,5 @@ class ServeEngine:
             logits, cache = self._decode(self.params, cache,
                                          next_tok[:, None], cur)
             next_tok = self._sample(logits, sub)
+        self._drain_health()
         return reqs

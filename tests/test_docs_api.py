@@ -28,13 +28,15 @@ import repro.comm.calibration as calibration_mod
 import repro.comm.capture as capture_mod
 import repro.comm.collectives as collectives_mod
 import repro.comm.graph as graph_mod
+import repro.comm.health as health_mod
 import repro.comm.passes as passes_mod
 import repro.comm.planner as planner_mod
 import repro.comm.telemetry as telemetry_mod
 import repro.core.topology as topology_mod
 
 GATED = [graph_mod, passes_mod, capture_mod, cache_mod, telemetry_mod,
-         calibration_mod, topology_mod, planner_mod, collectives_mod]
+         calibration_mod, topology_mod, planner_mod, collectives_mod,
+         health_mod]
 
 DOCS = pathlib.Path(__file__).resolve().parents[1] / "docs" / "api.md"
 

@@ -366,11 +366,17 @@ def test_engine_stats_shape(session):
     session.send(jnp.arange(64, dtype=jnp.float32), 0, 1)
     s = session.engine.stats()
     assert set(s) == {"dispatches", "cache", "fastpath", "graph",
-                      "schedules", "schedule_scores", "telemetry"}
+                      "schedules", "schedule_scores", "telemetry",
+                      "health"}
     assert s["telemetry"]["enabled"] is False  # off by default (§4.4c)
     assert {"enabled", "validate", "staging_ns", "hits", "misses",
             "invalidations", "evictions", "size",
             "capacity"} <= set(s["fastpath"])
+    # §4.6 health ledger schema — pinned so dashboards can rely on it.
+    assert set(s["health"]) == {"enabled", "retries", "replans",
+                                "faults_seen", "host_relays",
+                                "ladder_level", "quarantined_links"}
+    assert s["health"]["retries"] == 0 and s["health"]["ladder_level"] == 0
 
 
 def test_session_stats_fastpath_without_engine(topo):

@@ -388,3 +388,77 @@ def test_rwkv6_property(s, chunk, decay_lo):
     ref = r_ref.rwkv6_scan_ref(r, k, v, w, u)
     scale = np.max(np.abs(np.asarray(ref))) + 1e-9
     assert np.max(np.abs(np.asarray(got) - np.asarray(ref))) / scale < 3e-4
+
+
+# ----------------- §4.6 chaos: single-link-failure re-planning --------------
+
+_CHAOS_TOPOLOGIES = ("beluga4", "mesh8", "two_island")
+
+
+def _chaos_topology(name):
+    """Fresh fault-model fixtures (mutating tests must not share)."""
+    if name == "beluga4":
+        return Topology.full_mesh(4)
+    if name == "mesh8":
+        return Topology.full_mesh(8, with_host=False, name="mesh8")
+    return Topology.hierarchical(2, 4, name="two_island")
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    fixture=st.sampled_from(_CHAOS_TOPOLOGIES),
+    mode=st.sampled_from(["fail", "quarantine", "degrade"]),
+    nbytes=st.integers(1024, 32 * MiB),
+    max_paths=st.integers(1, 4),
+    data=st.data(),
+)
+def test_single_link_fault_replan_property(fixture, mode, nbytes,
+                                           max_paths, data):
+    """SATELLITE chaos property (§4.6 degradation invariants): under any
+    single device-link failure / quarantine / droop, on every shared
+    topology fixture shape, every plan the planner still produces
+
+    * satisfies the §4.5 integrity invariants (disjoint cover, link
+      exclusivity, connectivity),
+    * routes over ZERO failed or quarantined links, and
+    * preserves the §3.1 one-inter-hop invariant on the hierarchical
+      fixture (exactly one inter-island hop per cross-island route,
+      none intra) — degradation must not bend island routing.
+    """
+    from repro.core.topology import HOST
+
+    topo = _chaos_topology(fixture)
+    planner = PathPlanner(topo, multipath_threshold=256)
+    dev_links = sorted(k for k in topo.links if HOST not in k)
+    bad = data.draw(st.sampled_from(dev_links), label="faulted_link")
+    if mode == "fail":
+        topo.fail_link(*bad)
+        excluded = {bad}
+    elif mode == "quarantine":
+        planner.quarantine(bad)
+        excluded = {bad}
+    else:
+        topo.degrade_link(*bad, ratio=0.05)
+        excluded = set()               # degraded links stay routable
+    n = topo.num_devices
+    src = data.draw(st.integers(0, n - 1), label="src")
+    dst = data.draw(st.integers(0, n - 1).filter(lambda d: d != src),
+                    label="dst")
+    inter = {(a, b) for (a, b) in topo.links
+             if topo.is_inter_island(a, b)}
+    try:
+        plan = planner.plan(src, dst, nbytes, max_paths=max_paths)
+    except ValueError:
+        # The fault genuinely disconnected src from dst (e.g. the only
+        # egress pair of the hierarchical fixture) — there is no plan to
+        # validate; the engine's ladder handles this rung.
+        hypothesis.reject()
+    validate_plan(plan)
+    cross = topo.num_islands > 1 and topo.node_of(src) != topo.node_of(dst)
+    want_inter = 1 if cross else 0
+    for pa in plan.paths:
+        hops = pa.route.directional_links()
+        assert not (set(hops) & excluded), (mode, bad, hops)
+        if topo.num_islands > 1:
+            assert sum(h in inter for h in hops) == want_inter, (
+                src, dst, hops)
